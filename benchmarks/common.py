@@ -1,0 +1,294 @@
+"""Shared benchmark infrastructure.
+
+Trains (once, then checkpoints under experiments/models/) a tiny
+target/draft pair on the Markov corpus, plus EAGLE-style and Medusa-style
+heads distilled against the target.  The corpus temperature knob puts the
+trained target into genuine low-margin regimes, which is the phenomenon the
+paper exploits — so τ/θ trends measured here are real model behaviour, not
+synthetic logits.
+
+Quality metrics (CPU-scale stand-ins for the paper's task accuracies):
+  * nll      — target-model NLL of the generated continuation (lower =
+               better "generation quality" under the target itself)
+  * greedy_match — at T=0, exact agreement with vanilla AR output
+  * corpus_nll   — NLL under the TRUE corpus process (measures whether lossy
+               acceptance hurts ground-truth fidelity)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig
+from repro.core import (EngineConfig, EagleDrafter, IndependentDrafter,
+                        MedusaDrafter, PLDrafter, init_eagle_params,
+                        init_medusa_params, make_ar_generate_fn,
+                        make_generate_fn, metrics)
+from repro.data import MarkovCorpus, make_lm_batches
+from repro.models import build_model
+from repro.models.model import _apply_block
+from repro.optim import adamw, apply_updates
+from repro.train import Trainer, TrainerConfig
+
+VOCAB = 64
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "models")
+
+TARGET_CFG = ModelConfig(name="bench-target", family="dense", n_layers=4,
+                         d_model=256, n_heads=4, n_kv_heads=4, d_ff=512,
+                         vocab_size=VOCAB, dtype="float32")
+DRAFT_CFG = ModelConfig(name="bench-draft", family="dense", n_layers=1,
+                        d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=VOCAB, dtype="float32")
+
+
+def corpus(temperature: float = 1.2) -> MarkovCorpus:
+    return MarkovCorpus(vocab_size=VOCAB, temperature=temperature,
+                        branching=8, seed=0)
+
+
+def _train_lm(cfg, steps, name, *, lr=3e-3, batch=16, seq=64):
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(hash(name) % (1 << 31)))
+    step_done = latest_step(CKPT_DIR, name=name)
+    if step_done == steps:
+        loaded = load_checkpoint(CKPT_DIR, steps, params, name=name)
+        return model, jax.tree.map(jnp.asarray, loaded)
+    trainer = Trainer(model, TrainerConfig(lr=lr, warmup_steps=20,
+                                           total_steps=steps, log_every=100))
+    params, _ = trainer.fit(
+        params, make_lm_batches(corpus(), batch=batch, seq_len=seq,
+                                n_batches=steps),
+        log=lambda s: print(f"  [{name}] {s}"))
+    save_checkpoint(CKPT_DIR, steps, params, name=name)
+    return model, params
+
+
+def get_pair(target_steps: int = 600, draft_steps: int = 400):
+    target, t_params = _train_lm(TARGET_CFG, target_steps, "target")
+    draft, d_params = _train_lm(DRAFT_CFG, draft_steps, "draft")
+    return target, t_params, draft, d_params
+
+
+# ---------------------------------------------------------------------------
+# EAGLE / Medusa head distillation
+# ---------------------------------------------------------------------------
+
+_FEAT_FNS = {}
+
+
+def _target_features(target, t_params, tokens):
+    """Jitted (per model) feature extraction — eager dispatch of a full
+    decode graph per training batch exhausts the CPU JIT engine."""
+    fn = _FEAT_FNS.get(id(target))
+    if fn is None:
+        @jax.jit
+        def fn(t_params, tokens):
+            b, s = tokens.shape
+            cache = target.init_cache(t_params, b, s + 8)
+            pos = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+            _, _, feats = target.decode(t_params, tokens, pos, cache,
+                                        with_features=True)
+            return feats
+        _FEAT_FNS[id(target)] = fn
+    return fn(t_params, tokens)
+
+
+def train_eagle_head(target, t_params, steps: int = 300):
+    name = "eagle_head"
+    cfg = target.cfg
+    e_params = init_eagle_params(cfg, jax.random.PRNGKey(11))
+    if latest_step(CKPT_DIR, name=name) == steps:
+        return jax.tree.map(jnp.asarray, load_checkpoint(
+            CKPT_DIR, steps, e_params, name=name))
+
+    tx = adamw(2e-3, weight_decay=0.01)
+    opt = tx.init(e_params)
+    head_w = t_params["lm_head"]
+
+    def loss_fn(ep, tokens, feats):
+        b, s = tokens.shape
+        emb = t_params["embedding"][tokens]
+        feats_prev = jnp.concatenate(
+            [jnp.zeros_like(feats[:, :1]), feats[:, :-1]], axis=1)
+        x = jnp.concatenate([emb, feats_prev], -1) @ ep["fc"]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        y, _, _ = _apply_block(cfg, ep["block"], x, pos)
+        logits = y @ head_w
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, tokens[:, 1:, None], -1)
+        return nll.mean()
+
+    @jax.jit
+    def step(ep, opt, tokens, feats):
+        l, g = jax.value_and_grad(loss_fn)(ep, tokens, feats)
+        upd, opt = tx.update(g, opt, ep)
+        return apply_updates(ep, upd), opt, l
+
+    for i, b in enumerate(make_lm_batches(corpus(), batch=16, seq_len=64,
+                                          n_batches=steps)):
+        tokens = jnp.asarray(b["tokens"][:, :-1])
+        feats = _target_features(target, t_params, tokens)
+        e_params, opt, l = step(e_params, opt, tokens, feats)
+        if i % 100 == 0:
+            print(f"  [eagle] step {i} loss {float(l):.3f}")
+    save_checkpoint(CKPT_DIR, steps, e_params, name=name)
+    return e_params
+
+
+def train_medusa_heads(target, t_params, n_heads: int = 4, steps: int = 300):
+    name = "medusa_heads"
+    m_params = init_medusa_params(target.cfg, jax.random.PRNGKey(12), n_heads)
+    if latest_step(CKPT_DIR, name=name) == steps:
+        return jax.tree.map(jnp.asarray, load_checkpoint(
+            CKPT_DIR, steps, m_params, name=name))
+    tx = adamw(2e-3, weight_decay=0.01)
+    opt = tx.init(m_params)
+    head_w = t_params["lm_head"]
+
+    def loss_fn(mp, tokens, feats):
+        total = 0.0
+        for h in range(n_heads):
+            off = h + 2   # feat at t predicts token t+2+h (t+1 is pending)
+            if tokens.shape[1] <= off:
+                continue
+            f = feats[:, :-off]
+            fh = f + jax.nn.silu(f @ mp["heads_w1"][h])
+            logits = fh @ head_w
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            lbl = tokens[:, off:, None]
+            total += -jnp.take_along_axis(logp, lbl, -1).mean()
+        return total / n_heads
+
+    @jax.jit
+    def step(mp, opt, tokens, feats):
+        l, g = jax.value_and_grad(loss_fn)(mp, tokens, feats)
+        upd, opt = tx.update(g, opt, mp)
+        return apply_updates(mp, upd), opt, l
+
+    for i, b in enumerate(make_lm_batches(corpus(), batch=16, seq_len=64,
+                                          n_batches=steps)):
+        tokens = jnp.asarray(b["tokens"][:, :-1])
+        feats = _target_features(target, t_params, tokens)
+        m_params, opt, l = step(m_params, opt, tokens, feats)
+        if i % 100 == 0:
+            print(f"  [medusa] step {i} loss {float(l):.3f}")
+    save_checkpoint(CKPT_DIR, steps, m_params, name=name)
+    return m_params
+
+
+# ---------------------------------------------------------------------------
+# Evaluation harness
+# ---------------------------------------------------------------------------
+
+def prompts(n: int = 8, s: int = 32, seed: int = 123):
+    c = corpus()
+    toks = c.sample_batch(n, s, seed=seed)
+    return jnp.asarray(toks), jnp.full((n,), s, jnp.int32)
+
+
+def sequence_nll(target, t_params, tokens, lengths, start):
+    """Mean target-NLL of tokens[start:length] per sequence."""
+    logits, _ = target.forward(t_params, {"tokens": tokens[:, :-1]})
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, tokens[:, 1:, None], -1)[..., 0]
+    pos = jnp.arange(nll.shape[1])[None]
+    mask = (pos >= start - 1) & (pos < (lengths - 1)[:, None])
+    return float((nll * mask).sum() / jnp.maximum(mask.sum(), 1))
+
+
+def corpus_nll(c: MarkovCorpus, tokens: np.ndarray, lengths, start) -> float:
+    total, n = 0.0, 0
+    for b in range(tokens.shape[0]):
+        seq = tokens[b, :int(lengths[b])]
+        for t in range(max(start, c.order), len(seq)):
+            cid = c._ctx_id(seq[t - c.order:t])
+            succ = c._succ[cid]
+            p = c._probs[cid][succ == seq[t]].sum()
+            total += -np.log(max(p, 1e-9))
+            n += 1
+    return total / max(n, 1)
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    tau: float
+    accept_rate: float
+    relax_frac: float
+    wall_s: float
+    tokens_generated: int
+    nll: float
+    corpus_nll_: float
+    speedup_measured: float = 0.0
+    speedup_v5e: float = 0.0
+    greedy_match: float = float("nan")
+
+    def row(self):
+        return (f"{self.name:24s} tau={self.tau:5.2f} "
+                f"acc={self.accept_rate:.2f} relax={self.relax_frac:.2f} "
+                f"speedup(meas)={self.speedup_measured:4.2f}x "
+                f"speedup(v5e)={self.speedup_v5e:4.2f}x "
+                f"nll={self.nll:.3f} corpus_nll={self.corpus_nll_:.3f}")
+
+
+def time_generate(fn, *args, repeats: int = 1, **kw):
+    out = fn(*args, **kw)              # compile + warm
+    jax.block_until_ready(out["tokens"])
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out["tokens"])
+    return out, (time.time() - t0) / repeats
+
+
+def eval_engine(name, target, t_params, drafter, d_params, ecfg: EngineConfig,
+                *, max_new=96, n_prompts=6, theta=None, ar_time=None,
+                seed=0) -> RunResult:
+    p, plen = prompts(n_prompts)
+    gen = make_generate_fn(target, drafter, ecfg)
+    out, dt = time_generate(gen, t_params, d_params, p, plen,
+                            jax.random.PRNGKey(seed), max_new=max_new,
+                            theta=theta)
+    st = out["stats"]
+    tau = metrics.tau(st)
+    k = ecfg.k
+    # v5e-analytic speedup: per-token draft/target cost from param bytes
+    c = metrics.flops_cost_ratio(
+        sum(x.size for x in jax.tree.leaves(d_params)) if d_params is not None
+        and not isinstance(drafter, (PLDrafter,)) else 0,
+        sum(x.size for x in jax.tree.leaves(t_params)))
+    sp_v5e = metrics.analytic_speedup(tau, k, cost_draft_ratio=c,
+                                      verify_overhead=1.05)
+    toks = int(np.asarray(st["commits"]).sum())
+    nll = sequence_nll(target, t_params, out["tokens"], out["lengths"],
+                       int(plen[0]))
+    cn = corpus_nll(corpus(), np.asarray(out["tokens"]), out["lengths"],
+                    int(plen[0]))
+    return RunResult(
+        name=name, tau=tau, accept_rate=metrics.acceptance_rate(st, k),
+        relax_frac=metrics.relax_fraction(st), wall_s=dt,
+        tokens_generated=toks, nll=nll, corpus_nll_=cn,
+        speedup_measured=(ar_time / dt if ar_time else 0.0),
+        speedup_v5e=sp_v5e)
+
+
+def eval_ar(target, t_params, *, max_new=96, n_prompts=6, temperature=1.0,
+            seed=0):
+    p, plen = prompts(n_prompts)
+    gen = make_ar_generate_fn(target, temperature=temperature)
+    out, dt = time_generate(gen, t_params, p, plen, jax.random.PRNGKey(seed),
+                            max_new=max_new)
+    nll = sequence_nll(target, t_params, out["tokens"], out["lengths"],
+                       int(plen[0]))
+    cn = corpus_nll(corpus(), np.asarray(out["tokens"]), out["lengths"],
+                    int(plen[0]))
+    return out, dt, nll, cn

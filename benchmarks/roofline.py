@@ -1,0 +1,107 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the §Roofline
+table (all three terms, dominant bottleneck, MODEL_FLOPS ratio) plus the
+§Perf variant comparison."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load(dry_dir: str = DRYRUN_DIR) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(f) as fh:
+            try:
+                rows.append(json.load(fh))
+            except Exception:
+                pass
+    return rows
+
+
+def _is_baseline(r: Dict) -> bool:
+    return not r.get("variant") and r.get("verify_tokens", 1) == 1
+
+
+def table(rows: List[Dict], *, mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "bottleneck | MODEL/HLO flops | arg+tmp GB/chip |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    sel = [r for r in rows if r.get("mesh") == mesh and _is_baseline(r)]
+    sel.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    for r in sel:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"FAILED | - | - |")
+            continue
+        rf = r["roofline"]
+        ratio = r.get("flops_ratio")
+        mem = r.get("memory", {})
+        per_chip_gb = ((mem.get("argument_bytes") or 0)
+                       + (mem.get("temp_bytes") or 0)) / r["chips"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"{r['bottleneck'].replace('_s', '')} | "
+            f"{ratio:.2f} | {per_chip_gb:.1f} |")
+    return "\n".join(lines)
+
+
+def perf_table(rows: List[Dict]) -> str:
+    lines = ["| arch | shape | variant | t | compute_s | memory_s | "
+             "collective_s | bottleneck |", "|" + "---|" * 8]
+    sel = [r for r in rows if not _is_baseline(r) or r.get("variant")]
+    sel += [r for r in rows if _is_baseline(r) and any(
+        (v.get("arch"), v.get("shape")) == (r["arch"], r["shape"])
+        for v in rows if v.get("variant"))]
+    seen = set()
+    for r in sorted(sel, key=lambda r: (r["arch"], r["shape"],
+                                        str(r.get("variant")))):
+        key = (r["arch"], r["shape"], r.get("variant"),
+               r.get("verify_tokens", 1), r.get("mesh"))
+        if key in seen or r.get("mesh") != "16x16":
+            continue
+        seen.add(key)
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | "
+                         f"{r.get('variant') or 'baseline'} | "
+                         f"{r.get('verify_tokens', 1)} | - | - | - | FAILED |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r.get('variant') or 'baseline'} | {r.get('verify_tokens', 1)} "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} | "
+            f"{rf['collective_s']:.3e} | {r['bottleneck'].replace('_s', '')} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    base = [r for r in rows if _is_baseline(r)]
+    ok = [r for r in base if r.get("ok")]
+    fail = [r for r in base if not r.get("ok")]
+    print(f"# baseline dry-runs: {len(ok)} ok / {len(fail)} failed "
+          f"(40 pairs x 2 meshes expected)")
+    print("\n## Single-pod (16x16) roofline\n")
+    print(table(rows, mesh="16x16"))
+    print("\n## Multi-pod (2x16x16) roofline\n")
+    print(table(rows, mesh="2x16x16"))
+    print("\n## §Perf variants (16x16)\n")
+    print(perf_table(rows))
+    if fail:
+        print("\n## Failures\n")
+        for r in fail:
+            print(f"- {r['arch']} × {r['shape']} × {r['mesh']}: "
+                  f"{r.get('error', '?')[:160]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+``python -m benchmarks.run``           — fast subset (τ + θ + margins)
+``python -m benchmarks.run --full``    — every table (slower: trains heads,
+                                          sweeps T×K)
+``python -m benchmarks.run --roofline``— only the dry-run roofline report
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = measured CPU
+wall-time per generate call on the tiny bench pair; derived = the headline
+derived metric for that table).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+CSV_ROWS = []
+
+
+def _csv(name: str, us: float, derived: str):
+    CSV_ROWS.append(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    args = ap.parse_args()
+
+    if args.roofline:
+        from benchmarks import roofline
+        roofline.main()
+        return
+
+    from benchmarks import table1_methods, table4_theta, fig1_margins
+
+    print("== Table 1: methods × {strict, MARS} ==")
+    rows = table1_methods.run()
+    for r in rows:
+        _csv(f"table1/{r.name}", r.wall_s * 1e6,
+             f"tau={r.tau:.2f};speedup_v5e={r.speedup_v5e:.2f}")
+
+    print("\n== Table 4 / Fig 3: theta sweep ==")
+    sweep, strict = table4_theta.run()
+    for th, r in sweep:
+        _csv(f"table4/theta_{th:.2f}", r.wall_s * 1e6,
+             f"tau={r.tau:.2f};nll={r.nll:.3f}")
+    _csv("table4/strict", strict.wall_s * 1e6, f"tau={strict.tau:.2f}")
+
+    print("\n== Fig 1/4: margin statistics ==")
+    t0 = time.time()
+    stats = fig1_margins.run()
+    _csv("fig1/margins", (time.time() - t0) * 1e6,
+         f"pos_frac={stats['top1_logit_positive_frac']:.3f};"
+         f"zone={stats['relax_zone_frac(r>0.9)']:.3f}")
+
+    if args.full:
+        from benchmarks import table2_temp_k, table3_fidelity, table5_spd
+        print("\n== Table 2: temperature × K ==")
+        for (tk, r) in table2_temp_k.run():
+            _csv(f"table2/T{tk[0]}_K{tk[1]}", r.wall_s * 1e6,
+                 f"tau={r.tau:.2f}")
+        print("\n== Table 5: SPD + MARS ==")
+        for r in table5_spd.run():
+            _csv(f"table5/{r.name}", r.wall_s * 1e6,
+                 f"tau={r.tau:.2f};nll={r.nll:.3f}")
+        print("\n== Table 3: segment fidelity (LCS-F1) ==")
+        import time as _t
+        t0 = _t.time()
+        floor, sc = table3_fidelity.run()
+        _csv("table3/fidelity", (_t.time() - t0) * 1e6,
+             f"floor={floor:.3f};strict={sc['strict']:.3f};mars={sc['mars']:.3f}")
+
+    print("\nname,us_per_call,derived")
+    for row in CSV_ROWS:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

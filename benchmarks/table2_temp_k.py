@@ -1,0 +1,31 @@
+"""Paper Table 2: temperature and draft-length (K) ablation for MARS.
+
+Expected trends: τ grows with K but speedup peaks at moderate K; efficiency
+stable across temperature.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import EngineConfig, IndependentDrafter
+
+
+def run(max_new=80, n_prompts=4):
+    target, t_params, draft, d_params = C.get_pair()
+    rows = []
+    for temp in (0.2, 0.6, 1.0):
+        _, ar_time, _, _ = C.eval_ar(target, t_params, max_new=max_new,
+                                     n_prompts=n_prompts, temperature=temp)
+        for k in (2, 4, 8):
+            drafter = IndependentDrafter(draft, k=k, temperature=temp)
+            ecfg = EngineConfig(k=k, rule="mars", mode="sample",
+                                temperature=temp, guard="margin")
+            r = C.eval_engine(f"T={temp} K={k}", target, t_params, drafter,
+                              d_params, ecfg, max_new=max_new,
+                              n_prompts=n_prompts, ar_time=ar_time)
+            print(r.row())
+            rows.append(((temp, k), r))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

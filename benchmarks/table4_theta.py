@@ -1,0 +1,48 @@
+"""Paper Table 4 / Figure 3: logit-ratio threshold θ sweep.
+
+Expected trends (paper §4.3): speedup decreases monotonically in θ; quality
+degrades for small θ and is preserved near θ=0.9 — the balanced default.
+
+Run in greedy mode: at T=1 with an exact-residual, well-calibrated chain
+drafter, Leviathan sampling already accepts near-ties probabilistically, so
+the relaxation margin is only visible under deterministic verification
+(see EXPERIMENTS.md §Paper-validation for the discussion).
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import EngineConfig, IndependentDrafter
+
+K = 4
+T = 0.0
+THETAS = [0.80, 0.84, 0.88, 0.90, 0.92, 0.96, 0.99]
+
+
+def run(max_new=96, n_prompts=6):
+    target, t_params, draft, d_params = C.get_pair()
+    _, ar_time, ar_nll, ar_cnll = C.eval_ar(target, t_params,
+                                            max_new=max_new,
+                                            n_prompts=n_prompts,
+                                            temperature=T)
+    print(f"AR: nll={ar_nll:.3f} corpus_nll={ar_cnll:.3f}")
+    drafter = IndependentDrafter(draft, k=K, temperature=T)
+    ecfg = EngineConfig(k=K, rule="mars", mode="greedy", temperature=T, guard="margin")
+    rows = []
+    for th in THETAS:
+        r = C.eval_engine(f"theta={th:.2f}", target, t_params, drafter,
+                          d_params, ecfg, max_new=max_new,
+                          n_prompts=n_prompts, theta=th, ar_time=ar_time)
+        print(r.row())
+        rows.append((th, r))
+    # strict reference
+    strict = C.eval_engine("strict", target, t_params, drafter, d_params,
+                           EngineConfig(k=K, rule="strict", mode="greedy",
+                                        temperature=T, guard="margin"),
+                           max_new=max_new, n_prompts=n_prompts,
+                           ar_time=ar_time)
+    print(strict.row())
+    return rows, strict
+
+
+if __name__ == "__main__":
+    run()

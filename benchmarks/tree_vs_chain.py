@@ -1,0 +1,60 @@
+"""Tree-draft vs chain-draft verification (beyond-paper measurement).
+
+The paper notes MARS composes with tree verification (§2.3); this benchmark
+measures what the tree adds on the trained bench pair: a caterpillar tree
+with `branch` candidates per depth lets a rejected chain step be *rescued*
+by an accepted sibling — under MARS, also by a relaxed low-margin sibling.
+
+    PYTHONPATH=src python -m benchmarks.tree_vs_chain
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import (EagleDrafter, EngineConfig, make_generate_fn,
+                        metrics)
+from repro.core.tree import TreeEngineConfig, make_tree_generate_fn
+
+K = 3
+
+
+def run(max_new=64, n_prompts=4):
+    target, t_params, _, _ = C.get_pair()
+    e_params = C.train_eagle_head(target, t_params)
+    drafter = EagleDrafter(target, k=K, temperature=0.0)
+    p, plen = C.prompts(n_prompts)
+
+    rows = []
+    # chain engine, strict and MARS
+    for rule in ("strict", "mars"):
+        gen = make_generate_fn(target, drafter,
+                               EngineConfig(k=K, rule=rule, mode="greedy",
+                                            temperature=0.0, guard="margin"))
+        out = gen(t_params, e_params, p, plen, jax.random.PRNGKey(0),
+                  max_new=max_new)
+        t = metrics.tau(out["stats"])
+        rows.append((f"chain/{rule}", t,
+                     metrics.relax_fraction(out["stats"])))
+
+    # tree engine, strict and MARS, branch sweep
+    for branch in (2, 3):
+        for rule in ("strict", "mars"):
+            gen = make_tree_generate_fn(
+                target, drafter,
+                TreeEngineConfig(k=K, branch=branch, rule=rule,
+                                 mode="greedy", temperature=0.0))
+            out = gen(t_params, e_params, p, plen, jax.random.PRNGKey(0),
+                      max_new=max_new)
+            t = metrics.tau(out["stats"])
+            rows.append((f"tree-b{branch}/{rule}", t,
+                         metrics.relax_fraction(out["stats"])))
+
+    for name, t, rf in rows:
+        print(f"  {name:16s} tau={t:5.2f}  relax_frac={rf:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

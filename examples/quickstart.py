@@ -1,0 +1,39 @@
+"""Quickstart: MARS verification in 60 lines.
+
+Trains a tiny target + draft LM on a synthetic corpus (CPU, ~2 min), then
+generates with strict verification vs. MARS and prints the τ / speedup
+difference — the paper's core effect, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from benchmarks import common as C
+from repro.core import EngineConfig, IndependentDrafter, metrics
+
+K = 4
+
+
+def main():
+    print("training tiny target (4L/256d) + draft (1L/64d) ...")
+    target, t_params, draft, d_params = C.get_pair()
+
+    _, ar_time, ar_nll, _ = C.eval_ar(target, t_params, max_new=96)
+    print(f"vanilla AR:      {ar_time:.2f}s  nll={ar_nll:.3f}")
+
+    drafter = IndependentDrafter(draft, k=K, temperature=1.0)
+    for rule in ("strict", "mars"):
+        ecfg = EngineConfig(k=K, rule=rule, mode="sample", temperature=1.0, guard="margin")
+        r = C.eval_engine(rule, target, t_params, drafter, d_params, ecfg,
+                          max_new=96, ar_time=ar_time)
+        extra = (f"  ({r.relax_frac:.0%} of accepts via relaxation)"
+                 if rule == "mars" else "")
+        print(f"{rule:6s} verify:   {r.wall_s:.2f}s  tau={r.tau:.2f}  "
+              f"speedup={r.speedup_measured:.2f}x  nll={r.nll:.3f}{extra}")
+
+    print("\nMARS accepts low-margin runner-up tokens -> higher tau at "
+          "matched quality (paper Alg. 1).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end serving driver: continuous-batching MARS server.
+
+Trains the tiny pair (cached), then serves a stream of batched requests
+through the slot scheduler with speculative decoding + MARS verification,
+printing per-request τ and latency — the paper's serving scenario at CPU
+scale.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import EngineConfig, IndependentDrafter
+from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
+
+
+def main():
+    target, t_params, draft, d_params = C.get_pair()
+
+    server = SpecServer(
+        target, IndependentDrafter(draft, k=4, temperature=1.0),
+        t_params, d_params,
+        EngineConfig(k=4, rule="mars", mode="sample", temperature=1.0, guard="margin"),
+        ServerConfig(slots=4, max_len=256, max_prompt_len=32))
+
+    cor = C.corpus()
+    n_req = 12
+    for i in range(n_req):
+        prompt = cor.sample_batch(1, 24, seed=100 + i)[0]
+        server.submit(Request(uid=i, prompt=prompt,
+                              params=SamplingParams(max_tokens=48)))
+
+    print(f"serving {n_req} requests on {server.cfg.slots} slots ...")
+    responses = server.run()
+    taus = []
+    for r in sorted(responses, key=lambda r: r.uid):
+        taus.append(r.tau)
+        print(f"  req {r.uid:2d}: {len(r.tokens):3d} tokens  "
+              f"tau={r.tau:4.2f}  latency={r.latency_s:5.2f}s")
+    print(f"\nmean tau = {np.mean(taus):.2f} "
+          f"(tokens committed per verify cycle; >1 == speculative win)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Checkpointing: flattened-pytree .npz store (orbax is not in this env).
+
+Path-keyed so checkpoints survive refactors that keep param names; works for
+params, optimizer state and engine stats alike.  On multi-host deployments
+each host saves its addressable shards (`process_index` suffix) — on this
+single-process environment that degenerates to one file, which is fine for
+the dry-run scale.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *,
+                    name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    proc = jax.process_index()
+    path = os.path.join(directory, f"{name}_{step:08d}_p{proc}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str, *, name: str = "ckpt") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    pat = re.compile(rf"{re.escape(name)}_(\d+)_p0\.npz")
+    for f in os.listdir(directory):
+        m = pat.match(f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, template: Any, *,
+                    name: str = "ckpt") -> Any:
+    """Restore into the structure of ``template`` (shapes validated)."""
+    proc = jax.process_index()
+    path = os.path.join(directory, f"{name}_{step:08d}_p{proc}.npz")
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in p)
+        arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

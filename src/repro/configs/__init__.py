@@ -1,0 +1,53 @@
+"""Architecture config registry.
+
+``get_config(arch)`` returns the full assigned config; ``get_smoke(arch)``
+returns the reduced same-family variant used in CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_shape
+
+_ARCH_MODULES: Dict[str, str] = {
+    "zamba2-2.7b": "zamba2_2_7b",
+    "dbrx-132b": "dbrx_132b",
+    "chatglm3-6b": "chatglm3_6b",
+    "deepseek-67b": "deepseek_67b",
+    "starcoder2-15b": "starcoder2_15b",
+    "granite-8b": "granite_8b",
+    "whisper-large-v3": "whisper_large_v3",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "chameleon-34b": "chameleon_34b",
+    "xlstm-1.3b": "xlstm_1_3b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {list_archs()}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "get_shape",
+    "get_config",
+    "get_smoke",
+    "list_archs",
+]

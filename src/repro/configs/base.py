@@ -1,0 +1,166 @@
+"""Base model configuration for all assigned architectures.
+
+A single dataclass covers the 6 architecture families (dense, moe, hybrid,
+ssm, audio, vlm).  Family-specific fields are ignored by families that do
+not use them.  Every assigned architecture file instantiates ``ModelConfig``
+with the exact published numbers and provides ``smoke_config()`` — a reduced
+variant of the same family used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # --- identity -------------------------------------------------------
+    name: str = "model"
+    family: str = "dense"  # dense | moe | hybrid | ssm | audio | vlm
+    source: str = ""       # citation for the config numbers
+
+    # --- core transformer ------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0          # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 259
+    max_seq_len: int = 1 << 20
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0   # chatglm applies rope to half the head dim
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    use_qk_norm: bool = False    # chameleon stabilises with qk-norm
+    mlp_variant: str = "swiglu"  # swiglu | gelu (whisper)
+    use_bias: bool = False
+    norm_variant: str = "rmsnorm"  # rmsnorm | layernorm
+    pos_embedding: str = "rope"    # rope | learned | none
+
+    # --- attention variants ----------------------------------------------
+    sliding_window: int = 0      # 0 = full attention; >0 = ring-buffer window
+    attn_logit_softcap: float = 0.0
+    # parallel attention+FFN residual (PaLM/GPT-J): halves the per-layer TP
+    # all-reduce count; §Perf serving variant, off for the faithful configs
+    parallel_residual: bool = False
+    # uniform-batch cache writes via dynamic_update_slice instead of the
+    # per-row scatter (valid when all rows share the same write index, e.g.
+    # the dry-run serve_step); avoids broadcast-gathers of the kv updates
+    cache_uniform_slots: bool = False
+
+    # --- MoE --------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0         # 0 -> d_ff
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    moe_every: int = 1           # apply MoE every n-th layer (1 = all)
+
+    # --- SSM / Mamba2 ------------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+
+    # --- hybrid (zamba2-style shared attention block) ----------------------
+    hybrid_attn_every: int = 0   # insert shared attn block every n ssm layers
+
+    # --- xLSTM --------------------------------------------------------------
+    slstm_every: int = 0         # one sLSTM per n blocks (rest mLSTM)
+
+    # --- encoder-decoder (whisper) ------------------------------------------
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 0     # stub frontend emits this many frames
+
+    # --- vlm (chameleon) ------------------------------------------------------
+    image_token_start: int = 0   # first vocab id reserved for VQ image tokens
+    n_image_tokens: int = 0
+
+    # --- numerics ---------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if self.n_experts and not self.expert_d_ff:
+            object.__setattr__(self, "expert_d_ff", self.d_ff)
+
+    # ------------------------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for roofline MODEL_FLOPS)."""
+        d, v = self.d_model, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        kvd = self.n_kv_heads * self.head_dim
+        qd = self.n_heads * self.head_dim
+        attn = d * qd + 2 * d * kvd + qd * d
+        if self.family in ("dense", "vlm"):
+            per = attn + 3 * d * self.d_ff
+            total += self.n_layers * per
+        elif self.family == "moe":
+            per = attn + self.n_experts * 3 * d * self.expert_d_ff + d * self.n_experts
+            total += self.n_layers * per
+        elif self.family == "hybrid":
+            din = self.d_inner
+            ssm_per = d * (2 * din + 2 * self.ssm_state + self.n_ssm_heads) + din * d
+            n_shared = 1
+            total += self.n_layers * ssm_per + n_shared * (attn + 3 * d * self.d_ff)
+        elif self.family == "ssm":
+            # mLSTM block: qkv + gates + out + ffn-ish up/down (d_ff==0 means
+            # the block carries its own expansion)
+            dk = d
+            per = 4 * d * dk + 2 * d * self.n_heads + dk * d + 4 * d * d
+            total += self.n_layers * per
+        elif self.family == "audio":
+            per = attn + 3 * d * self.d_ff
+            cross = d * qd + 2 * d * kvd + qd * d
+            total += self.n_encoder_layers * per + self.n_layers * (per + cross)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE uses top_k of n_experts)."""
+        if self.family != "moe" or not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        dense_share = self.param_count() - self.n_layers * self.n_experts * 3 * d * self.expert_d_ff
+        return dense_share + self.n_layers * self.top_k * 3 * d * self.expert_d_ff
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in SHAPES]}")

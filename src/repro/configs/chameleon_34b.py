@@ -1,0 +1,40 @@
+"""chameleon-34b — early-fusion VLM, VQ image tokens in the text vocab.
+[arXiv:2405.09818]
+
+The vision tokenizer (VQ-GAN) is stubbed: ``input_specs`` feeds mixed
+text+image token ids; image tokens occupy [image_token_start,
+image_token_start + n_image_tokens).  The backbone is a dense GQA decoder
+with qk-norm (chameleon's logit-drift fix).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    source="arXiv:2405.09818",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    use_qk_norm=True,
+    image_token_start=4,
+    n_image_tokens=8192,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="chameleon-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab_size=259,
+        use_qk_norm=True,
+        image_token_start=4,
+        n_image_tokens=64,
+    )

@@ -1,0 +1,35 @@
+"""dbrx-132b — 16-expert top-4 fine-grained MoE. [hf:databricks/dbrx-base]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    source="hf:databricks/dbrx-base",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    n_experts=16,
+    top_k=4,
+    expert_d_ff=10752,
+    capacity_factor=1.25,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab_size=259,
+        n_experts=4,
+        top_k=2,
+        expert_d_ff=256,
+        capacity_factor=1.25,
+    )

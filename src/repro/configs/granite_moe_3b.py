@@ -1,0 +1,42 @@
+"""granite-moe-3b-a800m — 40-expert top-8 fine-grained MoE.
+[hf:ibm-granite/granite-3.0-1b-a400m-base family]
+
+Note: 40 experts do not divide the 16-way model axis; experts are replicated
+and tokens stay data-parallel (see DESIGN.md §5 sharding exception).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    n_experts=40,
+    top_k=8,
+    expert_d_ff=512,
+    capacity_factor=1.25,
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=64,
+        vocab_size=259,
+        n_experts=4,
+        top_k=2,
+        expert_d_ff=64,
+        capacity_factor=1.25,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,33 @@
+"""starcoder2-15b — GQA kv=4, RoPE. [arXiv:2402.19173]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    source="arXiv:2402.19173",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    norm_variant="layernorm",
+    use_bias=True,
+    mlp_variant="gelu",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab_size=259,
+        norm_variant="layernorm",
+        use_bias=True,
+        mlp_variant="gelu",
+    )

@@ -1,0 +1,47 @@
+"""whisper-large-v3 — enc-dec audio; conv/mel frontend stubbed. [arXiv:2212.04356]
+
+The assigned entry specifies the TRANSFORMER BACKBONE; the mel-spectrogram +
+conv feature extractor is a stub — ``input_specs`` feeds (B, 1500, d_model)
+precomputed frame embeddings to the encoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    source="arXiv:2212.04356",
+    n_layers=32,             # decoder layers
+    n_encoder_layers=32,
+    encoder_seq_len=1500,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    mlp_variant="gelu",
+    norm_variant="layernorm",
+    use_bias=True,
+    pos_embedding="learned",
+    sliding_window=4096,     # enables long_500k decode lowering (artificial for
+                             # whisper — documented in DESIGN.md)
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke",
+        family="audio",
+        n_layers=2,
+        n_encoder_layers=2,
+        encoder_seq_len=32,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=256,
+        vocab_size=259,
+        mlp_variant="gelu",
+        norm_variant="layernorm",
+        use_bias=True,
+        pos_embedding="learned",
+        sliding_window=64,
+    )

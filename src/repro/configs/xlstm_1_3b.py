@@ -1,0 +1,35 @@
+"""xlstm-1.3b — sLSTM + mLSTM blocks (7:1 mLSTM:sLSTM). [arXiv:2405.04517]
+
+d_ff=0 per the assignment: blocks carry their own expansion (mLSTM uses a
+projection expansion of 2, sLSTM a gated ffn of 4/3*2).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    source="arXiv:2405.04517",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_every=8,     # one sLSTM per 8 blocks -> 7:1
+    ssm_chunk=256,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-smoke",
+        family="ssm",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=259,
+        slstm_every=2,
+        ssm_chunk=32,
+    )

@@ -1,0 +1,41 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention blocks. [arXiv:2411.15242]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    hybrid_attn_every=6,      # shared attention block every 6 mamba layers
+    sliding_window=4096,      # shared-attn block uses a window; long_500k native
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke",
+        family="hybrid",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=256,
+        vocab_size=259,
+        ssm_state=16,
+        ssm_expand=2,
+        ssm_conv=4,
+        ssm_head_dim=32,
+        ssm_chunk=32,
+        hybrid_attn_every=2,
+        sliding_window=64,
+    )

@@ -1,0 +1,43 @@
+"""The paper's primary contribution: speculative decoding with Margin-Aware
+Speculative Verification (MARS), plus the drafters and engine around it."""
+from repro.core.verify import (
+    DEFAULT_THETA,
+    VerifyResult,
+    mars_relax_mask,
+    top2_and_ratio,
+    verify_chain,
+)
+from repro.core.engine import (
+    EngineConfig,
+    SpecEngine,
+    make_ar_generate_fn,
+    make_generate_fn,
+)
+from repro.core.drafter import (
+    Committed,
+    DraftOutput,
+    EagleDrafter,
+    IndependentDrafter,
+    MedusaDrafter,
+    PLDrafter,
+    init_eagle_params,
+    init_medusa_params,
+)
+from repro.core.tree import (
+    TreeEngineConfig,
+    TreeSpecEngine,
+    make_caterpillar,
+    make_tree_generate_fn,
+    verify_tree,
+)
+from repro.core import metrics
+
+__all__ = [
+    "DEFAULT_THETA", "VerifyResult", "mars_relax_mask", "top2_and_ratio",
+    "verify_chain", "EngineConfig", "SpecEngine", "make_ar_generate_fn",
+    "make_generate_fn", "Committed", "DraftOutput", "EagleDrafter",
+    "IndependentDrafter", "MedusaDrafter", "PLDrafter", "init_eagle_params",
+    "init_medusa_params", "metrics", "TreeEngineConfig",
+    "TreeSpecEngine", "make_caterpillar", "make_tree_generate_fn",
+    "verify_tree",
+]

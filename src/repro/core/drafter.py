@@ -1,0 +1,331 @@
+"""Drafters for speculative decoding.
+
+Four drafter families, matching the paper's comparison set:
+
+* :class:`IndependentDrafter` — standard speculative sampling (SpS / "SPD"):
+  a separate small LM drafts K tokens autoregressively.
+* :class:`EagleDrafter` — EAGLE-style feature-conditioned head: one
+  transformer block drafting in the target's feature space, re-grounded on
+  the target's true features for committed tokens each cycle.
+* :class:`MedusaDrafter` — Medusa-style independent offset heads over the
+  last committed target feature.
+* :class:`PLDrafter` — Prompt-Lookup Decoding: copies the continuation of
+  the most recent n-gram match from the generated buffer (no model).
+
+All drafters implement the same jit-friendly protocol:
+
+  init_state(params, batch, max_len)              -> state
+  prefill(params, state, tokens, lengths)         -> state
+  draft(params, state, last_token, extras, key)   -> (DraftOutput, state)
+  sync(params, state, committed, extras)          -> state
+
+``extras`` carries engine context: the token buffer + lengths (PLD) and the
+target features from the verify pass (EAGLE / Medusa).  MARS — the paper's
+contribution — never looks at the drafter: it only changes the verify rule,
+which is what makes it plug-and-play across all four (paper §4.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.model import Model, _init_block, _apply_block
+
+
+class DraftOutput(NamedTuple):
+    tokens: jnp.ndarray                    # (B, K)
+    token_probs: jnp.ndarray               # (B, K) drafter prob of its sample
+    full_probs: Optional[jnp.ndarray]      # (B, K, V) or None
+
+
+class Committed(NamedTuple):
+    """What the engine learned from one verify cycle."""
+    out_tokens: jnp.ndarray                # (B, K+1)
+    n_accept: jnp.ndarray                  # (B,)
+    n_commit: jnp.ndarray                  # (B,)
+    base_index: jnp.ndarray                # (B,) target cache index pre-cycle
+    features: Optional[jnp.ndarray] = None  # (B, K+1, d) target features
+    active: Optional[jnp.ndarray] = None    # (B,) cycle ran for this row
+
+
+def _sample(logits, key, temperature):
+    """Sample (or argmax at T=0); returns (token, prob_of_token, log_probs)."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+    else:
+        logp = jax.nn.log_softmax(logits / temperature, axis=-1)
+        tok = jax.random.categorical(key, logp, axis=-1).astype(jnp.int32)
+    p = jnp.exp(jnp.take_along_axis(logp, tok[..., None], axis=-1))[..., 0]
+    if temperature <= 0.0:
+        p = jnp.ones_like(p)
+    return tok, p, logp
+
+
+# ---------------------------------------------------------------------------
+# Independent small-LM drafter (standard speculative sampling)
+# ---------------------------------------------------------------------------
+
+class IndependentDrafter:
+    wants_features = False
+
+    def __init__(self, model: Model, k: int, *, temperature: float = 1.0,
+                 collect_full_probs: bool = False):
+        self.model = model
+        self.k = k
+        self.temperature = temperature
+        self.collect_full_probs = collect_full_probs
+
+    def init_state(self, params, batch: int, max_len: int) -> Dict[str, Any]:
+        return {"cache": self.model.init_cache(params, batch, max_len)}
+
+    def prefill(self, params, state, tokens, lengths):
+        """Feed prompt[:-1] (the final prompt token stays pending)."""
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        mask = pos < (lengths - 1)[:, None]
+        cache = state["cache"]
+        _, cache = self.model.decode(params, tokens, pos, cache, token_mask=mask)
+        return {"cache": cache}
+
+    def draft(self, params, state, last_token, extras, key):
+        cache = state["cache"]
+        keys = jax.random.split(key, self.k)
+
+        def step(carry, k_i):
+            tok, cache = carry
+            pos = cache["index"][:, None]
+            logits, cache = self.model.decode(params, tok[:, None], pos, cache)
+            nxt, p, logp = _sample(logits[:, -1], k_i, self.temperature)
+            full = jnp.exp(logp) if self.collect_full_probs else jnp.zeros((1,))
+            return (nxt, cache), (nxt, p, full)
+
+        (_, cache), (toks, probs, fulls) = jax.lax.scan(
+            step, (last_token, cache), keys)
+        toks = jnp.moveaxis(toks, 0, 1)            # (B, K)
+        probs = jnp.moveaxis(probs, 0, 1)
+        full = (jnp.moveaxis(fulls, 0, 1) if self.collect_full_probs else None)
+        return DraftOutput(toks, probs, full), {"cache": cache}
+
+    def sync(self, params, state, committed: Committed, extras):
+        cache = dict(state["cache"])
+        # rollback: cache holds [last_token, d1..d_{K-1}] starting at
+        # base_index; valid prefix is last_token + accepted drafts
+        cache["index"] = committed.base_index + 1 + committed.n_accept
+        # when the whole draft was accepted the drafter never processed d_K;
+        # feed it (masked elsewhere) so its kv/state exists
+        k = committed.out_tokens.shape[1] - 1
+        need = committed.n_accept >= k
+        if committed.active is not None:
+            need = need & committed.active
+        d_k = committed.out_tokens[:, k - 1][:, None]  # d_K (last accepted)
+        # d_K belongs at base_index + K (slot after d_{K-1})
+        pos = (committed.base_index + k)[:, None]
+        _, cache = self.model.decode(params, d_k, pos, cache,
+                                     token_mask=need[:, None])
+        cache["index"] = committed.base_index + 1 + committed.n_accept
+        return {"cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# EAGLE-style feature drafter
+# ---------------------------------------------------------------------------
+
+def init_eagle_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    """One transformer block + fusion fc over (token emb, prev feature)."""
+    k_fc, k_block = jax.random.split(rng)
+    return {
+        "fc": L._dense_init(k_fc, (2 * cfg.d_model, cfg.d_model)),
+        "block": _init_block(cfg, k_block, moe=False, cross=False),
+    }
+
+
+class EagleDrafter:
+    """Chain-EAGLE: drafts in feature space, one block deep.
+
+    The head owns a small KV cache over the fused (emb, feature) stream; it
+    reuses the *target's* embedding matrix and LM head (EAGLE's design), and
+    its feature carry is re-grounded on the target's true feature for the
+    last committed token after every verify cycle.
+    """
+    wants_features = True
+
+    def __init__(self, target_model: Model, k: int, *,
+                 temperature: float = 1.0):
+        self.target = target_model
+        self.cfg = target_model.cfg
+        self.k = k
+        self.temperature = temperature
+
+    def init_state(self, params, batch: int, max_len: int) -> Dict[str, Any]:
+        cache = L.make_attention_cache(self.cfg, batch, max_len)
+        feat = jnp.zeros((batch, self.cfg.d_model), L.dtype_of(self.cfg))
+        return {"cache": cache, "feat": feat}
+
+    def _step(self, params, target_params, tok, feat, pos, cache, token_mask=None):
+        cfg = self.cfg
+        emb = target_params["embedding"][tok].astype(feat.dtype)     # (B,1? d)
+        x = jnp.concatenate([emb, feat[:, None]], axis=-1) @ \
+            params["fc"].astype(feat.dtype)
+        if token_mask is not None:
+            pos = jnp.where(token_mask, pos, -1)
+        y, new_cache, _ = _apply_block(cfg, params["block"], x, pos, cache=cache)
+        new_feat = y[:, 0]
+        w = (target_params["embedding"].T if cfg.tie_embeddings
+             else target_params["lm_head"]).astype(feat.dtype)
+        logits = new_feat @ w
+        return logits, new_feat, new_cache
+
+    def prefill(self, params, state, tokens, lengths):
+        # feed prompt[:-1] token-by-token is wasteful; fuse once: here we
+        # simply reset and rely on sync() grounding — the head conditions on
+        # the last feature only, plus its own kv of drafted steps.
+        return state
+
+    def draft(self, params, state, last_token, extras, key):
+        target_params = extras["target_params"]
+        cache, feat = state["cache"], state["feat"]
+        keys = jax.random.split(key, self.k)
+
+        # explicit python loop (K is small and static) keeps position math simple
+        toks, probs = [], []
+        pos0 = extras["index"]
+        tok = last_token
+        for i in range(self.k):
+            pos = (pos0 + i)[:, None]
+            logits, feat, cache = self._step(
+                params, target_params, tok[:, None], feat, pos, cache)
+            tok, p, _ = _sample(logits, keys[i], self.temperature)
+            toks.append(tok)
+            probs.append(p)
+        out = DraftOutput(jnp.stack(toks, 1), jnp.stack(probs, 1), None)
+        return out, {"cache": cache, "feat": feat}
+
+    def sync(self, params, state, committed: Committed, extras):
+        # the head's kv cache is ring-addressed by absolute target positions
+        # (supplied each draft call), so no index rewind is needed: stale
+        # entries are masked by position and overwritten on the next pass.
+        cache = state["cache"]
+        # ground the feature carry on the target's true feature at the last
+        # position preceding the pending token
+        feats = committed.features                         # (B, K+1, d)
+        idx = committed.n_accept[:, None, None]            # feature at d_{n}/last
+        feat = jnp.take_along_axis(feats, idx, axis=1)[:, 0]
+        if committed.active is not None:
+            feat = jnp.where(committed.active[:, None], feat, state["feat"])
+        return {"cache": cache, "feat": feat.astype(state["feat"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Medusa-style offset heads
+# ---------------------------------------------------------------------------
+
+def init_medusa_params(cfg: ModelConfig, rng, n_heads: int) -> Dict[str, Any]:
+    keys = jax.random.split(rng, n_heads)
+    return {
+        "heads_w1": jnp.stack([
+            L._dense_init(k, (cfg.d_model, cfg.d_model)) for k in keys]),
+    }
+
+
+class MedusaDrafter:
+    """Medusa-lite: head h predicts the token at offset h+1 from the last
+    committed feature (resblock + target LM head).  K = n_heads drafts."""
+    wants_features = True
+
+    def __init__(self, target_model: Model, k: int, *, temperature: float = 1.0):
+        self.target = target_model
+        self.cfg = target_model.cfg
+        self.k = k
+        self.temperature = temperature
+
+    def init_state(self, params, batch: int, max_len: int) -> Dict[str, Any]:
+        return {"feat": jnp.zeros((batch, self.cfg.d_model),
+                                  L.dtype_of(self.cfg))}
+
+    def prefill(self, params, state, tokens, lengths):
+        return state
+
+    def draft(self, params, state, last_token, extras, key):
+        cfg = self.cfg
+        target_params = extras["target_params"]
+        feat = state["feat"]
+        w = (target_params["embedding"].T if cfg.tie_embeddings
+             else target_params["lm_head"]).astype(feat.dtype)
+        keys = jax.random.split(key, self.k)
+        toks, probs = [], []
+        for h in range(self.k):
+            wh = params["heads_w1"][h].astype(feat.dtype)
+            fh = feat + jax.nn.silu(feat @ wh)
+            logits = fh @ w
+            tok, p, _ = _sample(logits, keys[h], self.temperature)
+            toks.append(tok)
+            probs.append(p)
+        return DraftOutput(jnp.stack(toks, 1), jnp.stack(probs, 1), None), state
+
+    def sync(self, params, state, committed: Committed, extras):
+        feats = committed.features
+        idx = committed.n_accept[:, None, None]
+        feat = jnp.take_along_axis(feats, idx, axis=1)[:, 0]
+        if committed.active is not None:
+            feat = jnp.where(committed.active[:, None], feat, state["feat"])
+        return {"feat": feat.astype(state["feat"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Prompt-Lookup Decoding (no model)
+# ---------------------------------------------------------------------------
+
+class PLDrafter:
+    """Copies K tokens following the latest match of the trailing n-gram in
+    the already-generated buffer (Somasundaram et al., 2024)."""
+    wants_features = False
+
+    def __init__(self, k: int, *, ngram: int = 2, max_len: int = 0):
+        self.k = k
+        self.ngram = ngram
+
+    def init_state(self, params, batch: int, max_len: int) -> Dict[str, Any]:
+        return {}
+
+    def prefill(self, params, state, tokens, lengths):
+        return state
+
+    def draft(self, params, state, last_token, extras, key):
+        buf = extras["tokens_buf"]            # (B, L) committed + pending last
+        lengths = extras["lengths"]           # (B,) committed length
+        b, l = buf.shape
+        n, k = self.ngram, self.k
+        # trailing n-gram ends at the pending last_token (== buf[lengths-1])
+        gram_idx = lengths[:, None] - n + jnp.arange(n - 1)[None]
+        gram_hist = jnp.take_along_axis(buf, jnp.clip(gram_idx, 0, l - 1), 1)
+        gram = (jnp.concatenate([gram_hist, last_token[:, None]], 1)
+                if n > 1 else last_token[:, None])
+
+        # match score at every start position i: buf[i:i+n] == gram
+        valid_len = l - n + 1
+        m = jnp.ones((b, valid_len), bool)
+        for j in range(n):
+            m &= buf[:, j:valid_len + j] == gram[:, j][:, None]
+        # matches must lie strictly before the trailing gram occurrence
+        starts = jnp.arange(valid_len)[None]
+        m &= (starts + n) <= lengths[:, None] - 1
+        # most recent match
+        best = jnp.where(m, starts, -1).max(axis=1)          # (B,)
+        found = best >= 0
+        copy_idx = best[:, None] + n + jnp.arange(k)[None]
+        copy_idx = jnp.clip(copy_idx, 0, l - 1)
+        toks = jnp.take_along_axis(buf, copy_idx, axis=1)
+        # fallback when no match: repeat last token (will be rejected fast)
+        toks = jnp.where(found[:, None], toks, last_token[:, None])
+        probs = jnp.ones((b, k), jnp.float32)  # deterministic drafter: q = 1
+        return DraftOutput(toks.astype(jnp.int32), probs, None), state
+
+    def sync(self, params, state, committed: Committed, extras):
+        return state

@@ -1,0 +1,46 @@
+"""Acceptance / speedup metrics for speculative decoding."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def tau(stats: Dict[str, jnp.ndarray]) -> float:
+    """Average committed tokens per draft–verify cycle (paper's τ)."""
+    cycles = np.asarray(stats["cycles"], dtype=np.float64)
+    commits = np.asarray(stats["commits"], dtype=np.float64)
+    return float(commits.sum() / np.maximum(cycles.sum(), 1.0))
+
+
+def acceptance_rate(stats: Dict[str, jnp.ndarray], k: int) -> float:
+    cycles = np.asarray(stats["cycles"], dtype=np.float64).sum()
+    accepts = np.asarray(stats["accepts"], dtype=np.float64).sum()
+    return float(accepts / np.maximum(cycles * k, 1.0))
+
+
+def relax_fraction(stats: Dict[str, jnp.ndarray]) -> float:
+    """Fraction of accepted draft tokens that needed MARS relaxation."""
+    accepts = np.asarray(stats["accepts"], dtype=np.float64).sum()
+    relaxed = np.asarray(stats["relaxed"], dtype=np.float64).sum()
+    return float(relaxed / np.maximum(accepts, 1.0))
+
+
+def analytic_speedup(tau_: float, k: int, *, cost_draft_ratio: float,
+                     verify_overhead: float = 1.0) -> float:
+    """Standard SD cost model (Leviathan et al.):
+
+      speedup = τ / (K * c + v)
+
+    where c is the per-token draft cost relative to one target forward and v
+    the cost of the K+1-token parallel verify relative to one target forward
+    (≈1 in the memory-bound decode regime: weights dominate HBM traffic).
+    """
+    return tau_ / (k * cost_draft_ratio + verify_overhead)
+
+
+def flops_cost_ratio(draft_params: int, target_params: int) -> float:
+    """Per-token draft/target cost proxy from active parameter counts
+    (decode is memory-bound; bytes moved ∝ params)."""
+    return draft_params / max(target_params, 1)

@@ -1,0 +1,356 @@
+"""Tree-draft speculative decoding with MARS verification.
+
+The paper (§2.3) notes MARS applies on top of tree-based verification; this
+module implements it with a *caterpillar* tree (EAGLE-lite): a main draft
+chain of depth K plus ``branch-1`` sibling candidates at every depth, taken
+from the drafter's own top-k at that step (no extra drafter passes).
+
+Verification scores all nodes in ONE virtual target pass (tree-ancestry
+attention against the KV cache, nothing written), then:
+
+  1. walk the chain; at the first rejected chain node, try to *rescue* with
+     an accepted sibling at that depth (exact-match or MARS-relaxed);
+  2. a rescued sibling contributes its own bonus continuation from its
+     (already computed!) node logits — this is where trees beat chains;
+  3. commit the chosen path with a masked regular decode from the pre-cycle
+     cache (the same recompute pass recurrent targets use), so the KV cache
+     only ever contains committed tokens.
+
+Node layout: node 0 = root (the pending last token, depth 0); depth d >= 1
+holds ``branch`` nodes, the first being the chain node.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import verify as V
+from repro.core.drafter import _sample
+from repro.models.model import Model
+
+
+class TreeTemplate(NamedTuple):
+    depth: np.ndarray        # (N,) node depth (root = 0)
+    parent: np.ndarray       # (N,) parent node index (root = -1)
+    is_chain: np.ndarray     # (N,) on the main chain?
+    mask: np.ndarray         # (N, N) ancestry-or-self attention mask
+    k: int                   # chain depth
+    branch: int              # candidates per depth (1 chain + b-1 siblings)
+
+
+def make_caterpillar(k: int, branch: int) -> TreeTemplate:
+    depth = [0]
+    parent = [-1]
+    is_chain = [True]
+    chain_at = {0: 0}
+    for d in range(1, k + 1):
+        for b in range(branch):
+            depth.append(d)
+            parent.append(chain_at[d - 1])
+            is_chain.append(b == 0)
+            if b == 0:
+                chain_at[d] = len(depth) - 1
+    n = len(depth)
+    mask = np.zeros((n, n), bool)
+    for i in range(n):
+        j = i
+        while j >= 0:
+            mask[i, j] = True
+            j = parent[j]
+    return TreeTemplate(np.asarray(depth), np.asarray(parent),
+                        np.asarray(is_chain), mask, k, branch)
+
+
+class TreeDraft(NamedTuple):
+    tokens: jnp.ndarray       # (B, N) node tokens (node 0 = last_token)
+    token_probs: jnp.ndarray  # (B, N) drafter prob of each node token
+
+
+def draft_tree_eagle(drafter, params, state, last_token, extras, key,
+                     tpl: TreeTemplate) -> Tuple[TreeDraft, Dict]:
+    """Chain-draft with the EAGLE-style head, capturing top-``branch``
+    candidates at every depth as sibling nodes."""
+    target_params = extras["target_params"]
+    cache, feat = state["cache"], state["feat"]
+    keys = jax.random.split(key, tpl.k)
+    b = last_token.shape[0]
+    n = len(tpl.depth)
+
+    toks = [last_token]                     # node 0 = root
+    probs = [jnp.ones((b,), jnp.float32)]
+    tok = last_token
+    pos0 = extras["index"]
+    for d in range(tpl.k):
+        pos = (pos0 + d)[:, None]
+        logits, feat, cache = drafter._step(
+            params, target_params, tok[:, None], feat, pos, cache)
+        lf = logits.astype(jnp.float32)
+        if drafter.temperature > 0:
+            logp = jax.nn.log_softmax(lf / drafter.temperature, -1)
+        else:
+            logp = jax.nn.log_softmax(lf, -1)
+        top_p, top_i = jax.lax.top_k(logp, tpl.branch)
+        if drafter.temperature > 0:
+            tok, p0, _ = _sample(logits, keys[d], drafter.temperature)
+        else:
+            tok, p0 = top_i[:, 0].astype(jnp.int32), jnp.ones((b,))
+        # chain node first (sampled / argmax), then runner-up candidates as
+        # sibling nodes (occasional duplication with a sampled chain token
+        # wastes a node but never hurts correctness)
+        toks.append(tok)
+        probs.append(p0)
+        for j in range(1, tpl.branch):
+            toks.append(top_i[:, j].astype(jnp.int32))
+            probs.append(jnp.exp(top_p[:, j]))
+    draft = TreeDraft(jnp.stack(toks, 1), jnp.stack(probs, 1))
+    return draft, {"cache": cache, "feat": feat}
+
+
+def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
+                node_logits: jnp.ndarray, *, rule: str, mode: str,
+                theta: float, temperature: float, key,
+                node_probs: Optional[jnp.ndarray] = None):
+    """Choose the committed path.
+
+    node_tokens: (B, N); node_logits: (B, N, V) — logits[i] is the target
+    distribution for the *successor* of node i.
+
+    Returns (out_tokens (B, K+2), n_commit (B,), n_accept, n_relaxed).
+    """
+    b, n, v = node_logits.shape
+    k, branch = tpl.k, tpl.branch
+    key_acc, key_extra = jax.random.split(key)
+
+    parent = jnp.asarray(tpl.parent)
+    parent_logits = node_logits[:, jnp.maximum(parent, 0)]   # (B, N, V)
+
+    if mode == "greedy":
+        top1 = jnp.argmax(parent_logits, -1)
+        accept = node_tokens == top1
+    else:
+        logp = jax.nn.log_softmax(
+            parent_logits.astype(jnp.float32)
+            / jnp.maximum(temperature, 1e-6), -1)
+        p_tok = jnp.exp(jnp.take_along_axis(
+            logp, node_tokens[..., None], -1))[..., 0]
+        u = jax.random.uniform(key_acc, node_tokens.shape)
+        q = node_probs if node_probs is not None else jnp.ones_like(p_tok)
+        accept = u * jnp.maximum(q, 1e-30) < p_tok
+
+    relax = jnp.zeros_like(accept)
+    if rule == "mars":
+        relax = V.mars_relax_mask(node_tokens, parent_logits, theta) & ~accept
+        accept = accept | relax
+
+    # chain walk
+    chain_idx = jnp.asarray(np.where(tpl.is_chain)[0][1:])   # depth 1..K
+    chain_acc = accept[:, chain_idx]                          # (B, K)
+    run = jnp.cumprod(chain_acc.astype(jnp.int32), 1)
+    n_chain = jnp.sum(run, 1)                                 # (B,)
+    n_relax_chain = jnp.sum(run * relax[:, chain_idx].astype(jnp.int32), 1)
+
+    # sibling rescue at depth n_chain + 1 (if any sibling accepted there)
+    # node index of sibling j at depth d: chain nodes are first per depth
+    sib_cols = []
+    for d in range(1, k + 1):
+        base = 1 + (d - 1) * branch
+        sib_cols.append([base + j for j in range(1, branch)])
+    sib_cols = jnp.asarray(sib_cols)                          # (K, branch-1)
+    fail_depth = jnp.minimum(n_chain, k - 1)                  # depth idx (0-based)
+    sib_nodes = sib_cols[fail_depth]                          # (B, branch-1)
+    sib_acc = jnp.take_along_axis(accept, sib_nodes, 1)       # (B, branch-1)
+    sib_rel = jnp.take_along_axis(relax, sib_nodes, 1)
+    has_rescue = sib_acc.any(1) & (n_chain < k)
+    first_sib = jnp.argmax(sib_acc, 1)
+    rescue_node = jnp.take_along_axis(sib_nodes, first_sib[:, None], 1)[:, 0]
+    rescue_rel = jnp.take_along_axis(sib_rel, first_sib[:, None], 1)[:, 0]
+
+    # the node whose logits give the extra token:
+    #   full chain accepted -> last chain node (bonus)
+    #   rescue              -> rescued sibling  (bonus)
+    #   else                -> the last accepted chain node (correction)
+    chain_idx_pad = jnp.concatenate([jnp.zeros((1,), jnp.int32), chain_idx])
+    last_ok_chain = chain_idx_pad[n_chain]                    # (B,)
+    extra_src = jnp.where(has_rescue, rescue_node, last_ok_chain)
+    src_logits = jnp.take_along_axis(
+        node_logits, extra_src[:, None, None], 1)[:, 0]       # (B, V)
+    if mode == "greedy":
+        extra = jnp.argmax(src_logits, -1).astype(jnp.int32)
+    else:
+        lf = src_logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+        extra = jax.random.categorical(key_extra, lf, -1).astype(jnp.int32)
+
+    # assemble committed tokens: chain prefix (+ rescue) + extra
+    chain_toks = node_tokens[:, chain_idx]                    # (B, K)
+    pos_k = jnp.arange(k + 2)[None]                           # (B, K+2) slots
+    out = jnp.zeros((b, k + 2), jnp.int32)
+    chain_pad = jnp.concatenate(
+        [chain_toks, chain_toks[:, -1:], chain_toks[:, -1:]], 1)
+    rescue_tok = jnp.take_along_axis(node_tokens, rescue_node[:, None], 1)[:, 0]
+    n_resc = has_rescue.astype(jnp.int32)
+    out = jnp.where(pos_k < n_chain[:, None], chain_pad, 0)
+    out = jnp.where((pos_k == n_chain[:, None]) & has_rescue[:, None],
+                    rescue_tok[:, None], out)
+    extra_slot = n_chain + n_resc
+    out = jnp.where(pos_k == extra_slot[:, None], extra[:, None], out)
+    out = jnp.where(pos_k > extra_slot[:, None], extra[:, None], out)
+
+    n_accept = n_chain + n_resc
+    n_commit = n_accept + 1
+    n_relaxed = n_relax_chain + (rescue_rel & has_rescue).astype(jnp.int32)
+    return out, n_commit, n_accept, n_relaxed
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeEngineConfig:
+    k: int = 5
+    branch: int = 3
+    rule: str = "mars"
+    mode: str = "greedy"
+    theta: float = V.DEFAULT_THETA
+    temperature: float = 0.0
+
+
+class TreeSpecEngine:
+    """Tree-draft engine for attention-family targets with an EAGLE-style
+    drafter (the paper's EAGLE-3 + MARS configuration, tree edition)."""
+
+    def __init__(self, target: Model, drafter, cfg: TreeEngineConfig):
+        if target.is_recurrent:
+            raise NotImplementedError(
+                "tree verification needs attention-family targets; use the "
+                "chain engine for ssm/hybrid")
+        self.target = target
+        self.drafter = drafter
+        self.cfg = cfg
+        self.tpl = make_caterpillar(cfg.k, cfg.branch)
+
+    def cycle(self, t_params, d_params, carry):
+        cfg, tpl = self.cfg, self.tpl
+        (buf, lengths, finished, t_cache, d_state, last_token, key,
+         stats) = carry
+        b = last_token.shape[0]
+        key, k_draft, k_verify = jax.random.split(key, 3)
+        active = ~finished
+
+        extras = {"target_params": t_params, "tokens_buf": buf,
+                  "lengths": lengths, "index": t_cache["index"]}
+        draft, d_state = draft_tree_eagle(
+            self.drafter, d_params, d_state, last_token, extras, k_draft, tpl)
+
+        base = t_cache["index"]
+        positions = base[:, None] + jnp.asarray(tpl.depth)[None]
+        node_logits = self.target.decode_virtual(
+            t_params, draft.tokens, positions, t_cache,
+            jnp.asarray(tpl.mask))
+
+        out, n_commit, n_accept, n_relaxed = verify_tree(
+            tpl, draft.tokens, node_logits, rule=cfg.rule, mode=cfg.mode,
+            theta=cfg.theta, temperature=cfg.temperature, key=k_verify,
+            node_probs=draft.token_probs)
+        n_commit = jnp.where(active, n_commit, 0)
+
+        # commit pass: regular masked decode of [last_token, path...] writes
+        # the accepted path into the cache (and computes features for sync)
+        kk = tpl.k + 2
+        commit_inputs = jnp.concatenate([last_token[:, None], out[:, :kk - 1]],
+                                        1)
+        commit_pos = base[:, None] + jnp.arange(kk, dtype=jnp.int32)[None]
+        cmask = (jnp.arange(kk)[None] < n_accept[:, None] + 1) \
+            & active[:, None]
+        res = self.target.decode(t_params, commit_inputs, commit_pos, t_cache,
+                                 token_mask=cmask,
+                                 with_features=self.drafter.wants_features)
+        if self.drafter.wants_features:
+            _, t_cache, feats = res
+        else:
+            _, t_cache = res
+            feats = None
+        t_cache = dict(t_cache)
+        t_cache["index"] = jnp.where(active, base + 1 + n_accept, base)
+
+        # drafter sync: feature of the last committed (cached) token
+        if self.drafter.wants_features and feats is not None:
+            idx = jnp.clip(n_accept, 0, kk - 1)[:, None, None]
+            feat = jnp.take_along_axis(
+                feats, jnp.broadcast_to(idx, (b, 1, feats.shape[-1])), 1)[:, 0]
+            feat = jnp.where(active[:, None], feat, d_state["feat"])
+            d_state = {**d_state, "feat": feat.astype(d_state["feat"].dtype)}
+
+        # buffer write
+        l_buf = buf.shape[1] - 1
+        n_commit = jnp.minimum(n_commit, jnp.maximum(l_buf - lengths, 0))
+        wpos = lengths[:, None] + jnp.arange(kk, dtype=jnp.int32)[None]
+        wvalid = (jnp.arange(kk)[None] < n_commit[:, None]) & (wpos < l_buf)
+        wslot = jnp.where(wvalid, wpos, l_buf)
+        buf = buf.at[jnp.arange(b)[:, None], wslot].set(out)
+        lengths = lengths + n_commit
+        finished = finished | (lengths >= l_buf)
+
+        last_idx = jnp.clip(n_commit - 1, 0, kk - 1)
+        new_last = jnp.take_along_axis(out, last_idx[:, None], 1)[:, 0]
+        last_token = jnp.where(active, new_last, last_token)
+
+        stats = {
+            "cycles": stats["cycles"] + active.astype(jnp.int32),
+            "commits": stats["commits"] + n_commit,
+            "accepts": stats["accepts"] + jnp.where(active, n_accept, 0),
+            "relaxed": stats["relaxed"] + jnp.where(active, n_relaxed, 0),
+        }
+        return (buf, lengths, finished, t_cache, d_state, last_token, key,
+                stats)
+
+    def generate(self, t_params, d_params, prompt, prompt_len, max_new, key):
+        b, s = prompt.shape
+        l_buf = s + max_new + self.cfg.k + 3
+        buf = jnp.zeros((b, l_buf + 1), jnp.int32).at[:, :s].set(prompt)
+        t_cache = self.target.init_cache(t_params, b, l_buf)
+        d_state = self.drafter.init_state(d_params, b, l_buf)
+
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        pmask = pos < (prompt_len - 1)[:, None]
+        out = self.target.decode(t_params, prompt, pos, t_cache,
+                                 token_mask=pmask,
+                                 with_features=self.drafter.wants_features)
+        if self.drafter.wants_features:
+            _, t_cache, pfeats = out
+            idx = jnp.clip(prompt_len - 2, 0, s - 1)[:, None, None]
+            feat0 = jnp.take_along_axis(
+                pfeats, jnp.broadcast_to(idx, (b, 1, pfeats.shape[-1])), 1)[:, 0]
+            d_state = {**d_state, "feat": feat0.astype(d_state["feat"].dtype)}
+        else:
+            _, t_cache = out
+
+        last_token = jnp.take_along_axis(
+            prompt, jnp.clip(prompt_len - 1, 0, s - 1)[:, None], 1)[:, 0]
+        stats = {k: jnp.zeros((b,), jnp.int32)
+                 for k in ("cycles", "commits", "accepts", "relaxed")}
+        carry = (buf, prompt_len, jnp.zeros((b,), bool), t_cache, d_state,
+                 last_token, key, stats)
+
+        def cond(st):
+            return (~st[2]).any() & (st[7]["cycles"].max() < max_new)
+
+        def body(st):
+            return self.cycle(t_params, d_params, st)
+
+        (buf, lengths, finished, _, _, _, _, stats) = jax.lax.while_loop(
+            cond, body, carry)
+        return {"tokens": buf[:, :-1], "lengths": jnp.minimum(lengths, l_buf),
+                "finished": finished, "stats": stats}
+
+
+def make_tree_generate_fn(target: Model, drafter, cfg: TreeEngineConfig):
+    engine = TreeSpecEngine(target, drafter, cfg)
+
+    @functools.partial(jax.jit, static_argnames=("max_new",))
+    def generate(t_params, d_params, prompt, prompt_len, key, max_new=64):
+        return engine.generate(t_params, d_params, prompt, prompt_len,
+                               max_new, key)
+
+    return generate

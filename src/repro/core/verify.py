@@ -1,0 +1,192 @@
+"""Verification rules for speculative decoding — the paper's contribution.
+
+Three rules, all operating on the target logits computed in one parallel
+pass over the draft chunk (paper Alg. 1):
+
+* ``strict greedy``    — accept iff draft == target top-1.
+* ``strict sampling``  — Leviathan et al. rejection sampling (lossless).
+* ``MARS``             — greedy/sampling base rule + *adaptive relaxation*:
+                          also accept when the draft equals the target top-2
+                          AND the logit ratio r = z(2)/z(1) exceeds θ
+                          (low-margin regime; default θ = 0.9).
+
+The relaxation is only valid in the positive-logit regime the paper observes
+(Fig. 4a): we additionally require z(1) > 0 and z(2) > 0 so that
+r ∈ (0, 1] — this is the guard MARS' ratio definition presumes.
+
+All functions are vectorised over batch and jit-friendly.  A fused Pallas
+kernel implementing the top-2 + ratio + accept decision in one HBM pass over
+the logits lives in ``repro.kernels.mars_verify``; this module is the
+reference semantics (and the default CPU path).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_THETA = 0.9
+
+
+class VerifyResult(NamedTuple):
+    """Outcome of verifying one draft chunk.
+
+    out_tokens : (B, K+1) committed tokens; entries past ``n_commit`` are
+                 padding (repeat of the last valid token).
+    n_commit   : (B,) number of valid tokens in out_tokens (= n_accept + 1:
+                 accepted draft prefix plus correction-or-bonus token).
+    n_accept   : (B,) accepted draft tokens.
+    n_relaxed  : (B,) accepted positions that needed MARS relaxation.
+    """
+    out_tokens: jnp.ndarray
+    n_commit: jnp.ndarray
+    n_accept: jnp.ndarray
+    n_relaxed: jnp.ndarray
+
+
+def top2_and_ratio(logits: jnp.ndarray, guard: str = "positive"):
+    """Return (top1_idx, top2_idx, ratio, valid) for logits (..., V).
+
+    guard="positive" (paper-faithful): ratio = z(2)/z(1), valid only in the
+    positive-domain regime the paper observes for large LLMs (Fig. 4a).
+
+    guard="margin" (our small-model extension, DESIGN.md §7): the paper's
+    own equivalent form r = 1 - Δ/z(1) generalised with |z(1)|, i.e.
+    r = 1 - (z1 - z2)/max(|z1|, eps) — identical to z2/z1 when z1 > 0 and
+    sign-safe otherwise.  Needed because sub-100M-parameter targets trained
+    briefly do not yet exhibit the positive-logit dominance of 8B+ LLMs."""
+    vals, idx = jax.lax.top_k(logits, 2)
+    z1, z2 = vals[..., 0], vals[..., 1]
+    if guard == "margin":
+        valid = jnp.ones_like(z1, bool)
+        ratio = 1.0 - (z1 - z2) / jnp.maximum(jnp.abs(z1), 1e-6)
+    else:
+        valid = (z1 > 0.0) & (z2 > 0.0)
+        ratio = jnp.where(valid, z2 / jnp.maximum(z1, 1e-30), 0.0)
+    return idx[..., 0], idx[..., 1], ratio, valid
+
+
+def mars_relax_mask(draft_tokens: jnp.ndarray, target_logits: jnp.ndarray,
+                    theta: float, guard: str = "positive") -> jnp.ndarray:
+    """(B, K) mask of positions acceptable via adaptive relaxation."""
+    _, top2, ratio, valid = top2_and_ratio(target_logits, guard)
+    return (draft_tokens == top2) & valid & (ratio > theta)
+
+
+def _accept_greedy(draft_tokens, target_logits):
+    top1 = jnp.argmax(target_logits, axis=-1)
+    return draft_tokens == top1
+
+
+def _accept_sampling(draft_tokens, target_logits, draft_token_probs,
+                     key, temperature):
+    """Leviathan accept: u < p(v)/q(v) with p the (temperature-scaled)
+    target distribution and q the drafter's probability of its own sample."""
+    logp = jax.nn.log_softmax(
+        target_logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6),
+        axis=-1)
+    p_draft = jnp.exp(
+        jnp.take_along_axis(logp, draft_tokens[..., None], axis=-1))[..., 0]
+    u = jax.random.uniform(key, draft_tokens.shape)
+    return u * jnp.maximum(draft_token_probs, 1e-30) < p_draft
+
+
+def _correction_token(target_logits_all, n_accept, *, mode, key, temperature,
+                      draft_full_probs=None):
+    """Token emitted at the first rejected position (or the bonus position
+    when the whole draft is accepted).
+
+    target_logits_all: (B, K+1, V) — position K is the bonus distribution.
+    For exact lossless sampling the residual (p - q)+ is used when the full
+    draft distribution is available; the bonus token always samples from p.
+    """
+    b, kp1, v = target_logits_all.shape
+    k = kp1 - 1
+    sel = jnp.take_along_axis(
+        target_logits_all, n_accept[:, None, None], axis=1)[:, 0]  # (B, V)
+    if mode == "greedy":
+        return jnp.argmax(sel, axis=-1).astype(jnp.int32)
+
+    logp = jax.nn.log_softmax(
+        sel.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
+    p = jnp.exp(logp)
+    if draft_full_probs is not None:
+        # residual distribution at the rejected position
+        qpad = jnp.concatenate(
+            [draft_full_probs, jnp.zeros((b, 1, v), draft_full_probs.dtype)],
+            axis=1)
+        q = jnp.take_along_axis(qpad, n_accept[:, None, None], axis=1)[:, 0]
+        is_bonus = (n_accept == k)[:, None]
+        resid = jnp.maximum(p - jnp.where(is_bonus, 0.0, q), 0.0)
+        resid = resid / jnp.maximum(resid.sum(-1, keepdims=True), 1e-30)
+        dist = jnp.log(jnp.maximum(resid, 1e-30))
+    else:
+        dist = logp
+    return jax.random.categorical(key, dist, axis=-1).astype(jnp.int32)
+
+
+def verify_chain(draft_tokens: jnp.ndarray,
+                 target_logits: jnp.ndarray,
+                 *,
+                 rule: str = "mars",
+                 mode: str = "sample",
+                 theta: float = DEFAULT_THETA,
+                 temperature: float = 1.0,
+                 key: Optional[jnp.ndarray] = None,
+                 draft_token_probs: Optional[jnp.ndarray] = None,
+                 draft_full_probs: Optional[jnp.ndarray] = None,
+                 use_kernel: bool = False,
+                 guard: str = "positive",
+                 ) -> VerifyResult:
+    """Verify a chain draft.
+
+    draft_tokens  : (B, K)
+    target_logits : (B, K+1, V); row i is the target distribution for the
+                    token *at draft position i* (row K = bonus distribution).
+    rule          : "strict" | "mars"
+    mode          : "greedy" | "sample"
+    """
+    b, k = draft_tokens.shape
+    assert target_logits.shape[1] == k + 1
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_acc, k_corr = jax.random.split(key)
+
+    logits_at_draft = target_logits[:, :k]
+
+    if mode == "greedy":
+        accept = _accept_greedy(draft_tokens, logits_at_draft)
+    else:
+        if draft_token_probs is None:
+            raise ValueError("sampling verification needs draft_token_probs")
+        accept = _accept_sampling(draft_tokens, logits_at_draft,
+                                  draft_token_probs, k_acc, temperature)
+
+    relaxed = jnp.zeros_like(accept)
+    if rule == "mars":
+        if use_kernel:
+            from repro.kernels import ops as kops
+            relax = kops.mars_relax(draft_tokens, logits_at_draft, theta)
+        else:
+            relax = mars_relax_mask(draft_tokens, logits_at_draft, theta,
+                                    guard)
+        relaxed = relax & ~accept
+        accept = accept | relax
+
+    run = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+    n_accept = jnp.sum(run, axis=1)                           # (B,)
+    n_relaxed = jnp.sum(run * relaxed.astype(jnp.int32), axis=1)
+
+    extra = _correction_token(
+        target_logits, n_accept, mode=mode, key=k_corr,
+        temperature=temperature, draft_full_probs=draft_full_probs)
+
+    # assemble out_tokens: accepted draft prefix + extra token + padding
+    pos = jnp.arange(k + 1)[None]                             # (1, K+1)
+    draft_pad = jnp.concatenate(
+        [draft_tokens, draft_tokens[:, -1:]], axis=1)
+    out = jnp.where(pos < n_accept[:, None], draft_pad, extra[:, None])
+    out = jnp.where(pos > n_accept[:, None], extra[:, None], out)
+    n_commit = n_accept + 1
+    return VerifyResult(out.astype(jnp.int32), n_commit, n_accept, n_relaxed)

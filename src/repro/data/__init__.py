@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    ByteTokenizer,
+    MarkovCorpus,
+    batch_iterator,
+    make_lm_batches,
+)
+
+__all__ = ["ByteTokenizer", "MarkovCorpus", "batch_iterator",
+           "make_lm_batches"]

@@ -1,0 +1,110 @@
+"""Data pipeline: synthetic corpora with controllable entropy + byte
+tokenizer + LM batching.
+
+The Markov corpus is central to the paper-validation experiments: its
+``temperature`` knob directly controls how often the *trained target model*
+lands in low-margin regimes (near-ties between top candidates) — the regime
+MARS exploits.  Low corpus temperature → decisive continuations → high
+margins; high temperature → frequent near-ties → many relaxation
+opportunities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class ByteTokenizer:
+    """Byte-level tokenizer with BOS/EOS/PAD specials."""
+    PAD, BOS, EOS = 0, 1, 2
+    OFFSET = 3
+
+    @property
+    def vocab_size(self) -> int:
+        return 256 + self.OFFSET
+
+    def encode(self, text: str, *, bos: bool = True, eos: bool = False):
+        ids = [b + self.OFFSET for b in text.encode("utf-8")]
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return np.asarray(ids, np.int32)
+
+    def decode(self, ids) -> str:
+        bs = bytes(int(i) - self.OFFSET for i in ids
+                   if int(i) >= self.OFFSET)
+        return bs.decode("utf-8", errors="replace")
+
+
+@dataclasses.dataclass
+class MarkovCorpus:
+    """Order-2 Markov chain over a small alphabet with a Zipf-ish transition
+    table; ``temperature`` reshapes transition entropy."""
+    vocab_size: int = 64
+    order: int = 2
+    temperature: float = 1.0
+    branching: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        n_ctx = self.vocab_size ** self.order
+        # each context transitions to `branching` candidates with Zipf weights
+        self._succ = rng.integers(0, self.vocab_size,
+                                  size=(n_ctx, self.branching))
+        ranks = np.arange(1, self.branching + 1, dtype=np.float64)
+        base = 1.0 / ranks
+        logits = np.log(base)[None, :] + 0.3 * rng.standard_normal(
+            (n_ctx, self.branching))
+        w = np.exp(logits / max(self.temperature, 1e-3))
+        self._probs = w / w.sum(axis=1, keepdims=True)
+
+    def _ctx_id(self, ctx) -> int:
+        cid = 0
+        for c in ctx:
+            cid = cid * self.vocab_size + int(c)
+        return cid
+
+    def sample(self, length: int, rng: np.random.Generator) -> np.ndarray:
+        out = list(rng.integers(0, self.vocab_size, size=self.order))
+        for _ in range(length - self.order):
+            cid = self._ctx_id(out[-self.order:])
+            j = rng.choice(self.branching, p=self._probs[cid])
+            out.append(int(self._succ[cid, j]))
+        return np.asarray(out, np.int32)
+
+    def sample_batch(self, batch: int, length: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        return np.stack([self.sample(length, rng) for _ in range(batch)])
+
+
+def make_lm_batches(corpus: MarkovCorpus, *, batch: int, seq_len: int,
+                    n_batches: int, seed: int = 0) -> Iterator[dict]:
+    """Yields {"tokens": (B, S+1)} — inputs tokens[:, :-1], labels [:, 1:]."""
+    rng = np.random.default_rng(seed)
+    for i in range(n_batches):
+        toks = corpus.sample_batch(batch, seq_len + 1,
+                                   seed=int(rng.integers(1 << 31)))
+        yield {"tokens": toks}
+
+
+def batch_iterator(tokens: np.ndarray, *, batch: int, seq_len: int,
+                   seed: int = 0, drop_last: bool = True) -> Iterator[dict]:
+    """Chunk a flat token stream into LM batches (file-backed corpora)."""
+    n = (len(tokens) - 1) // seq_len
+    idx = np.arange(n)
+    np.random.default_rng(seed).shuffle(idx)
+    buf = []
+    for i in idx:
+        chunk = tokens[i * seq_len:(i + 1) * seq_len + 1]
+        if len(chunk) < seq_len + 1:
+            continue
+        buf.append(chunk)
+        if len(buf) == batch:
+            yield {"tokens": np.stack(buf).astype(np.int32)}
+            buf = []
+    if buf and not drop_last:
+        yield {"tokens": np.stack(buf).astype(np.int32)}

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the performance-critical compute of MARS serving:
+
+* ``mars_verify`` — fused top-2 + logit-ratio + accept decision in one HBM
+  pass over the target logits (the paper's verification rule as a kernel).
+* ``decode_attn`` — flash-decode GQA attention over the KV cache (the
+  memory-bound core of the parallel verify pass).
+* ``ssd_chunk``  — Mamba2/xLSTM chunked linear-recurrence inner step.
+
+Each kernel ships with ``ref.py`` oracles (pure jnp) and is validated in
+``interpret=True`` mode on CPU; on TPU the same ``pl.pallas_call`` lowers to
+Mosaic.  ``ops.py`` holds the jit'd public wrappers.
+"""
+from repro.kernels import ops
+
+__all__ = ["ops"]

@@ -1,0 +1,120 @@
+"""Flash-decode GQA attention kernel (single query step per sequence).
+
+The verify pass is memory-bound: per new token the whole KV cache streams
+from HBM once.  This kernel tiles the cache length into VMEM blocks and
+keeps the online-softmax state (m, l, acc) in revisited output refs, so HBM
+traffic is exactly one read of K and V plus O(H·D) output — the roofline
+minimum.
+
+Grid: (B, L / BL) with the length axis innermost/arbitrary.
+Block shapes: q (1, H, D); k/v (1, BL, Hkv, D).  D and BL are chosen
+lane-aligned (multiples of 128) by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
+            o_ref, m_ref, l_ref, *, bl: int, n_lblocks: int, window: int,
+            hkv: int, g: int, d: int):
+    lb = pl.program_id(1)
+
+    @pl.when(lb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (H, D)
+    k = k_ref[0].astype(jnp.float32)                 # (BL, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    kpos = kpos_ref[0]                               # (BL,)
+    qpos = qpos_ref[0]                               # scalar-ish (1,)
+
+    qg = q.reshape(hkv, g, d)
+    scores = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)          # (Hkv, G, BL)
+    scores = scores * (1.0 / math.sqrt(d))
+
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window > 0:
+        valid &= kpos > (qpos - window)
+    scores = jnp.where(valid[None, None, :], scores, NEG)
+
+    m_prev = m_ref[...].reshape(hkv, g)              # (Hkv, G)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[..., None])           # (Hkv, G, BL)
+    l_new = l_ref[...].reshape(hkv, g) * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)          # (Hkv, G, D)
+    acc = o_ref[...].reshape(hkv, g, d) * alpha[..., None] + pv
+
+    m_ref[...] = m_new.reshape(1, hkv * g)
+    l_ref[...] = l_new.reshape(1, hkv * g)
+    o_ref[...] = acc.reshape(1, hkv * g, d)
+
+    @pl.when(lb == n_lblocks - 1)
+    def _finish():
+        l = l_ref[...].reshape(hkv, g)
+        o_ref[...] = (o_ref[...].reshape(hkv, g, d)
+                      / jnp.maximum(l, 1e-30)[..., None]).reshape(1, hkv * g, d)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_len", "interpret"))
+def decode_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            k_pos: jnp.ndarray, q_pos: jnp.ndarray, *,
+                            window: int = 0, block_len: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D); k/v: (B, L, Hkv, D); k_pos: (B, L); q_pos: (B,).
+
+    Returns (B, H, D) attention output (float32)."""
+    b, h, d = q.shape
+    l, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bl = min(block_len, l)
+    lp = -(-l // bl) * bl
+    if lp != l:
+        k = jnp.pad(k, ((0, 0), (0, lp - l), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, lp - l), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, lp - l)), constant_values=-1)
+    n_lblocks = lp // bl
+    grid = (b, n_lblocks)
+
+    out, _, _ = pl.pallas_call(
+        functools.partial(_kernel, bl=bl, n_lblocks=n_lblocks, window=window,
+                          hkv=hkv, g=g, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bl, hkv, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bl, hkv, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bl), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+    )(q, k, v, k_pos, q_pos)
+    return out

@@ -1,0 +1,133 @@
+"""Fused MARS verification kernel.
+
+For each draft position (row) the kernel streams the vocab axis through VMEM
+in lane-aligned blocks, keeping a running top-2 (value, index) in registers,
+and on the final block emits the accept decision:
+
+    accept_exact = draft == top1
+    relax        = draft == top2  and  z2 > theta * z1  and  z1 > 0, z2 > 0
+
+One HBM pass over the logits, no full sort / top-k materialisation — this is
+the TPU-native shape of the paper's Algorithm 1 (DESIGN.md §3).
+
+Grid: (rows / BT, V / BV), vocab axis innermost so the running top-2 output
+refs are revisited ("arbitrary" dimension semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _block_top2(blk: jnp.ndarray, col0: jnp.ndarray):
+    """Top-2 values + global indices within a (BT, BV) block."""
+    bt, bv = blk.shape
+    idx1 = jnp.argmax(blk, axis=1)                              # (BT,)
+    v1 = jnp.max(blk, axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    masked = jnp.where(cols == idx1[:, None], NEG, blk)
+    idx2 = jnp.argmax(masked, axis=1)
+    v2 = jnp.max(masked, axis=1)
+    return v1, col0 + idx1.astype(jnp.int32), v2, col0 + idx2.astype(jnp.int32)
+
+
+def _merge_top2(z1, i1, z2, i2, b1, j1, b2, j2):
+    """Merge running top-2 (z1,i1,z2,i2) with a block's (b1,j1,b2,j2)."""
+    # candidates: the four values; result top1 = max(z1, b1)
+    take_b = b1 > z1
+    n1 = jnp.where(take_b, b1, z1)
+    ni1 = jnp.where(take_b, j1, i1)
+    # runner-up = max(min(z1, b1), max(z2, b2))
+    lo = jnp.where(take_b, z1, b1)
+    lo_i = jnp.where(take_b, i1, j1)
+    hi2 = jnp.where(z2 > b2, z2, b2)
+    hi2_i = jnp.where(z2 > b2, i2, j2)
+    take_lo = lo > hi2
+    n2 = jnp.where(take_lo, lo, hi2)
+    ni2 = jnp.where(take_lo, lo_i, hi2_i)
+    return n1, ni1, n2, ni2
+
+
+def _kernel(draft_ref, logits_ref, theta_ref,
+            z1_ref, i1_ref, z2_ref, i2_ref, exact_ref, relax_ref,
+            *, bv: int, n_vblocks: int):
+    vb = pl.program_id(1)
+
+    @pl.when(vb == 0)
+    def _init():
+        z1_ref[...] = jnp.full_like(z1_ref, NEG)
+        z2_ref[...] = jnp.full_like(z2_ref, NEG)
+        i1_ref[...] = jnp.zeros_like(i1_ref)
+        i2_ref[...] = jnp.zeros_like(i2_ref)
+
+    blk = logits_ref[...].astype(jnp.float32)                    # (BT, BV)
+    col0 = vb * bv
+    b1, j1, b2, j2 = _block_top2(blk, col0)
+    z1, i1, z2, i2 = _merge_top2(
+        z1_ref[...], i1_ref[...], z2_ref[...], i2_ref[...], b1, j1, b2, j2)
+    z1_ref[...], i1_ref[...], z2_ref[...], i2_ref[...] = z1, i1, z2, i2
+
+    @pl.when(vb == n_vblocks - 1)
+    def _finish():
+        draft = draft_ref[...]
+        theta = theta_ref[0]
+        exact_ref[...] = (draft == i1).astype(jnp.int32)
+        pos_ok = (z1 > 0.0) & (z2 > 0.0)
+        relax_ref[...] = ((draft == i2) & pos_ok
+                          & (z2 > theta * z1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "block_vocab", "interpret"))
+def mars_verify_kernel(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
+                       theta: float, *, block_rows: int = 8,
+                       block_vocab: int = 2048, interpret: bool = False):
+    """draft_tokens: (T,) int32; logits: (T, V).
+
+    Returns (exact, relax, top1, top2) — all (T,)."""
+    t, v = logits.shape
+    bt = min(block_rows, t)
+    bv = min(block_vocab, v)
+    # pad so grid divides evenly; padded logits are NEG so never win top-2
+    tp = -(-t // bt) * bt
+    vp = -(-v // bv) * bv
+    if (tp, vp) != (t, v):
+        logits = jnp.pad(logits, ((0, tp - t), (0, vp - v)),
+                         constant_values=NEG)
+        draft_tokens = jnp.pad(draft_tokens, (0, tp - t))
+    n_vblocks = vp // bv
+    grid = (tp // bt, n_vblocks)
+
+    theta_arr = jnp.asarray([theta], jnp.float32)
+    out_shapes = [
+        jax.ShapeDtypeStruct((tp,), jnp.float32),   # z1
+        jax.ShapeDtypeStruct((tp,), jnp.int32),     # i1
+        jax.ShapeDtypeStruct((tp,), jnp.float32),   # z2
+        jax.ShapeDtypeStruct((tp,), jnp.int32),     # i2
+        jax.ShapeDtypeStruct((tp,), jnp.int32),     # exact
+        jax.ShapeDtypeStruct((tp,), jnp.int32),     # relax
+    ]
+    row_spec = pl.BlockSpec((bt,), lambda i, j: (i,))
+    outs = pl.pallas_call(
+        functools.partial(_kernel, bv=bv, n_vblocks=n_vblocks),
+        grid=grid,
+        in_specs=[
+            row_spec,
+            pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[row_spec] * 6,
+        out_shape=out_shapes,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+    )(draft_tokens, logits, theta_arr)
+    z1, i1, z2, i2, exact, relax = outs
+    sl = slice(0, t)
+    return (exact[sl].astype(bool), relax[sl].astype(bool),
+            i1[sl], i2[sl])

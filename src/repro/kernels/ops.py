@@ -1,0 +1,54 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced JAX ops, validating semantics; on TPU the
+same code lowers through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attention_kernel
+from repro.kernels.mars_verify import mars_verify_kernel
+from repro.kernels.ssd_chunk import ssd_chunk_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mars_verify(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
+                theta: float):
+    """Fused verify for (B, K) drafts against (B, K, V) logits.
+
+    Returns (exact, relax, top1, top2), each (B, K)."""
+    b, k = draft_tokens.shape
+    v = logits.shape[-1]
+    flat_d = draft_tokens.reshape(b * k)
+    flat_l = logits.reshape(b * k, v)
+    exact, relax, t1, t2 = mars_verify_kernel(
+        flat_d, flat_l, theta, interpret=_interpret())
+    rs = lambda x: x.reshape(b, k)
+    return rs(exact), rs(relax), rs(t1), rs(t2)
+
+
+def mars_relax(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """(B, K) relaxation mask — drop-in for verify.mars_relax_mask."""
+    _, relax, _, _ = mars_verify(draft_tokens, logits, theta)
+    return relax
+
+
+def decode_attention(q, k, v, k_pos, q_pos, *, window: int = 0,
+                     block_len: int = 512):
+    return decode_attention_kernel(q, k, v, k_pos, q_pos, window=window,
+                                   block_len=block_len,
+                                   interpret=_interpret())
+
+
+def ssd_chunk(c, b, v, cum, scale, h0):
+    return ssd_chunk_kernel(c, b, v, cum, scale, h0, interpret=_interpret())

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mars_verify_ref(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
+                    theta: float):
+    """Oracle for mars_verify_kernel: (exact, relax, top1, top2)."""
+    vals, idx = jax.lax.top_k(logits.astype(jnp.float32), 2)
+    z1, z2 = vals[..., 0], vals[..., 1]
+    top1, top2 = idx[..., 0], idx[..., 1]
+    exact = draft_tokens == top1
+    relax = ((draft_tokens == top2) & (z1 > 0.0) & (z2 > 0.0)
+             & (z2 > theta * z1))
+    return exact, relax, top1.astype(jnp.int32), top2.astype(jnp.int32)
+
+
+def decode_attention_ref(q, k, v, k_pos, q_pos, *, window: int = 0):
+    """Oracle for decode_attention_kernel.  q: (B,H,D); k/v: (B,L,Hkv,D)."""
+    b, h, d = q.shape
+    l, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,blkd->bkgl", qg, kf) / math.sqrt(d)
+    valid = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window > 0:
+        valid &= k_pos > (q_pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d)
+
+
+def ssd_chunk_ref(c, b, v, cum, scale, h0):
+    """Oracle for ssd_chunk_kernel (one chunk, batched over B,H)."""
+    li = cum[:, :, None, :]
+    si = cum[:, None, :, :]
+    decay = jnp.exp(jnp.minimum(li - si, 0.0))        # (B,Q,Q,H)
+    q = cum.shape[1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("blhn,bshn->blsh", c.astype(jnp.float32),
+                        b.astype(jnp.float32))
+    scores = scores * decay * scale[:, None, :, :]
+    y_intra = jnp.einsum("blsh,bshp->blhp", scores, v.astype(jnp.float32))
+
+    total = cum[:, -1]                                 # (B,H)
+    w = jnp.exp(total[:, None] - cum) * scale          # (B,Q,H)
+    state = jnp.einsum("bshn,bshp->bhnp", b * w[..., None],
+                       v.astype(jnp.float32))
+    state = state + jnp.exp(total)[..., None, None] * h0
+
+    y_inter = jnp.einsum("blhn,bhnp->blhp",
+                         c * jnp.exp(cum)[..., None], h0)
+    return y_intra + y_inter, state

@@ -1,0 +1,97 @@
+"""SSD chunk kernel: intra-chunk linear-recurrence compute for Mamba2/xLSTM.
+
+Computes, for one (batch, head) tile and one chunk of length Q:
+
+    scores[l, s] = (C_l · B_s) * exp(cum_l - cum_s) * scale_s   (s <= l)
+    Y_intra      = scores @ V                                (Q, P)
+    state        = (B * w)^T @ V,  w_s = exp(cum_Q - cum_s) * scale_s
+    Y_inter      = (C * exp(cum)) @ H_prev                    (Q, P)
+
+i.e. everything inside one chunk of ``chunked_linear_recurrence`` — the MXU
+matmul-heavy part.  The cross-chunk scan stays in XLA (it is a tiny
+(N, P)-state recurrence).  Q, N, P are picked MXU-friendly by the caller
+(Q=128/256, N=64/128, P=64/128).
+
+Grid: (B, H) — fully parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(c_ref, b_ref, v_ref, cum_ref, scale_ref, h0_ref,
+            y_ref, state_ref):
+    c = c_ref[0, :, 0].astype(jnp.float32)       # (Q, N)
+    bmat = b_ref[0, :, 0].astype(jnp.float32)    # (Q, N)
+    vmat = v_ref[0, :, 0].astype(jnp.float32)    # (Q, P)
+    cum = cum_ref[0, :, 0].astype(jnp.float32)   # (Q,)
+    scale = scale_ref[0, :, 0].astype(jnp.float32)
+    h0 = h0_ref[0, 0].astype(jnp.float32)        # (N, P)
+
+    q = c.shape[0]
+    li = cum[:, None]
+    si = cum[None, :]
+    decay = jnp.exp(jnp.minimum(li - si, 0.0))
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(rows >= cols, decay, 0.0)
+
+    scores = jax.lax.dot_general(
+        c, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (Q, Q)
+    scores = scores * decay * scale[None, :]
+    y_intra = jnp.dot(scores, vmat, preferred_element_type=jnp.float32)
+
+    total = cum[-1]
+    w = jnp.exp(total - cum) * scale             # (Q,)
+    state = jax.lax.dot_general(
+        bmat * w[:, None], vmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (N, P)
+    state = state + jnp.exp(total) * h0
+
+    y_inter = jnp.dot(c * jnp.exp(cum)[:, None], h0,
+                      preferred_element_type=jnp.float32)
+
+    y_ref[...] = (y_intra + y_inter)[None, :, None]
+    state_ref[...] = state[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_kernel(c, b, v, cum, scale, h0, *, interpret: bool = False):
+    """One chunk for all (batch, head) tiles.
+
+    c, b : (B, Q, H, N);  v: (B, Q, H, P);  cum/scale: (B, Q, H);
+    h0   : (B, H, N, P)   — state entering the chunk.
+
+    Returns (y (B, Q, H, P), state_out (B, H, N, P))."""
+    bsz, q, h, n = b.shape
+    p = v.shape[-1]
+    grid = (bsz, h)
+    y, state = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel")),
+    )(c, b, v, cum, scale, h0)
+    return y, state

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh and extract roofline inputs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape decode_32k [--multi-pod] [--out experiments/dryrun]
+
+For every combination this:
+  1. builds the 16x16 (or 2x16x16) mesh over 512 forced host devices;
+  2. builds abstract params / optimizer / cache / batch (ShapeDtypeStruct —
+     nothing is allocated);
+  3. jit-lowers the right step (train_step / forward-prefill / serve_step)
+     with explicit NamedShardings from the logical axis rules;
+  4. ``.compile()`` — a sharding mismatch, OOM-at-compile or unsupported
+     collective fails here, which is the point of the exercise;
+  5. records memory_analysis / cost_analysis / collective bytes to JSON.
+
+NOTE the XLA_FLAGS assignment above MUST run before jax initialises — this
+module must not be imported after jax.devices() has been called elsewhere.
+Smoke tests and benchmarks do NOT import this module, so they see 1 device.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape, list_archs, SHAPES
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import adamw
+from repro.sharding import axis_rules, param_specs
+from repro.sharding.rules import single_pod_rules
+from repro.train.step import make_train_step
+from repro.launch.shardplan import (ARCH_OVERRIDES, FULL_ATTN_ARCHS,
+    LONG_WINDOW, build_case, cache_specs, model_flops, rules_for)
+from repro.utils.costs import analytic_bytes, analytic_flops
+from repro.utils.hlo import (collective_bytes,
+    collective_bytes_loop_aware, duplicate_collectives)
+from repro.utils.lowering import dryrun_lowering
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Optional[str] = None, verify_tokens: int = 1,
+             save_hlo: bool = False, variant: Optional[str] = None,
+             ) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    fn, args, specs, rules, meta, model = build_case(
+        arch, shape_name, multi_pod=multi_pod, verify_tokens=verify_tokens,
+        variant=variant)
+    shape = get_shape(shape_name)
+
+    def to_shardings(spec_tree, arg_tree):
+        return jax.tree.map(
+            lambda s, a: NamedSharding(mesh, s if isinstance(s, P) else P()),
+            spec_tree, arg_tree,
+            is_leaf=lambda x: isinstance(x, P) or x is None)
+
+    t0 = time.time()
+    result: Dict[str, Any] = dict(meta, mesh="2x16x16" if multi_pod else "16x16",
+                                  chips=n_chips, ok=False)
+    # decode_32k lowers with python-unrolled layers + loop-free attention
+    # (exact HLO costs); the other shapes keep the production lax.scan
+    # lowering (fast compiles) and correct in-loop collectives by trip count
+    # (utils.hlo.collective_bytes_loop_aware) — compute/memory terms use the
+    # analytic model either way.
+    attn_chunk = (1 << 22) if shape.kind == "decode" else None
+    unroll = shape.name == "decode_32k"
+    try:
+        in_shardings = tuple(to_shardings(s, a)
+                             for s, a in zip(specs, args))
+        with jax.set_mesh(mesh):
+            with axis_rules(rules), dryrun_lowering(
+                    unroll_layers=unroll, attn_chunk=attn_chunk):
+                lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        if unroll:
+            coll, counts = collective_bytes(hlo, default_group=16)
+        else:
+            coll, counts = collective_bytes_loop_aware(hlo, default_group=16)
+        dup = duplicate_collectives(hlo)
+
+        cfg_full = get_config(arch)
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        a_flops = analytic_flops(cfg_full, shape, window=meta["window"],
+                                 verify_tokens=verify_tokens)
+        a_bytes = analytic_bytes(cfg_full, shape, window=meta["window"],
+                                 verify_tokens=verify_tokens)
+        mflops = model_flops(cfg_full, shape, verify_tokens)
+        coll_total = float(sum(coll.values()))
+
+        # roofline terms (per-chip seconds).  Compute/memory use whichever of
+        # {HLO, analytic} is LARGER: HLO undercounts loop bodies, the
+        # analytic model can miss compiler-introduced work — max() is the
+        # honest bound.  Collectives come from the (loop-free-layers) HLO.
+        eff_flops = max(flops, a_flops)
+        eff_bytes = max(bytes_acc, a_bytes)
+
+        result.update(
+            ok=True,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            hlo_flops=flops, hlo_bytes=bytes_acc,
+            analytic_flops=a_flops, analytic_bytes=a_bytes,
+            model_flops=mflops,
+            flops_ratio=(mflops / eff_flops if eff_flops else None),
+            collective_bytes=coll, collective_counts=counts,
+            collective_bytes_total=coll_total,
+            duplicate_collectives=dup,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+            roofline={
+                "compute_s": eff_flops / n_chips / PEAK_FLOPS,
+                "memory_s": eff_bytes / n_chips / HBM_BW,
+                # collective bytes are already per-participant estimates
+                "collective_s": coll_total / ICI_BW,
+            },
+        )
+        terms = result["roofline"]
+        result["bottleneck"] = max(terms, key=lambda k: terms[k])
+        if save_hlo and out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir, f"{arch}_{shape_name}_"
+                    f"{'mp' if multi_pod else 'sp'}.hlo.txt"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — report compile failures
+        result["error"] = f"{type(e).__name__}: {e}"[:2000]
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        vtag = f"_{variant}" if variant else ""
+        ttag = f"_t{verify_tokens}" if verify_tokens != 1 else ""
+        fname = (f"{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}"
+                 f"{vtag}{ttag}.json")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in SHAPES] + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--verify-tokens", type=int, default=1)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.skip_existing and args.out:
+                    vtag = f"_{args.variant}" if args.variant else ""
+                    ttag = (f"_t{args.verify_tokens}"
+                            if args.verify_tokens != 1 else "")
+                    fname = os.path.join(
+                        args.out, f"{arch}_{shape}_"
+                        f"{'mp' if mp else 'sp'}{vtag}{ttag}.json")
+                    if os.path.exists(fname):
+                        try:
+                            ok = json.load(open(fname)).get("ok")
+                        except Exception:
+                            ok = False
+                        if ok:
+                            print(f"SKIP {arch} × {shape} × "
+                                  f"{'2x16x16' if mp else '16x16'}")
+                            continue
+                r = run_case(arch, shape, multi_pod=mp, out_dir=args.out,
+                             verify_tokens=args.verify_tokens,
+                             save_hlo=args.save_hlo, variant=args.variant)
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                if r["ok"]:
+                    rf = r["roofline"]
+                    print(f"OK   {tag}: bottleneck={r['bottleneck']} "
+                          f"compute={rf['compute_s']:.3e}s "
+                          f"memory={rf['memory_s']:.3e}s "
+                          f"coll={rf['collective_s']:.3e}s "
+                          f"(compile {r['compile_s']}s)")
+                else:
+                    n_fail += 1
+                    print(f"FAIL {tag}: {r['error'][:300]}")
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

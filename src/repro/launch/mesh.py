@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Function (not module-level constant) so importing never touches jax device
+state.  The dry-run forces 512 host-platform devices; the single-pod mesh
+uses the first 256 of them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
+    """Tiny mesh over the real devices (tests on 1 CPU device)."""
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev, axes)

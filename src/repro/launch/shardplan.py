@@ -1,0 +1,260 @@
+"""Sharding plan for the production mesh: logical-rule resolution per
+(arch × shape), cache partition specs, and the abstract case builder used by
+the dry-run.  Importable WITHOUT forcing 512 devices (tests use it too)."""
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape, list_archs, SHAPES
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.optim import adamw
+from repro.sharding import axis_rules, param_specs
+from repro.sharding.rules import single_pod_rules
+from repro.train.step import make_train_step
+
+# Per-arch logical-rule overrides (see DESIGN.md §5):
+#   dbrx: expert ff additionally sharded over "data" (weights don't fit TP16)
+#   granite-moe: 40 experts ∤ 16 -> replicate experts; 24 heads ∤ 16 ->
+#     replicate head activations (weights still shard on flat dims)
+#   whisper: 20 heads ∤ 16 -> same
+ARCH_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    "dbrx-132b": {"ff": "data"},
+    # 40 experts ∤ 16, 24 heads ∤ 16, vocab 49155 ∤ 16
+    "granite-moe-3b-a800m": {"experts": None, "heads": None, "ff": "model",
+                             "vocab": None},
+    # 20 heads ∤ 16; vocab 51866 ∤ 16 (133 MB table — replicate)
+    "whisper-large-v3": {"heads": None, "vocab": None},
+}
+
+# Full-attention archs get a sliding-window variant for long_500k
+FULL_ATTN_ARCHS = {"chatglm3-6b", "deepseek-67b", "starcoder2-15b",
+                   "granite-8b", "chameleon-34b", "dbrx-132b"}
+LONG_WINDOW = 4096
+
+
+# §Perf variants — named rule tweaks applied on top of the baseline plan.
+# Baselines are always recorded WITHOUT a variant; the perf loop re-lowers
+# with one of these and compares roofline terms.
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    # H4: see MODEL_VARIANTS["experts_pad48"] — re-enable expert sharding
+    "experts_pad48": {"experts": "model", "ff": None},
+    # H2: keep embedding/lm_head d_model dim unsharded during training so
+    # the head matmul does not emit data-axis partial-sum logit all-reduces
+    "head_nofsdp": {"fsdp_head": None},
+    # H1: mlstm state sharded on batch only (dk-axis sharding forces a
+    # per-layer state all-gather in the recurrence einsum)
+    "mlstm_state_batch": {"mlstm_state_axis": None},
+    # combinable: replicate the whole cache length (diagnostic)
+    "kv_unsharded": {"kv_seq": None},
+    # H3: shard kv cache length on data instead of model for decode
+    "kv_on_data": {"kv_seq": "data"},
+    # H1 iteration 3: tensor parallelism off entirely (weights replicated,
+    # batch-parallel only) — for small models at decode the per-layer
+    # model<->data activation all-to-alls cost more than re-reading weights
+    "no_tp": {"heads": None, "ssm_heads": None, "ff": None, "vocab": None,
+              "experts": None, "mlstm_state_axis": None, "kv_seq": None},
+}
+
+# Variants that change the MODEL (not the sharding rules): applied as
+# dataclasses.replace on the arch config at build time.
+MODEL_VARIANTS: Dict[str, Dict[str, Any]] = {
+    # H4: see MODEL_VARIANTS["experts_pad48"] — re-enable expert sharding
+    "experts_pad48": {"experts": "model", "ff": None},
+    # H3: parallel attention+FFN residual -> one TP all-reduce per layer
+    "parallel_block": {"parallel_residual": True},
+    # H3 iteration 3: dynamic_update_slice cache writes (uniform index)
+    "uniform_slots": {"cache_uniform_slots": True},
+    # H3 combined best
+    "verify_opt": {"parallel_residual": True, "cache_uniform_slots": True},
+    # H4 (granite-moe): pad 40 experts to 48 so the expert dim shards on the
+    # 16-way model axis (3/chip) — dispatch stays shard-local instead of
+    # broadcasting every token's contribution to all replicas
+    "experts_pad48": {"n_experts": 48},
+}
+
+
+def rules_for(arch: str, shape: ShapeConfig, *, multi_pod: bool,
+              variant: Optional[str] = None):
+    batch_axes: Any = ("pod", "data") if multi_pod else ("data",)
+    if shape.global_batch == 1:
+        batch_axes = None
+    kind = shape.kind
+    rules = single_pod_rules()
+    rules["batch"] = batch_axes
+    rules["fsdp"] = (("pod", "data") if multi_pod else ("data",)) \
+        if kind == "train" else None
+    rules["fsdp_head"] = rules["fsdp"]
+    if kind == "decode":
+        rules["kv_seq"] = "model" if shape.name == "decode_32k" else "data"
+    else:
+        rules["kv_seq"] = None
+    ov = dict(ARCH_OVERRIDES.get(arch, {}))
+    if kind == "train" and ov.get("ff") == "data":
+        ov["ff"] = None          # fsdp already owns "data" for weights
+    rules.update(ov)
+    if variant and variant in VARIANTS:
+        rules.update(VARIANTS[variant])
+    return rules
+
+
+def _bf16_structs(tree):
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return jax.tree.map(cast, tree)
+
+
+def _cache_spec_for_path(path: str, ndim: int, rules) -> P:
+    b = rules.get("batch")
+    kv = rules.get("kv_seq")
+    sh = rules.get("ssm_heads")
+
+    def pad(spec):
+        return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+    if path.endswith("index"):
+        return P(b)
+    if "cross_k" in path or "cross_v" in path:
+        return pad([b, None, None, None])
+    if path.endswith("/k") or path.endswith("/v"):
+        return pad([b, kv, None, None])
+    if path.endswith("pos"):
+        return pad([b, kv])
+    if "mamba/conv" in path:
+        return pad([b, None, sh])
+    if "mamba/state" in path:
+        return pad([b, sh, None, None])
+    if "mlstm/state" in path:
+        st = rules.get("mlstm_state_axis", sh)
+        return pad([b, None, st, None])   # shard dk (baseline)
+    if "mlstm/m" in path:
+        return pad([b, None])
+    if "slstm/" in path:
+        return pad([b, None])
+    return P()
+
+
+def cache_specs(cache_struct, rules):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_struct)
+    specs = []
+    for pth, leaf in flat:
+        name = "/".join(str(getattr(k, "key", k)) for k in pth)
+        specs.append(_cache_spec_for_path(name, leaf.ndim, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def build_case(arch: str, shape_name: str, *, multi_pod: bool,
+               verify_tokens: int = 1, variant=None):
+    """Returns (fn, arg_structs, in_specs, rules, meta)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    rules = rules_for(arch, shape, multi_pod=multi_pod, variant=variant)
+
+    window = None
+    if shape.name == "long_500k" and arch in FULL_ATTN_ARCHS:
+        window = LONG_WINDOW
+    if variant and variant in MODEL_VARIANTS:
+        cfg = dataclasses.replace(cfg, **MODEL_VARIANTS[variant])
+    model = build_model(cfg, sliding_window=window)
+
+    rng = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(model.init, rng)
+    b, s = shape.global_batch, shape.seq_len
+
+    meta = {"arch": arch, "shape": shape_name, "variant": variant,
+            "kind": shape.kind, "multi_pod": multi_pod,
+            "verify_tokens": verify_tokens,
+            "params": int(sum(np.prod(x.shape)
+                              for x in jax.tree.leaves(params_struct))),
+            "window": window}
+
+    with axis_rules(rules):
+        pspecs = param_specs(params_struct)
+
+    if shape.kind == "train":
+        tx = adamw(1e-4)
+        opt_struct = jax.eval_shape(tx.init, params_struct)
+        # mu/nu mirror param specs; step replicated
+        from repro.optim.adamw import AdamWState
+        with axis_rules(rules):
+            opt_specs = AdamWState(P(), param_specs(params_struct),
+                                   param_specs(params_struct))
+        batch_struct = {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+        if cfg.family == "audio":
+            batch_struct["encoder_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        bspecs = {"tokens": P(rules["batch"], None)}
+        if cfg.family == "audio":
+            bspecs["encoder_frames"] = P(rules["batch"], None, None)
+        remat_policy = "dots" if variant == "remat_dots" else None
+        step = make_train_step(model, tx, remat=True,
+                               remat_policy=remat_policy)
+
+        def fn(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        args = (params_struct, opt_struct, batch_struct)
+        specs = (pspecs, opt_specs, bspecs)
+
+    elif shape.kind == "prefill":
+        params_struct = _bf16_structs(params_struct)
+        batch_struct = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "audio":
+            batch_struct["encoder_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        bspecs = {"tokens": P(rules["batch"], None)}
+        if cfg.family == "audio":
+            bspecs["encoder_frames"] = P(rules["batch"], None, None)
+
+        def fn(params, batch):
+            logits, aux = model.forward(params, batch)
+            return logits
+
+        args = (params_struct, batch_struct)
+        specs = (pspecs, bspecs)
+
+    else:  # decode
+        params_struct = _bf16_structs(params_struct)
+        enc_struct = None
+        if cfg.family == "audio":
+            enc_struct = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        cache_struct = jax.eval_shape(
+            lambda p, f: model.init_cache(p, b, s, encoder_frames=f),
+            params_struct, enc_struct)
+        cspecs = cache_specs(cache_struct, rules)
+        t = verify_tokens
+        tok_struct = jax.ShapeDtypeStruct((b, t), jnp.int32)
+
+        def fn(params, tokens, cache):
+            positions = cache["index"][:, None] + \
+                jnp.arange(t, dtype=jnp.int32)[None]
+            logits, new_cache = model.decode(params, tokens, positions, cache)
+            return logits, new_cache
+
+        args = (params_struct, tok_struct, cache_struct)
+        specs = (pspecs, P(rules["batch"], None), cspecs)
+
+    return fn, args, specs, rules, meta, model
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig,
+                verify_tokens: int = 1) -> float:
+    """6·N·D (train) / 2·N_active·D (inference) reference FLOPs."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch * verify_tokens
+
+

@@ -1,0 +1,60 @@
+"""Training launcher: train a (reduced) assigned architecture on the
+synthetic corpus and checkpoint it for the serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch granite-8b --steps 200 --batch 8 --seq 64
+
+Full configs are exercised through the multi-pod dry-run
+(repro.launch.dryrun); this launcher runs REAL steps at CPU scale.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_smoke, list_archs
+from repro.data import MarkovCorpus, make_lm_batches
+from repro.models import build_model
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--corpus-temp", type=float, default=1.2)
+    ap.add_argument("--ckpt-dir", default="experiments/models")
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_smoke(args.arch), dtype="float32",
+                              vocab_size=args.vocab)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"training {args.arch} (reduced, {n:,} params) "
+          f"for {args.steps} steps ...")
+
+    corpus = MarkovCorpus(vocab_size=args.vocab,
+                          temperature=args.corpus_temp, seed=0)
+    trainer = Trainer(model, TrainerConfig(
+        lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
+        total_steps=args.steps, log_every=max(args.steps // 10, 1),
+        remat=args.remat))
+    batches = make_lm_batches(corpus, batch=args.batch, seq_len=args.seq,
+                              n_batches=args.steps)
+    params, hist = trainer.fit(params, batches)
+    path = save_checkpoint(args.ckpt_dir, args.steps, params, name=args.arch)
+    print(f"checkpoint: {path}")
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

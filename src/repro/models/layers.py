@@ -1,0 +1,568 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention (blockwise online
+softmax, ring-buffer sliding-window KV cache), MLPs and capacity-based MoE.
+
+Conventions
+-----------
+* Parameters are plain nested dicts of ``jnp.ndarray`` (no flax in env).
+* Layer stacks keep a leading ``n_layers`` dim and are consumed by
+  ``jax.lax.scan`` so HLO size is independent of depth.
+* Activations are computed in ``cfg.dtype``; softmax statistics in float32.
+* ``sharding.constrain`` annotates logical axes; it is a no-op outside a
+  rules context so unit tests on one device are untouched.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from repro.utils.lowering import attn_chunk_override
+
+Params = Dict[str, jnp.ndarray]
+
+DEFAULT_ATTN_CHUNK = 1024
+_NEG_INF = -1e9
+_INVALID_POS = -(1 << 30)
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_norm(cfg: ModelConfig, key) -> Params:
+    p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.norm_variant == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_variant == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def _rms_head_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, T, H, D); positions: (B, T) int32.
+
+    ``fraction`` < 1 rotates only the first ``fraction * D`` channels
+    (chatglm-style partial rotary)."""
+    b, t, h, d = x.shape
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None] * freq[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, blockwise online softmax, optional sliding window)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, *, cross: bool = False) -> Params:
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": _dense_init(kq, (d, cfg.n_heads * hd)),
+        "wk": _dense_init(kk, (d, cfg.n_kv_heads * hd)),
+        "wv": _dense_init(kv, (d, cfg.n_kv_heads * hd)),
+        "wo": _dense_init(ko, (cfg.n_heads * hd, d)),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    if cfg.use_qk_norm:
+        p["q_norm_scale"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm_scale"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _pad_to_multiple(x: jnp.ndarray, axis: int, multiple: int, value=0):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def merge_attention_partials(*partials):
+    """Merge (m, l, o) online-softmax partials from disjoint KV sets and
+    normalise.  Shapes: m/l (B,T,Hkv,G), o (B,T,Hkv,G,D)."""
+    m = partials[0][0]
+    for p in partials[1:]:
+        m = jnp.maximum(m, p[0])
+    l = jnp.zeros_like(partials[0][1])
+    o = jnp.zeros_like(partials[0][2])
+    for (mi, li, oi) in partials:
+        alpha = jnp.exp(mi - m)
+        l = l + li * alpha
+        o = o + oi * alpha[..., None]
+    return o / jnp.maximum(l[..., None], 1e-30)
+
+
+def dense_masked_attention_partial(q, k, v, mask):
+    """Unnormalised attention partial over a small dense KV block with an
+    explicit (T, S) boolean mask (tree-ancestry attention).
+
+    q: (B,T,H,D); k/v: (B,S,Hkv,D); mask: (T,S) or (B,T,S).
+    Returns (m, l, o) in blockwise_attention's partial format."""
+    b, t, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, t, hkv, g, d)
+    scores = jnp.einsum("btkgd,bskd->btkgc".replace("c", "s"), qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(d)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, :, None, None, :], scores, _NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    probs = jnp.exp(scores - m[..., None])
+    l = jnp.sum(probs, axis=-1)
+    o = jnp.einsum("btkgs,bskd->btkgd", probs.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                        *, window: int = 0, causal: bool = True,
+                        chunk: int = DEFAULT_ATTN_CHUNK,
+                        return_partial: bool = False) -> jnp.ndarray:
+    """Online-softmax attention, scanning over KV chunks.
+
+    q: (B, T, H, D); k/v: (B, S, Hkv, D); q_pos: (B, T); k_pos: (B, S).
+    Entries with k_pos < 0 are treated as invalid (masked out everywhere).
+    Memory is bounded by the (B, T, H, chunk) score block.
+    With ``return_partial`` the unnormalised (m, l, o) triple is returned
+    for merging with other KV sets (tree attention).
+    """
+    b, t, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, t, hkv, g, d)
+
+    chunk = attn_chunk_override() or chunk
+    chunk = min(chunk, s)
+    k = _pad_to_multiple(k, 1, chunk)
+    v = _pad_to_multiple(v, 1, chunk)
+    k_pos = _pad_to_multiple(k_pos, 1, chunk, value=_INVALID_POS)
+    n_chunks = k.shape[1] // chunk
+
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, hkv, d), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(b, n_chunks, chunk), 1, 0)
+
+    m0 = jnp.full((b, t, hkv, g), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, t, hkv, g), jnp.float32)
+    o0 = jnp.zeros((b, t, hkv, g, d), jnp.float32)
+
+    def step(carry, xs):
+        m, l, o = carry
+        kci, vci, pci = xs
+        scores = jnp.einsum(
+            "btkgd,bckd->btkgc", qg, kci, preferred_element_type=jnp.float32
+        ) * scale
+        valid = pci[:, None, :] >= 0                      # (B, 1, C)
+        if causal:
+            valid &= pci[:, None, :] <= q_pos[:, :, None]  # (B, T, C)
+        if window > 0:
+            valid &= pci[:, None, :] > (q_pos[:, :, None] - window)
+        scores = jnp.where(valid[:, :, None, None, :], scores, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        probs = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + jnp.sum(probs, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "btkgc,bckd->btkgd", probs.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, o_new), None
+
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, pc))
+    if return_partial:
+        return m, l, o
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def causal_attention_unrolled(q, k, v, q_pos, k_pos, *, window: int = 0,
+                              chunk: int = DEFAULT_ATTN_CHUNK) -> jnp.ndarray:
+    """Block-causal attention that skips fully-masked upper-triangular KV
+    blocks (a §Perf optimisation over ``blockwise_attention`` for the
+    self-attention train/prefill path: ~2x fewer score FLOPs at long S).
+
+    Requires q and k to cover the same positions block-aligned (q_pos ==
+    k_pos), which holds for train/prefill."""
+    b, t, h, d = q.shape
+    assert k.shape[1] == t, "unrolled path expects self-attention"
+    chunk = min(chunk, t)
+    qp = _pad_to_multiple(q, 1, chunk)
+    kp = _pad_to_multiple(k, 1, chunk)
+    vp = _pad_to_multiple(v, 1, chunk)
+    qpos = _pad_to_multiple(q_pos, 1, chunk, value=_INVALID_POS)
+    kpos = _pad_to_multiple(k_pos, 1, chunk, value=_INVALID_POS)
+    n = qp.shape[1] // chunk
+    outs = []
+    for i in range(n):
+        qi = qp[:, i * chunk:(i + 1) * chunk]
+        qpi = qpos[:, i * chunk:(i + 1) * chunk]
+        # only attend to kv blocks j <= i (block-causal prefix)
+        lo = 0
+        if window > 0:
+            lo = max(0, (i * chunk - window - chunk + 1) // chunk)
+        hi = (i + 1) * chunk
+        outs.append(
+            blockwise_attention(
+                qi, kp[:, lo * chunk:hi], vp[:, lo * chunk:hi],
+                qpi, kpos[:, lo * chunk:hi],
+                window=window, causal=True, chunk=chunk,
+            )
+        )
+    return jnp.concatenate(outs, axis=1)[:, :t]
+
+
+# Extra ring slots used as a scratch target for masked-out tokens (keeps the
+# data region aligned for kv_seq sharding; 8 trash slots, queries never see
+# them because their stored pos stays invalid).
+TRASH_SLOTS = 16
+
+
+def make_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         *, n_layers: Optional[int] = None) -> Params:
+    """Ring-buffer KV cache.  If ``cfg.sliding_window`` > 0 the buffer holds
+    only ``window`` slots; absolute positions are tracked in ``pos`` so a
+    single masking path serves both full and windowed attention."""
+    length = max_len
+    if cfg.sliding_window:
+        length = min(max_len, cfg.sliding_window)
+    length += TRASH_SLOTS
+    hd, hkv = cfg.head_dim, cfg.n_kv_heads
+    dt = dtype_of(cfg)
+    shape_kv = (batch, length, hkv, hd)
+    shape_pos = (batch, length)
+    if n_layers is not None:
+        shape_kv = (n_layers,) + shape_kv
+        shape_pos = (n_layers,) + shape_pos
+    return {
+        "k": jnp.zeros(shape_kv, dt),
+        "v": jnp.zeros(shape_kv, dt),
+        "pos": jnp.full(shape_pos, _INVALID_POS, jnp.int32),
+    }
+
+
+def _cache_write(cache: Params, new_k, new_v, positions,
+                 uniform: bool = False) -> Params:
+    """Write T new kv entries at per-batch positions (ring indexed).
+
+    Entries with position < 0 (masked-out tokens) land in the trash slots
+    past the data ring and keep an invalid stored pos.
+
+    ``uniform``: all batch rows share positions[0] (uniform serving step) —
+    write with one dynamic_update_slice on the length axis, which SPMD
+    routes to the owning shard instead of broadcasting the updates."""
+    b, t = positions.shape
+    if uniform:
+        ring = cache["k"].shape[1] - TRASH_SLOTS
+        start = positions[0, 0] % ring
+        zero = jnp.zeros((), start.dtype)
+        return {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], new_k.astype(cache["k"].dtype),
+                (zero, start, zero, zero)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], new_v.astype(cache["v"].dtype),
+                (zero, start, zero, zero)),
+            "pos": jax.lax.dynamic_update_slice(
+                cache["pos"], positions.astype(jnp.int32), (zero, start)),
+        }
+    ring = cache["k"].shape[1] - TRASH_SLOTS
+    valid = positions >= 0
+    slots = jnp.where(valid, positions % ring,
+                      ring + (jnp.arange(t, dtype=positions.dtype) % TRASH_SLOTS)[None])
+    b_idx = jnp.arange(b)[:, None]
+    stored_pos = jnp.where(valid, positions, _INVALID_POS)
+    return {
+        "k": cache["k"].at[b_idx, slots].set(new_k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[b_idx, slots].set(new_v.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[b_idx, slots].set(stored_pos.astype(jnp.int32)),
+    }
+
+
+def attention_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                      positions: jnp.ndarray, *,
+                      cache: Optional[Params] = None,
+                      kv_source: Optional[jnp.ndarray] = None,
+                      causal: bool = True,
+                      window: Optional[int] = None,
+                      chunk: int = DEFAULT_ATTN_CHUNK,
+                      use_unrolled: bool = False,
+                      tree_mask: Optional[jnp.ndarray] = None,
+                      ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """GQA attention.
+
+    * ``cache`` is None: full self-attention (train / prefill / encoder).
+    * ``cache`` given: writes the new kv at ``positions`` then attends over
+      the cache (decode / speculative verify with T >= 1 new tokens).
+    * ``kv_source`` given: cross attention (whisper decoder); kv come from
+      the source sequence and no causal mask is applied.
+    * ``tree_mask`` (T, T) given with ``cache``: VIRTUAL tree attention —
+      the T new tokens are NOT written to the cache; each attends the cache
+      prefix (position-masked) plus the tree nodes its mask row allows
+      (ancestry).  Used by tree-draft verification; the engine commits the
+      accepted path afterwards with a masked regular decode.
+    """
+    b, t, d = x.shape
+    hd = cfg.head_dim
+    window = cfg.sliding_window if window is None else window
+
+    q = x @ p["wq"].astype(x.dtype)
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.n_heads, hd)
+
+    kv_in = x if kv_source is None else kv_source
+    k = kv_in @ p["wk"].astype(x.dtype)
+    v = kv_in @ p["wv"].astype(x.dtype)
+    if cfg.use_bias:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(b, kv_in.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(b, kv_in.shape[1], cfg.n_kv_heads, hd)
+
+    if cfg.use_qk_norm:
+        q = _rms_head_norm(q, p["q_norm_scale"], cfg.norm_eps)
+        k = _rms_head_norm(k, p["k_norm_scale"], cfg.norm_eps)
+
+    if kv_source is None and cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    # force the activation dtype BEFORE any cache scatter: otherwise XLA can
+    # hoist the cast past the resharding gather and move f32 bytes (§Perf)
+    k = k.astype(x.dtype)
+    v = v.astype(x.dtype)
+
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if kv_source is not None:
+        # cross attention: attend over the full source, no causality
+        s = kv_source.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        out = blockwise_attention(q, k, v, positions, k_pos,
+                                  window=0, causal=False, chunk=chunk)
+    elif cache is None:
+        if use_unrolled:
+            out = causal_attention_unrolled(q, k, v, positions, positions,
+                                            window=window, chunk=chunk)
+        else:
+            out = blockwise_attention(q, k, v, positions, positions,
+                                      window=window, causal=causal,
+                                      chunk=chunk)
+    elif tree_mask is not None:
+        # virtual tree attention: cache prefix partial + dense ancestry
+        # block.  The cache may hold stale entries at positions >= the root
+        # position (rejected drafts from earlier cycles that were never
+        # overwritten), so the prefix cutoff is root_pos - 1 for every node;
+        # tree-internal attention is fully described by ``tree_mask``.
+        root_pos = positions[:, :1]                     # node 0 == tree root
+        cache_qpos = jnp.broadcast_to(root_pos - 1, positions.shape)
+        p1 = blockwise_attention(q, cache["k"], cache["v"], cache_qpos,
+                                 cache["pos"], window=window, causal=True,
+                                 chunk=chunk, return_partial=True)
+        p2 = dense_masked_attention_partial(q, k, v, tree_mask)
+        out = merge_attention_partials(p1, p2)
+        out = out.reshape(b, t, cfg.n_heads, hd).astype(q.dtype)
+    else:
+        new_cache = _cache_write(cache, k, v, positions,
+                                 uniform=cfg.cache_uniform_slots)
+        ck = constrain(new_cache["k"], "batch", "kv_seq", None, None)
+        cv = constrain(new_cache["v"], "batch", "kv_seq", None, None)
+        cpos = new_cache["pos"]
+        if t > chunk:
+            # chunked prefill: scan query blocks over the (already written)
+            # cache so the score block stays (B, chunk, H, chunk)
+            nq = -(-t // chunk)
+            qp = _pad_to_multiple(q, 1, chunk)
+            pp = _pad_to_multiple(positions, 1, chunk, value=_INVALID_POS)
+            qs = jnp.moveaxis(qp.reshape(b, nq, chunk, cfg.n_heads, hd), 1, 0)
+            ps = jnp.moveaxis(pp.reshape(b, nq, chunk), 1, 0)
+            out = jax.lax.map(
+                lambda xs: blockwise_attention(
+                    xs[0], ck, cv, xs[1], cpos,
+                    window=window, causal=causal, chunk=chunk),
+                (qs, ps))
+            out = jnp.moveaxis(out, 0, 1).reshape(b, nq * chunk,
+                                                  cfg.n_heads, hd)[:, :t]
+        else:
+            out = blockwise_attention(q, ck, cv, positions, cpos,
+                                      window=window, causal=causal,
+                                      chunk=chunk)
+
+    out = constrain(out, "batch", None, "heads", None)
+    out = out.reshape(b, t, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+    if cfg.use_bias:
+        out = out + p["bo"].astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {
+        "w1": _dense_init(k1, (d, d_ff)),
+        "w2": _dense_init(k2, (d_ff, d)),
+    }
+    if cfg.mlp_variant == "swiglu":
+        p["w3"] = _dense_init(k3, (d, d_ff))
+    if cfg.use_bias:
+        p["b1"] = jnp.zeros((d_ff,), jnp.float32)
+        p["b2"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ p["w1"].astype(x.dtype)
+    if cfg.use_bias:
+        h = h + p["b1"].astype(x.dtype)
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "ff")
+    out = h @ p["w2"].astype(x.dtype)
+    if cfg.use_bias:
+        out = out + p["b2"].astype(x.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (capacity-based dispatch; honest active-FLOPs)
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    d, ff, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    return {
+        "router": _dense_init(kr, (d, e), scale=0.02),
+        "experts_w1": _dense_init(k1, (e, d, ff)),
+        "experts_w3": _dense_init(k3, (e, d, ff)),
+        "experts_w2": _dense_init(k2, (e, ff, d)),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for lane alignment
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based top-k MoE with scatter dispatch.
+
+    Compute cost is E * C * d * ff (== active FLOPs * capacity_factor) rather
+    than the dense all-experts product.  Returns (output, aux_loss) where
+    aux_loss is the standard load-balancing loss.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_tok = b * s
+    xf = x.reshape(n_tok, d)
+
+    router_logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)          # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e), axis=1), axis=0) / k
+    aux_loss = e * jnp.sum(me * ce)
+
+    flat_e = expert_idx.reshape(-1)                          # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n_tok), k)
+
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+    cap = moe_capacity(cfg, n_tok)
+    keep = pos_in_expert < cap
+    slot = jnp.where(keep, pos_in_expert, cap)               # overflow -> spill row
+
+    # dispatch: (E, C+1, d) buffer, last row is the spill bucket
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot].add(xf[flat_tok])
+    buf = constrain(buf, "experts", None, None)
+
+    # expert computation (batched over E)
+    w1 = p["experts_w1"].astype(x.dtype)
+    w3 = p["experts_w3"].astype(x.dtype)
+    w2 = p["experts_w2"].astype(x.dtype)
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    h = constrain(h, "experts", None, "ff")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w2)
+    out_buf = constrain(out_buf, "experts", None, None)
+
+    # combine
+    gathered = out_buf[flat_e, slot]                          # (T*k, d)
+    weight = (flat_gate * keep).astype(x.dtype)[:, None]
+    out = jnp.zeros((n_tok, d), x.dtype).at[flat_tok].add(gathered * weight)
+    return out.reshape(b, s, d), aux_loss

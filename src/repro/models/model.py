@@ -1,0 +1,523 @@
+"""Unified model API across the six assigned architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods are pure
+functions of (params, inputs) and therefore jit/pjit-friendly:
+
+  init(rng)                                 -> params pytree
+  forward(params, batch, remat=..)          -> (logits, aux_loss)   # train/eval
+  init_cache(params, batch, max_len, ...)   -> cache pytree
+  decode(params, tokens, positions, cache)  -> (logits, new_cache)  # T >= 1
+
+Layer stacks carry a leading layer dim and run under ``jax.lax.scan`` so the
+compiled HLO is depth-independent (critical for the 95-layer deepseek-67b
+dry-run).  The KV / SSM caches are pytrees the speculative-decoding engine
+rolls back simply by rewinding its write index (chain drafts) or re-writing
+slots (tree drafts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.sharding import constrain
+from repro.utils.lowering import maybe_scan
+
+Params = Dict[str, Any]
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _sinusoidal(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (dense / moe / vlm / whisper-decoder)
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, key, *, moe: bool, cross: bool) -> Params:
+    keys = jax.random.split(key, 6)
+    p = {
+        "norm1": L.init_norm(cfg, keys[0]),
+        "attn": L.init_attention(cfg, keys[1]),
+        "norm2": L.init_norm(cfg, keys[2]),
+    }
+    if moe:
+        p["moe"] = L.init_moe(cfg, keys[3])
+    else:
+        p["mlp"] = L.init_mlp(cfg, keys[3])
+    if cross:
+        p["norm_cross"] = L.init_norm(cfg, keys[4])
+        p["cross_attn"] = L.init_attention(cfg, keys[5], cross=True)
+    return p
+
+
+def _apply_block(cfg: ModelConfig, p: Params, x, positions, *,
+                 cache=None, cross_kv=None, causal=True,
+                 unrolled=False, tree_mask=None,
+                 ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_residual and cross_kv is None:
+        # PaLM-style parallel block: x + attn(n1(x)) + mlp(n2(x)) — the two
+        # partial-sum outputs share ONE TP all-reduce (§Perf variant)
+        h_attn, new_cache = L.attention_forward(
+            cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x), positions,
+            cache=cache, causal=causal, use_unrolled=unrolled,
+            tree_mask=tree_mask)
+        inner = L.apply_norm(cfg, p["norm2"], x)
+        if "moe" in p:
+            h_mlp, aux = L.apply_moe(cfg, p["moe"], inner)
+        else:
+            h_mlp = L.apply_mlp(cfg, p["mlp"], inner)
+        return x + h_attn + h_mlp, new_cache, aux
+
+    h, new_cache = L.attention_forward(
+        cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x), positions,
+        cache=cache, causal=causal, use_unrolled=unrolled,
+        tree_mask=tree_mask)
+    x = x + h
+    if cross_kv is not None:
+        q_in = L.apply_norm(cfg, p["norm_cross"], x)
+        h = _cross_attention(cfg, p["cross_attn"], q_in, cross_kv)
+        x = x + h
+    inner = L.apply_norm(cfg, p["norm2"], x)
+    if "moe" in p:
+        h, aux = L.apply_moe(cfg, p["moe"], inner)
+    else:
+        h = L.apply_mlp(cfg, p["mlp"], inner)
+    x = x + h
+    return x, new_cache, aux
+
+
+def _cross_kv(cfg: ModelConfig, p_attn: Params, enc: jnp.ndarray):
+    b, s, _ = enc.shape
+    k = (enc @ p_attn["wk"].astype(enc.dtype))
+    v = (enc @ p_attn["wv"].astype(enc.dtype))
+    if cfg.use_bias:
+        k = k + p_attn["bk"].astype(enc.dtype)
+        v = v + p_attn["bv"].astype(enc.dtype)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _cross_attention(cfg: ModelConfig, p: Params, x, cross_kv):
+    """Cross attention against precomputed encoder K/V."""
+    b, t, _ = x.shape
+    k, v = cross_kv
+    q = x @ p["wq"].astype(x.dtype)
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    s = k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q_pos = jnp.zeros((b, t), jnp.int32)
+    out = L.blockwise_attention(q, k, v, q_pos, k_pos, window=0, causal=False)
+    out = out.reshape(b, t, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(x.dtype)
+    if cfg.use_bias:
+        out = out + p["bo"].astype(x.dtype)
+    return out
+
+
+
+def _remat_policy(name):
+    """None -> full remat; "dots" -> save matmul/collective outputs so the
+    backward pass does not recompute (and re-all-reduce) them (§Perf)."""
+    if name is None:
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if name == "dots_no_batch":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        n_extra = 8
+        keys = jax.random.split(rng, cfg.n_layers + cfg.n_encoder_layers + n_extra)
+        k_emb, k_head, k_final, k_shared, k_enc_norm = keys[:5]
+        layer_keys = keys[n_extra:n_extra + cfg.n_layers]
+        enc_keys = keys[n_extra + cfg.n_layers:]
+
+        p: Params = {
+            "embedding": L._dense_init(k_emb, (cfg.vocab_size, cfg.d_model),
+                                       scale=0.02),
+            "final_norm": L.init_norm(cfg, k_final),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L._dense_init(k_head, (cfg.d_model, cfg.vocab_size))
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            p["blocks"] = _stack([
+                _init_block(cfg, k, moe=False, cross=False) for k in layer_keys])
+        elif fam == "moe":
+            p["blocks"] = _stack([
+                _init_block(cfg, k, moe=True, cross=False) for k in layer_keys])
+        elif fam == "hybrid":
+            every = cfg.hybrid_attn_every
+            n_groups = cfg.n_layers // every
+            p["mamba"] = _stack([
+                _stack([S.init_mamba2(cfg, layer_keys[g * every + i])
+                        for i in range(every)])
+                for g in range(n_groups)])
+            p["shared_block"] = _init_block(cfg, k_shared, moe=False, cross=False)
+        elif fam == "ssm":
+            every = cfg.slstm_every
+            n_groups = cfg.n_layers // every
+            n_m = every - 1
+            p["mlstm"] = _stack([
+                _stack([S.init_mlstm(cfg, layer_keys[g * every + i])
+                        for i in range(n_m)])
+                for g in range(n_groups)])
+            p["slstm"] = _stack([
+                S.init_slstm(cfg, layer_keys[g * every + n_m])
+                for g in range(n_groups)])
+        elif fam == "audio":
+            p["enc_blocks"] = _stack([
+                _init_block(cfg, k, moe=False, cross=False) for k in enc_keys])
+            p["enc_final_norm"] = L.init_norm(cfg, k_enc_norm)
+            p["blocks"] = _stack([
+                _init_block(cfg, k, moe=False, cross=True) for k in layer_keys])
+        else:
+            raise ValueError(f"unknown family {fam}")
+        return p
+
+    # -- embedding / head -----------------------------------------------------
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = params["embedding"][tokens].astype(L.dtype_of(cfg))
+        return constrain(x, "batch", None, "embed")
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        w = (params["embedding"].T if cfg.tie_embeddings
+             else params["lm_head"]).astype(x.dtype)
+        logits = x @ w
+        return constrain(logits, "batch", None, "vocab")
+
+    # -- encoder (whisper) ------------------------------------------------------
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: (B, S_enc, d_model) stub frontend embeddings."""
+        cfg = self.cfg
+        b, s, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        x = frames.astype(L.dtype_of(cfg))
+        x = x + _sinusoidal(pos, cfg.d_model).astype(x.dtype)
+
+        def body(x, p_layer):
+            y, _, _ = _apply_block(cfg, p_layer, x, pos, causal=False)
+            return y, None
+
+        x, _ = maybe_scan(body, x, params["enc_blocks"])
+        return L.apply_norm(cfg, params["enc_final_norm"], x)
+
+    # -- full-sequence forward (train / eval) ------------------------------------
+    def forward(self, params, batch: Dict[str, jnp.ndarray], *,
+                remat: bool = False, unrolled_attn: bool = False,
+                remat_policy: Optional[str] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        x = self._embed(params, tokens)
+        if cfg.family == "audio":
+            x = x + _sinusoidal(positions, cfg.d_model).astype(x.dtype)
+        aux_total = jnp.zeros((), jnp.float32)
+        fam = cfg.family
+
+        if fam in ("dense", "moe", "vlm"):
+            def body(x, p_layer):
+                y, _, aux = _apply_block(cfg, p_layer, x, positions,
+                                         unrolled=unrolled_attn)
+                return y, aux
+            if remat:
+                body = jax.checkpoint(body, policy=_remat_policy(remat_policy))
+            x, auxs = maybe_scan(body, x, params["blocks"])
+            aux_total = jnp.sum(auxs)
+
+        elif fam == "hybrid":
+            shared = params["shared_block"]
+
+            def group(x, p_group):
+                def inner(x, p_m):
+                    y, _ = S.mamba2_forward(cfg, p_m, x)
+                    return x + y, None
+                x, _ = maybe_scan(inner, x, p_group)
+                x, _, _ = _apply_block(cfg, shared, x, positions,
+                                       unrolled=unrolled_attn)
+                return x, None
+            if remat:
+                group = jax.checkpoint(group, policy=_remat_policy(remat_policy))
+            x, _ = maybe_scan(group, x, params["mamba"])
+
+        elif fam == "ssm":
+            def group(x, xs):
+                p_ms, p_s = xs
+
+                def inner(x, p_m):
+                    y, _ = S.mlstm_forward(cfg, p_m, x)
+                    return x + y, None
+                x, _ = maybe_scan(inner, x, p_ms)
+                y, _ = S.slstm_forward(cfg, p_s, x)
+                return x + y, None
+            if remat:
+                group = jax.checkpoint(group, policy=_remat_policy(remat_policy))
+            x, _ = maybe_scan(group, x, (params["mlstm"], params["slstm"]))
+
+        elif fam == "audio":
+            enc = self.encode(params, batch["encoder_frames"])
+
+            def body(x, p_layer):
+                ckv = _cross_kv(cfg, p_layer["cross_attn"], enc)
+                y, _, _ = _apply_block(cfg, p_layer, x, positions,
+                                       cross_kv=ckv, unrolled=unrolled_attn)
+                return y, None
+            if remat:
+                body = jax.checkpoint(body, policy=_remat_policy(remat_policy))
+            x, _ = maybe_scan(body, x, params["blocks"])
+
+        return self._head(params, x), aux_total
+
+    # -- caches -------------------------------------------------------------------
+    def init_cache(self, params, batch: int, max_len: int, *,
+                   encoder_frames: Optional[jnp.ndarray] = None) -> Params:
+        cfg = self.cfg
+        fam = cfg.family
+        cache: Params = {"index": jnp.zeros((batch,), jnp.int32)}
+        if fam in ("dense", "moe", "vlm"):
+            cache["layers"] = L.make_attention_cache(
+                cfg, batch, max_len, n_layers=cfg.n_layers)
+        elif fam == "hybrid":
+            every = cfg.hybrid_attn_every
+            n_groups = cfg.n_layers // every
+            mamba = [S.make_mamba2_cache(cfg, batch, n_layers=every)
+                     for _ in range(n_groups)]
+            cache["mamba"] = _stack(mamba)
+            cache["attn"] = L.make_attention_cache(
+                cfg, batch, max_len, n_layers=n_groups)
+        elif fam == "ssm":
+            every = cfg.slstm_every
+            n_groups = cfg.n_layers // every
+            cache["mlstm"] = _stack([
+                S.make_mlstm_cache(cfg, batch, n_layers=every - 1)
+                for _ in range(n_groups)])
+            cache["slstm"] = _stack([
+                S.make_slstm_cache(cfg, batch) for _ in range(n_groups)])
+        elif fam == "audio":
+            cache["layers"] = L.make_attention_cache(
+                cfg, batch, max_len, n_layers=cfg.n_layers)
+            if encoder_frames is not None:
+                enc = self.encode(params, encoder_frames)
+
+                def kv_body(_, p_layer):
+                    return None, _cross_kv(cfg, p_layer["cross_attn"], enc)
+                _, (ck, cv) = maybe_scan(kv_body, None, params["blocks"])
+                cache["cross_k"], cache["cross_v"] = ck, cv
+            else:
+                s_enc = cfg.encoder_seq_len
+                shape = (cfg.n_layers, batch, s_enc, cfg.n_kv_heads, cfg.head_dim)
+                cache["cross_k"] = jnp.zeros(shape, L.dtype_of(cfg))
+                cache["cross_v"] = jnp.zeros(shape, L.dtype_of(cfg))
+        return cache
+
+    # -- incremental decode (T >= 1 new tokens) -------------------------------------
+    def decode(self, params, tokens: jnp.ndarray, positions: jnp.ndarray,
+               cache: Params,
+               token_mask: Optional[jnp.ndarray] = None,
+               with_features: bool = False):
+        """Process T new tokens against the cache.
+
+        ``token_mask`` (B, T) marks valid tokens; masked tokens are state
+        no-ops (attention kv goes to trash slots, recurrent states freeze).
+        Used for post-verify state recompute on recurrent families and for
+        ragged continuous-batching steps.
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        x = self._embed(params, tokens)
+        attn_positions = positions
+        if token_mask is not None:
+            attn_positions = jnp.where(token_mask, positions, -1)
+        if fam == "audio":
+            x = x + _sinusoidal(positions, cfg.d_model).astype(x.dtype)
+        new_cache = dict(cache)
+
+        if fam in ("dense", "moe", "vlm"):
+            def body(x, xs):
+                p_layer, c_layer = xs
+                y, nc, _ = _apply_block(cfg, p_layer, x, attn_positions,
+                                        cache=c_layer)
+                return y, nc
+            x, ncl = maybe_scan(body, x, (params["blocks"], cache["layers"]))
+            new_cache["layers"] = ncl
+
+        elif fam == "hybrid":
+            shared = params["shared_block"]
+
+            def group(x, xs):
+                p_group, c_mamba, c_attn = xs
+
+                def inner(x, xs_i):
+                    p_m, c_m = xs_i
+                    y, nc = S.mamba2_forward(cfg, p_m, x, cache=c_m,
+                                             token_mask=token_mask)
+                    return x + y, nc
+                x, nc_m = maybe_scan(inner, x, (p_group, c_mamba))
+                x, nc_a, _ = _apply_block(cfg, shared, x, attn_positions,
+                                          cache=c_attn)
+                return x, (nc_m, nc_a)
+            x, (nm, na) = maybe_scan(group, x, (params["mamba"], cache["mamba"], cache["attn"]))
+            new_cache["mamba"], new_cache["attn"] = nm, na
+
+        elif fam == "ssm":
+            def group(x, xs):
+                p_ms, p_s, c_ms, c_s = xs
+
+                def inner(x, xs_i):
+                    p_m, c_m = xs_i
+                    y, nc = S.mlstm_forward(cfg, p_m, x, cache=c_m,
+                                            token_mask=token_mask)
+                    return x + y, nc
+                x, nc_m = maybe_scan(inner, x, (p_ms, c_ms))
+                y, nc_s = S.slstm_forward(cfg, p_s, x, cache=c_s,
+                                          token_mask=token_mask)
+                return x + y, (nc_m, nc_s)
+            x, (nm, ns) = maybe_scan(group, x,
+                (params["mlstm"], params["slstm"],
+                 cache["mlstm"], cache["slstm"]))
+            new_cache["mlstm"], new_cache["slstm"] = nm, ns
+
+        elif fam == "audio":
+            def body(x, xs):
+                p_layer, c_layer, ck, cv = xs
+                y, nc, _ = _apply_block(cfg, p_layer, x, attn_positions,
+                                        cache=c_layer, cross_kv=(ck, cv))
+                return y, nc
+            x, ncl = maybe_scan(body, x,
+                (params["blocks"], cache["layers"],
+                 cache["cross_k"], cache["cross_v"]))
+            new_cache["layers"] = ncl
+
+        feats = x
+        logits = self._head(params, x)
+        n_new = (tokens.shape[1] if token_mask is None
+                 else jnp.sum(token_mask.astype(jnp.int32), axis=1))
+        new_cache["index"] = cache["index"] + n_new
+        if with_features:
+            return logits, new_cache, feats
+        return logits, new_cache
+
+    def decode_virtual(self, params, tokens: jnp.ndarray,
+                       positions: jnp.ndarray, cache: Params,
+                       tree_mask: jnp.ndarray) -> jnp.ndarray:
+        """Tree-verification forward: score T tree nodes against the cache
+        WITHOUT writing them.  Node 0 must be the tree root (the pending
+        token); ``tree_mask[i, j]`` marks node j as an ancestor-or-self of
+        node i.  Attention families only — recurrent targets verify trees by
+        per-path recompute in the engine instead."""
+        cfg = self.cfg
+        fam = cfg.family
+        if fam not in ("dense", "moe", "vlm", "audio"):
+            raise NotImplementedError(
+                "virtual tree decode requires attention-family targets")
+        x = self._embed(params, tokens)
+        if fam == "audio":
+            x = x + _sinusoidal(positions, cfg.d_model).astype(x.dtype)
+
+        if fam == "audio":
+            def body(x, xs):
+                p_layer, c_layer, ck, cv = xs
+                y, _, _ = _apply_block(cfg, p_layer, x, positions,
+                                       cache=c_layer, cross_kv=(ck, cv),
+                                       tree_mask=tree_mask)
+                return y, None
+            x, _ = maybe_scan(body, x,
+                              (params["blocks"], cache["layers"],
+                               cache["cross_k"], cache["cross_v"]))
+        else:
+            def body(x, xs):
+                p_layer, c_layer = xs
+                y, _, _ = _apply_block(cfg, p_layer, x, positions,
+                                       cache=c_layer, tree_mask=tree_mask)
+                return y, None
+            x, _ = maybe_scan(body, x, (params["blocks"], cache["layers"]))
+        return self._head(params, x)
+
+    @property
+    def is_recurrent(self) -> bool:
+        """Families whose decode state cannot be rolled back by index —
+        the engine re-applies committed tokens from the pre-cycle state."""
+        return self.cfg.family in ("ssm", "hybrid")
+
+    # -- continuous batching support --------------------------------------------
+    def reset_slots(self, cache: Params, slot_mask: jnp.ndarray) -> Params:
+        """Clear the cache rows of slots in ``slot_mask`` (B,) so a new
+        request can be admitted there (continuous batching)."""
+        from repro.models.layers import _INVALID_POS
+
+        def wipe(x, batch_axis: int, value=0):
+            shape = [1] * x.ndim
+            shape[batch_axis] = slot_mask.shape[0]
+            m = slot_mask.reshape(shape)
+            return jnp.where(m, jnp.asarray(value, x.dtype), x)
+
+        fam = self.cfg.family
+        new = dict(cache)
+        new["index"] = wipe(cache["index"], 0)
+        if fam in ("dense", "moe", "vlm", "audio"):
+            lay = dict(cache["layers"])
+            lay["pos"] = wipe(lay["pos"], 1, _INVALID_POS)
+            new["layers"] = lay
+        if fam == "hybrid":
+            new["mamba"] = {k: wipe(v, 2) for k, v in cache["mamba"].items()}
+            at = dict(cache["attn"])
+            at["pos"] = wipe(at["pos"], 1, _INVALID_POS)
+            new["attn"] = at
+        if fam == "ssm":
+            new["mlstm"] = {
+                "state": wipe(cache["mlstm"]["state"], 2),
+                "m": wipe(cache["mlstm"]["m"], 2),
+            }
+            sl = {k: wipe(v, 1) for k, v in cache["slstm"].items()}
+            sl["m"] = wipe(cache["slstm"]["m"], 1, -10.0)
+            new["slstm"] = sl
+        return new
+
+    # convenience -------------------------------------------------------------
+    def prefill(self, params, tokens: jnp.ndarray, cache: Params,
+                ) -> Tuple[jnp.ndarray, Params]:
+        b, s = tokens.shape
+        positions = (cache["index"][:, None]
+                     + jnp.arange(s, dtype=jnp.int32)[None])
+        return self.decode(params, tokens, positions, cache)
+
+
+def build_model(cfg: ModelConfig, *, sliding_window: Optional[int] = None) -> Model:
+    if sliding_window is not None:
+        cfg = dataclasses.replace(cfg, sliding_window=sliding_window)
+    return Model(cfg)

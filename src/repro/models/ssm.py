@@ -1,0 +1,450 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Both Mamba2's SSD and the mLSTM's exp-gated linear attention are instances of
+one chunked linear recurrence
+
+    H_t = exp(a_t) * H_{t-1} + s_t * (B_t ⊗ V_t),     y_t = C_t · H_t
+
+with per-step log-decay ``a_t <= 0`` and input scale ``s_t``.  We implement a
+single ``chunked_linear_recurrence`` core (intra-chunk masked matmul +
+inter-chunk scan — the TPU-friendly SSD form: MXU matmuls inside a chunk, a
+length/chunk scan across) and express both layer types through it.  Decode
+steps use the O(1) recurrent update on a carried state.
+
+Numerics note (DESIGN.md §7): the mLSTM input gate is stabilised by a running
+max carried across chunks at prefill and frozen during decode, a mild
+simplification of the exact xLSTM m-state that keeps the chunked form exact
+w.r.t. its own definition.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, apply_norm
+from repro.sharding import constrain
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked linear recurrence (SSD core)
+# ---------------------------------------------------------------------------
+
+def chunked_linear_recurrence(C_, B_, V, log_decay, in_scale, *, chunk: int,
+                              init_state: Optional[jnp.ndarray] = None,
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All inputs chunk over the S axis.
+
+    C_ ("query"): (B, S, H, N);  B_ ("key"): (B, S, H, N)
+    V  (values) : (B, S, H, P)
+    log_decay   : (B, S, H)  per-step log decay (<= 0)
+    in_scale    : (B, S, H)  per-step input scale (>= 0)
+    init_state  : (B, H, N, P) or None
+
+    Returns (Y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, n = B_.shape
+    p = V.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        C_, B_, V = zpad(C_), zpad(B_), zpad(V)
+        log_decay = zpad(log_decay)
+        in_scale = zpad(in_scale)
+    nc = (s + pad) // chunk
+
+    def to_chunks(x):
+        return x.reshape((b, nc, chunk) + x.shape[2:])
+
+    Cc, Bc, Vc = to_chunks(C_), to_chunks(B_), to_chunks(V)
+    ac, sc = to_chunks(log_decay), to_chunks(in_scale)
+
+    cum = jnp.cumsum(ac, axis=2)                       # (B, nc, Q, H)
+    total = cum[:, :, -1]                              # (B, nc, H)
+
+    # ---- intra-chunk (quadratic within chunk, MXU matmuls) ----
+    li = cum[:, :, :, None, :]                         # (B,nc,Q,1,H) l index
+    si = cum[:, :, None, :, :]                         # (B,nc,1,Q,H) s index
+    decay = jnp.exp(jnp.minimum(li - si, 0.0))         # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("bclhn,bcshn->bclsh", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    scores = scores * decay * sc[:, :, None, :, :]
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", scores.astype(Vc.dtype), Vc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk boundary states ----
+    w = jnp.exp(total[:, :, None, :] - cum) * sc       # (B,nc,Q,H)
+    state_c = jnp.einsum("bcshn,bcshp->bchnp", Bc * w[..., None], Vc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence ----
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, xs):
+        st, tot = xs                                   # (B,H,N,P), (B,H)
+        new = carry * jnp.exp(tot)[:, :, None, None] + st
+        return new, carry                              # emit state BEFORE chunk
+
+    totals = jnp.moveaxis(total, 1, 0)                 # (nc, B, H)
+    states = jnp.moveaxis(state_c, 1, 0)               # (nc, B, H, N, P)
+    final_state, prev_states = jax.lax.scan(step, h0, (states, totals))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # (B, nc, H, N, P)
+
+    # ---- inter-chunk contribution ----
+    cdec = jnp.exp(cum)                                # decay from chunk start
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp",
+                         (Cc * cdec[..., None]).astype(jnp.float32),
+                         prev_states, preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)[:, :s]
+    return y.astype(V.dtype), final_state
+
+
+def recurrent_step(C_, B_, V, log_decay, in_scale, state):
+    """O(1) decode update.  Shapes: C_/B_ (B,T,H,N), V (B,T,H,P) with small T
+    (speculative verify windows), state (B,H,N,P).  Sequential over T."""
+
+    def one(carry, xs):
+        c_, b_, v_, a_, s_ = xs
+        new = carry * jnp.exp(a_)[..., None, None] + s_[..., None, None] * (
+            b_[..., :, None] * v_[..., None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", c_, new,
+                       preferred_element_type=jnp.float32)
+        return new, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (C_, B_, V, log_decay, in_scale))
+    state, ys = jax.lax.scan(one, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(V.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(cfg: ModelConfig, key) -> Params:
+    d, din, n, hd = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = cfg.n_ssm_heads
+    conv_ch = din + 2 * n
+    keys = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(keys[0], (d, 2 * din + 2 * n + nh)),
+        "conv_w": jnp.zeros((cfg.ssm_conv, conv_ch), jnp.float32)
+        .at[-1].set(1.0),  # identity-ish init
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.full((nh,), math.log(math.e - 1), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm_scale": jnp.ones((din,), jnp.float32),
+        "out_proj": _dense_init(keys[1], (din, d)),
+    }
+
+
+def make_mamba2_cache(cfg: ModelConfig, batch: int,
+                      n_layers: Optional[int] = None) -> Params:
+    din, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_ch = din + 2 * n
+    conv_shape = (batch, cfg.ssm_conv - 1, conv_ch)
+    state_shape = (batch, nh, n, hd)
+    if n_layers is not None:
+        conv_shape = (n_layers,) + conv_shape
+        state_shape = (n_layers,) + state_shape
+    return {
+        "conv": jnp.zeros(conv_shape, jnp.float32),
+        "state": jnp.zeros(state_shape, jnp.float32),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None,
+                 token_mask: Optional[jnp.ndarray] = None,
+                 conv_input: Optional[jnp.ndarray] = None,
+                 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Depthwise causal conv1d.  x: (B,S,C); w: (K,C).  ``history`` carries
+    the last K-1 inputs for incremental decode.
+
+    With ``token_mask`` (valid tokens form a prefix of the window, as in
+    post-verify state recompute), the new history gathers the last K-1
+    *valid* inputs so rejected/padding tokens never pollute the conv state.
+    """
+    k = w.shape[0]
+    if history is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_hist = None
+    else:
+        xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+        if k > 1:
+            if token_mask is None:
+                new_hist = xp[:, -(k - 1):].astype(jnp.float32)
+            else:
+                n_valid = jnp.sum(token_mask.astype(jnp.int32), axis=1)  # (B,)
+                # last K-1 valid entries end at hist_len + n_valid
+                idx = (history.shape[1] + n_valid)[:, None] - (k - 1) \
+                    + jnp.arange(k - 1)[None]
+                idx = jnp.clip(idx, 0, xp.shape[1] - 1)
+                new_hist = jnp.take_along_axis(
+                    xp, idx[:, :, None], axis=1).astype(jnp.float32)
+        else:
+            new_hist = history
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b), new_hist
+
+
+def mamba2_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray, *,
+                   cache: Optional[Params] = None,
+                   token_mask: Optional[jnp.ndarray] = None,
+                   ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, d = x.shape
+    din, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    zxbcdt = constrain(zxbcdt, "batch", None, "ssm_heads")
+    z, xc, Bv, Cv, dt_raw = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xc, Bv, Cv], axis=-1)
+    hist = cache["conv"] if cache is not None else None
+    conv_out, new_hist = _causal_conv(
+        conv_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), hist,
+        token_mask=token_mask, conv_input=conv_in)
+    xc, Bv, Cv = jnp.split(conv_out, [din, din + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(p["A_log"])                                          # (nh,)
+    log_decay = dt * a[None, None, :]
+    if token_mask is not None:
+        # masked tokens are state no-ops: decay 1, input scale 0
+        mf = token_mask.astype(jnp.float32)[:, :, None]
+        dt = dt * mf
+        log_decay = log_decay * mf
+
+    xh = xc.reshape(b, s, nh, hd)
+    Bh = jnp.broadcast_to(Bv[:, :, None, :], (b, s, nh, n)).astype(jnp.float32)
+    Ch = jnp.broadcast_to(Cv[:, :, None, :], (b, s, nh, n)).astype(jnp.float32)
+
+    if cache is None:
+        y, _ = chunked_linear_recurrence(
+            Ch, Bh, xh, log_decay, dt, chunk=cfg.ssm_chunk)
+        new_cache = None
+    else:
+        # works for both long prefill (chunked) and 1-token decode
+        y, new_state = chunked_linear_recurrence(
+            Ch, Bh, xh, log_decay, dt, chunk=cfg.ssm_chunk,
+            init_state=cache["state"])
+        new_cache = {"conv": new_hist, "state": new_state}
+
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, din)
+    # gated RMS norm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["gate_norm_scale"]).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    din = 2 * d                       # xLSTM projection factor 2
+    nh = cfg.n_heads
+    keys = jax.random.split(key, 8)
+    return {
+        "up_proj": _dense_init(keys[0], (d, 2 * din)),
+        "wq": _dense_init(keys[1], (din, din)),
+        "wk": _dense_init(keys[2], (din, din)),
+        "wv": _dense_init(keys[3], (din, din)),
+        "igate_w": _dense_init(keys[4], (din, nh), scale=0.02),
+        "igate_b": jnp.zeros((nh,), jnp.float32),
+        "fgate_w": _dense_init(keys[5], (din, nh), scale=0.02),
+        "fgate_b": jnp.full((nh,), 3.0, jnp.float32),  # open forget gates
+        "mlstm_norm_scale": jnp.ones((din,), jnp.float32),
+        "down_proj": _dense_init(keys[6], (din, d)),
+    }
+
+
+def make_mlstm_cache(cfg: ModelConfig, batch: int,
+                     n_layers: Optional[int] = None) -> Params:
+    din = 2 * cfg.d_model
+    nh = cfg.n_heads
+    dk = din // nh
+    # state holds numerator (N x P) with value dim extended by 1 for the
+    # normaliser column
+    shape = (batch, nh, dk, dk + 1)
+    mshape = (batch, nh)
+    if n_layers is not None:
+        shape = (n_layers,) + shape
+        mshape = (n_layers,) + mshape
+    return {"state": jnp.zeros(shape, jnp.float32),
+            "m": jnp.zeros(mshape, jnp.float32)}
+
+
+def mlstm_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray, *,
+                  cache: Optional[Params] = None,
+                  token_mask: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, d = x.shape
+    din = 2 * d
+    nh = cfg.n_heads
+    dk = din // nh
+
+    up = x @ p["up_proj"].astype(x.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xi = constrain(xi, "batch", None, "ssm_heads")
+
+    q = (xi @ p["wq"].astype(x.dtype)).reshape(b, s, nh, dk)
+    k = (xi @ p["wk"].astype(x.dtype)).reshape(b, s, nh, dk) / math.sqrt(dk)
+    v = (xi @ p["wv"].astype(x.dtype)).reshape(b, s, nh, dk)
+
+    i_raw = (xi.astype(jnp.float32) @ p["igate_w"]) + p["igate_b"]   # (B,S,H)
+    f_raw = (xi.astype(jnp.float32) @ p["fgate_w"]) + p["fgate_b"]
+    log_f = jax.nn.log_sigmoid(f_raw)
+
+    i_eff = i_raw
+    if token_mask is not None:
+        mf = token_mask.astype(jnp.float32)[:, :, None]
+        log_f = log_f * mf
+        i_eff = jnp.where(token_mask[:, :, None], i_raw, -jnp.inf)
+
+    if cache is None:
+        m = jnp.max(i_eff, axis=1, keepdims=True)                    # (B,1,H)
+        new_m = m[:, 0]
+    else:
+        m = jnp.maximum(cache["m"][:, None, :], jnp.max(i_eff, axis=1, keepdims=True))
+        new_m = m[:, 0]
+    in_scale = jnp.exp(i_eff - m)
+    if token_mask is not None:
+        in_scale = jnp.where(token_mask[:, :, None], in_scale, 0.0)
+
+    v_ext = jnp.concatenate(
+        [v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+
+    if cache is None:
+        y_ext, final_state = chunked_linear_recurrence(
+            q.astype(jnp.float32), k.astype(jnp.float32), v_ext,
+            log_f, in_scale, chunk=cfg.ssm_chunk)
+        new_cache = None
+    else:
+        y_ext, final_state = chunked_linear_recurrence(
+            q.astype(jnp.float32), k.astype(jnp.float32), v_ext,
+            log_f, in_scale, chunk=cfg.ssm_chunk,
+            init_state=cache["state"])
+        new_cache = {"state": final_state, "m": new_m}
+
+    num, den = y_ext[..., :dk], y_ext[..., dk:]
+    y = num / jnp.maximum(jnp.abs(den), 1e-6)
+    y = y.reshape(b, s, din)
+
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["mlstm_norm_scale"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["down_proj"].astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM block (scalar memory, sequential scan)
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    keys = jax.random.split(key, 10)
+    p = {}
+    for i, gate in enumerate(("zgate", "igate", "fgate", "ogate")):
+        p[f"{gate}_w"] = _dense_init(keys[i], (d, d))
+        p[f"{gate}_r"] = _dense_init(keys[4 + i], (nh, dh, dh),
+                                     scale=1.0 / math.sqrt(dh))
+        p[f"{gate}_b"] = jnp.zeros((d,), jnp.float32)
+    p["fgate_b"] = jnp.full((d,), 3.0, jnp.float32)
+    p["slstm_norm_scale"] = jnp.ones((d,), jnp.float32)
+    ff = int(8 * d / 3 / 64) * 64
+    p["ffn_w1"] = _dense_init(keys[8], (d, ff))
+    p["ffn_w3"] = _dense_init(keys[8], (d, ff))
+    p["ffn_w2"] = _dense_init(keys[9], (ff, d))
+    return p
+
+
+def make_slstm_cache(cfg: ModelConfig, batch: int,
+                     n_layers: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    shape = (batch, d)
+    if n_layers is not None:
+        shape = (n_layers,) + shape
+    z = jnp.zeros(shape, jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z - 10.0}
+
+
+def slstm_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray, *,
+                  cache: Optional[Params] = None,
+                  token_mask: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+
+    pre = {g: x.astype(jnp.float32) @ p[f"{g}_w"] + p[f"{g}_b"]
+           for g in ("zgate", "igate", "fgate", "ogate")}
+
+    if cache is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        h0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32) - 10.0
+    else:
+        c0, n0, h0, m0 = cache["c"], cache["n"], cache["h"], cache["m"]
+
+    def rec(hprev, gate):
+        hh = hprev.reshape(b, nh, dh)
+        return jnp.einsum("bhd,hde->bhe", hh, p[f"{gate}_r"]).reshape(b, d)
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        zp, ip, fp, op, valid = xs
+        zt = jnp.tanh(zp + rec(h, "zgate"))
+        it = ip + rec(h, "igate")
+        ft = fp + rec(h, "fgate")
+        ot = jax.nn.sigmoid(op + rec(h, "ogate"))
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        keep = valid[:, None]
+        new_carry = (jnp.where(keep, c_new, c), jnp.where(keep, n_new, n),
+                     jnp.where(keep, h_new, h), jnp.where(keep, m_new, m))
+        return new_carry, h_new
+
+    valid_seq = (jnp.ones((b, s), bool) if token_mask is None else token_mask)
+    xs = tuple(jnp.moveaxis(pre[g], 1, 0)
+               for g in ("zgate", "igate", "fgate", "ogate"))
+    xs = xs + (jnp.moveaxis(valid_seq, 1, 0),)
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), xs)
+    y = jnp.moveaxis(hs, 0, 1)                       # (B,S,d) float32
+
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(ms + cfg.norm_eps) * p["slstm_norm_scale"]).astype(x.dtype)
+
+    # gated FFN (xLSTM post-up-projection)
+    hmid = jax.nn.silu(y @ p["ffn_w1"].astype(x.dtype)) * (y @ p["ffn_w3"].astype(x.dtype))
+    hmid = constrain(hmid, "batch", None, "ff")
+    y = y + hmid @ p["ffn_w2"].astype(x.dtype)
+
+    new_cache = {"c": c, "n": n, "h": h, "m": m} if cache is not None else None
+    return y, new_cache

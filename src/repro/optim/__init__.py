@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw, apply_updates, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+__all__ = ["adamw", "apply_updates", "clip_by_global_norm",
+           "cosine_schedule", "linear_warmup"]

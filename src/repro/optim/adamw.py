@@ -1,0 +1,81 @@
+"""AdamW + gradient clipping in pure JAX (optax is not in this environment).
+
+API mirrors optax: ``tx = adamw(lr_schedule)``, ``state = tx.init(params)``,
+``updates, state = tx.update(grads, state, params)``."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+@dataclasses.dataclass(frozen=True)
+class Transform:
+    init: Callable
+    update: Callable
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def adamw(lr: Schedule, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          max_grad_norm: float = 1.0) -> Transform:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), z,
+                          jax.tree.map(jnp.zeros_like, z))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        if max_grad_norm > 0:
+            grads = clip_by_global_norm(grads, max_grad_norm)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = _lr_at(lr, step)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay > 0 and p.ndim >= 2:   # decay matrices only
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step, mu, nu)
+
+    return Transform(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))

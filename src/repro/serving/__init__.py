@@ -1,0 +1,10 @@
+from repro.serving.scheduler import (
+    Request,
+    Response,
+    SamplingParams,
+    SpecServer,
+    ServerConfig,
+)
+
+__all__ = ["Request", "Response", "SamplingParams", "SpecServer",
+           "ServerConfig"]

@@ -1,0 +1,234 @@
+"""Continuous-batching speculative-decoding server.
+
+vLLM-style slot scheduler specialised for draft–verify cycles: a fixed
+number of batch slots share one jitted verify-cycle program; finished slots
+are refilled from the waiting queue between cycles.  Admission resets the
+slot's cache rows (attention pos invalidation / recurrent state zeroing) and
+prefills the prompt with a slot-masked decode, so admissions never disturb
+in-flight neighbours.
+
+Host-side logic (queueing, detokenisation) is deliberately thin; all the
+per-token work happens in two jitted programs: ``_prefill`` and the engine's
+``cycle``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, SpecEngine
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    max_tokens: int = 128
+    temperature: float = 1.0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                     # (S,) int32
+    params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+
+
+@dataclasses.dataclass
+class Response:
+    uid: int
+    tokens: np.ndarray
+    n_cycles: int
+    n_committed: int
+    latency_s: float
+
+    @property
+    def tau(self) -> float:
+        return self.n_committed / max(self.n_cycles, 1)
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    slots: int = 4
+    max_len: int = 512
+    max_prompt_len: int = 128
+
+
+class SpecServer:
+    def __init__(self, target: Model, drafter, t_params, d_params,
+                 engine_cfg: EngineConfig, cfg: ServerConfig):
+        self.engine = SpecEngine(target, drafter, engine_cfg)
+        self.target, self.drafter = target, drafter
+        self.t_params, self.d_params = t_params, d_params
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+
+        b, l = cfg.slots, cfg.max_len
+        self.buf = jnp.zeros((b, l + 1), jnp.int32)
+        self.lengths = jnp.zeros((b,), jnp.int32)
+        self.finished = jnp.ones((b,), bool)      # all idle initially
+        self.budget = np.zeros((b,), np.int64)    # host-side per-slot budget
+        self.t_cache = target.init_cache(t_params, b, l)
+        self.d_state = drafter.init_state(d_params, b, l)
+        self.last_token = jnp.zeros((b,), jnp.int32)
+        self.key = jax.random.PRNGKey(0)
+        self.stats = {k: jnp.zeros((b,), jnp.int32)
+                      for k in ("cycles", "commits", "accepts", "relaxed")}
+
+        self.queue: deque[Request] = deque()
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.slot_t0 = np.zeros((b,), np.float64)
+        self.slot_base_len = np.zeros((b,), np.int64)
+        self.slot_base_stats = {k: np.zeros((b,), np.int64)
+                                for k in self.stats}
+        self._responses: List[Response] = []
+
+        self._cycle = jax.jit(self._cycle_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # ------------------------------------------------------------------
+    def _cycle_impl(self, t_params, d_params, carry):
+        return self.engine.cycle(t_params, d_params, carry)
+
+    def _prefill_impl(self, t_params, d_params, carry, prompt, plen, slot):
+        """Admit one request into slot: reset caches, write prompt, prefill."""
+        (buf, lengths, finished, t_cache, d_state, last_token, key,
+         stats) = carry
+        b = lengths.shape[0]
+        smask = jnp.arange(b) == slot
+
+        t_cache = self.target.reset_slots(t_cache, smask)
+        if hasattr(self.drafter, "model"):
+            d_cache = self.drafter.model.reset_slots(d_state["cache"], smask)
+            d_state = {**d_state, "cache": d_cache}
+
+        s = prompt.shape[0]
+        # write prompt into the slot's buffer row
+        row = jnp.where(jnp.arange(buf.shape[1]) < s,
+                        jnp.pad(prompt, (0, buf.shape[1] - s)), 0)
+        buf = jnp.where(smask[:, None], row[None], buf)
+        lengths = jnp.where(smask, plen, lengths)
+        finished = jnp.where(smask, False, finished)
+        stats = {k: jnp.where(smask, 0, v) for k, v in stats.items()}
+
+        # slot-masked prefill of prompt[:-1]
+        tokens = jnp.broadcast_to(prompt[None], (b, s))
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        pmask = smask[:, None] & (pos < plen - 1)
+        out = self.target.decode(self.t_params, tokens, pos, t_cache,
+                                 token_mask=pmask,
+                                 with_features=self.drafter.wants_features)
+        if self.drafter.wants_features:
+            _, new_t_cache, feats = out
+            idx = jnp.clip(plen - 2, 0, s - 1)
+            f0 = jnp.take_along_axis(
+                feats, jnp.full((b, 1, feats.shape[-1]), idx, jnp.int32), 1)[:, 0]
+            if "feat" in d_state:
+                feat = jnp.where(smask[:, None],
+                                 f0.astype(d_state["feat"].dtype),
+                                 d_state["feat"])
+                d_state = {**d_state, "feat": feat}
+        else:
+            _, new_t_cache = out
+        t_cache = new_t_cache
+
+        if hasattr(self.drafter, "model"):
+            _, d_cache = self.drafter.model.decode(
+                self.d_params, tokens, pos, d_state["cache"],
+                token_mask=pmask)
+            d_state = {**d_state, "cache": d_cache}
+
+        last = prompt[jnp.clip(plen - 1, 0, s - 1)]
+        last_token = jnp.where(smask, last, last_token)
+        return (buf, lengths, finished, t_cache, d_state, last_token, key,
+                stats)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _carry(self):
+        return (self.buf, self.lengths, self.finished, self.t_cache,
+                self.d_state, self.last_token, self.key, self.stats)
+
+    def _set_carry(self, carry):
+        (self.buf, self.lengths, self.finished, self.t_cache, self.d_state,
+         self.last_token, self.key, self.stats) = carry
+
+    def _admit(self):
+        finished = np.asarray(self.finished)
+        for slot in range(self.cfg.slots):
+            if not finished[slot]:
+                continue
+            if self.slot_req[slot] is not None:
+                self._harvest(slot)
+            if self.queue:
+                req = self.queue.popleft()
+                s = self.cfg.max_prompt_len
+                prompt = np.zeros((s,), np.int32)
+                plen = min(len(req.prompt), s)
+                prompt[:plen] = req.prompt[:plen]
+                carry = self._prefill(
+                    self.t_params, self.d_params, self._carry(),
+                    jnp.asarray(prompt), jnp.int32(plen), jnp.int32(slot))
+                self._set_carry(carry)
+                self.slot_req[slot] = req
+                self.slot_t0[slot] = time.time()
+                self.slot_base_len[slot] = plen
+                self.budget[slot] = req.params.max_tokens
+                for k in self.stats:
+                    self.slot_base_stats[k][slot] = int(
+                        np.asarray(self.stats[k])[slot])
+
+    def _harvest(self, slot: int):
+        req = self.slot_req[slot]
+        if req is None:
+            return
+        toks = np.asarray(self.buf)[slot, :int(np.asarray(self.lengths)[slot])]
+        cyc = int(np.asarray(self.stats["cycles"])[slot]
+                  - self.slot_base_stats["cycles"][slot])
+        com = int(np.asarray(self.stats["commits"])[slot]
+                  - self.slot_base_stats["commits"][slot])
+        self._responses.append(Response(
+            uid=req.uid,
+            tokens=toks[int(self.slot_base_len[slot]):],
+            n_cycles=cyc, n_committed=com,
+            latency_s=time.time() - self.slot_t0[slot]))
+        self.slot_req[slot] = None
+
+    def step(self):
+        """One scheduler tick: admit, run one verify cycle, mark budget."""
+        self._admit()
+        if all(r is None for r in self.slot_req):
+            return
+        carry = self._cycle(self.t_params, self.d_params, self._carry())
+        self._set_carry(carry)
+        # budget exhaustion -> finish slot
+        lengths = np.asarray(self.lengths)
+        fin = np.asarray(self.finished).copy()
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            produced = lengths[slot] - self.slot_base_len[slot]
+            if produced >= self.budget[slot]:
+                fin[slot] = True
+        self.finished = jnp.asarray(fin)
+
+    def run(self, *, max_ticks: int = 10_000) -> List[Response]:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.step()
+            # harvest finished
+            finished = np.asarray(self.finished)
+            for slot, req in enumerate(self.slot_req):
+                if req is not None and finished[slot]:
+                    self._harvest(slot)
+        out, self._responses = self._responses, []
+        return out

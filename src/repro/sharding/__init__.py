@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    AxisRules,
+    axis_rules,
+    constrain,
+    current_rules,
+    param_specs,
+    batch_axes,
+)
+
+__all__ = [
+    "AxisRules",
+    "axis_rules",
+    "constrain",
+    "current_rules",
+    "param_specs",
+    "batch_axes",
+]

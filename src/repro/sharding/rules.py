@@ -1,0 +1,159 @@
+"""Logical-axis sharding rules.
+
+Model code annotates tensors with *logical* axis names via ``constrain``.
+The launcher activates an ``AxisRules`` mapping logical names to mesh axes
+(or None).  Outside any rules context ``constrain`` is a no-op, so smoke
+tests and benchmarks run on one device untouched.
+
+Logical axes used across the codebase:
+
+  batch      global batch                    -> ("pod", "data") / ("data",)
+  seq        sequence (activations)          -> None (or "model" for long KV)
+  kv_seq     KV-cache length (full attn)     -> "model" on decode shapes
+  heads      attention heads / q-projection  -> "model"
+  kv_heads   kv heads (replicated if few)    -> None or "model"
+  ff         MLP hidden                      -> "model"
+  experts    MoE expert dim                  -> "model" (when divisible)
+  vocab      vocabulary                      -> "model"
+  embed      d_model residual dim            -> None
+  ssm_heads  mamba2/xlstm head dim           -> "model"
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisRules = Dict[str, Union[str, Tuple[str, ...], None]]
+
+_RULES: contextvars.ContextVar[Optional[AxisRules]] = contextvars.ContextVar(
+    "repro_axis_rules", default=None
+)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules):
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def single_pod_rules(*, shard_kv_seq: bool = False) -> AxisRules:
+    return {
+        "batch": ("data",),
+        "seq": None,
+        "kv_seq": "model" if shard_kv_seq else None,
+        "heads": "model",
+        "kv_heads": None,
+        "ff": "model",
+        "experts": "model",
+        "vocab": "model",
+        "embed": None,
+        "fsdp": None,
+        "fsdp_head": None,
+        "ssm_heads": "model",
+    }
+
+
+def multi_pod_rules(*, shard_kv_seq: bool = False) -> AxisRules:
+    rules = single_pod_rules(shard_kv_seq=shard_kv_seq)
+    rules["batch"] = ("pod", "data")
+    return rules
+
+
+def resolve(*logical: Optional[str]) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return P(*[rules.get(name) if name else None for name in logical])
+
+
+def constrain(x, *logical: Optional[str]):
+    """Annotate ``x`` with the mesh axes the active rules map to."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = resolve(*logical)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def batch_axes() -> Union[str, Tuple[str, ...], None]:
+    rules = current_rules()
+    if rules is None:
+        return None
+    return rules.get("batch")
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs, resolved by parameter path name.
+# ---------------------------------------------------------------------------
+
+# Patterns are matched against "/"-joined param paths.  Each entry maps to a
+# tuple of logical axis names per tensor dim.  A leading layer-stacking dim
+# (from scan-stacked blocks) is detected by rank and padded with None.
+_PARAM_PATTERNS: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    # the vocab-adjacent matrices get their own fsdp knob ("fsdp_head"):
+    # sharding their d_model dim over data makes the head matmul emit
+    # partial-sum logits all-reduced over data — a huge collective (§Perf)
+    (r".*embedding$", ("vocab", "fsdp_head")),
+    (r".*pos_embedding$", (None, "fsdp_head")),
+    (r".*lm_head$", ("fsdp_head", "vocab")),
+    (r".*(wq|wqkv)$", ("fsdp", "heads")),
+    (r".*(wk|wv)$", ("fsdp", "kv_heads")),
+    (r".*wo$", ("heads", "fsdp")),
+    (r".*(w1|w3)$", ("fsdp", "ff")),
+    (r".*w2$", ("ff", "fsdp")),
+    (r".*router$", ("fsdp", "experts")),
+    (r".*experts_w[13]$", ("experts", "fsdp", "ff")),
+    (r".*experts_w2$", ("experts", "ff", "fsdp")),
+    (r".*(in_proj|up_proj)$", ("fsdp", "ssm_heads")),
+    (r".*(out_proj|down_proj)$", ("ssm_heads", "fsdp")),
+    (r".*ffn_w[13]$", ("fsdp", "ff")),
+    (r".*ffn_w2$", ("ff", "fsdp")),
+    (r".*(conv_w)$", (None, "ssm_heads")),
+    (r".*(A_log|dt_bias|D)$", ("ssm_heads",)),
+    # mLSTM wq/wk/wv match the attention (wq|wk|wv) patterns above; their
+    # flat output dim shards on "heads" -> model, which is what we want.
+    (r".*(norm|scale|bias|gamma|beta|qk_norm).*", None),  # replicate norms
+)
+
+
+def _spec_for_path(path: str, ndim: int) -> P:
+    rules = current_rules() or {}
+    for pat, axes in _PARAM_PATTERNS:
+        if re.match(pat, path):
+            if axes is None:
+                return P()
+            resolved = [rules.get(a) if a else None for a in axes]
+            # pad leading dims (layer stacking) with None
+            pad = [None] * (ndim - len(resolved))
+            if ndim < len(resolved):
+                # e.g. tied weights reused at lower rank; trim from the left
+                resolved = resolved[len(resolved) - ndim:]
+                pad = []
+            return P(*pad, *resolved)
+    return P()
+
+
+def param_specs(params) -> "jax.tree_util.PyTreeDef":
+    """Build a PartitionSpec pytree mirroring ``params`` by path matching."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(
+            getattr(k, "key", getattr(k, "name", str(k))) for k in path
+        )
+        specs.append(_spec_for_path(name, leaf.ndim))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,56 @@
+"""Training step: next-token cross entropy (+ MoE aux loss), grads, AdamW.
+
+``make_train_step`` builds the jit/pjit-able step used both by the CPU
+trainer (tiny target/draft pairs for the paper-validation benchmarks) and by
+the ``train_4k`` multi-pod dry-run shape.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import adamw, apply_updates
+from repro.optim.adamw import Transform, global_norm
+
+
+def loss_fn(model: Model, params, batch: Dict[str, jnp.ndarray], *,
+            remat: bool = False, unrolled_attn: bool = False,
+            remat_policy=None,
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]
+    inputs = {"tokens": tokens[:, :-1]}
+    if "encoder_frames" in batch:
+        inputs["encoder_frames"] = batch["encoder_frames"]
+    labels = tokens[:, 1:]
+    logits, aux = model.forward(params, inputs, remat=remat,
+                                unrolled_attn=unrolled_attn,
+                                remat_policy=remat_policy)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels != 0).astype(jnp.float32)   # PAD = 0
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    ce = jnp.sum(nll * mask) / ntok
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux,
+                  "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+
+
+def make_train_step(model: Model, tx: Transform, *, remat: bool = False,
+                    unrolled_attn: bool = False,
+                    remat_policy=None) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, remat=remat,
+                              unrolled_attn=unrolled_attn,
+                              remat_policy=remat_policy),
+            has_aux=True)(params)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=global_norm(grads))
+        return params, opt_state, metrics
+
+    return train_step

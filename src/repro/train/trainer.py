@@ -1,0 +1,62 @@
+"""Minimal trainer loop with checkpointing + logging.
+
+Used by the examples to train the tiny target/draft pairs that power the
+paper-validation benchmarks (τ, θ-sweep, quality preservation)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.optim.schedule import cosine_schedule
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    lr: float = 3e-3
+    warmup_steps: int = 20
+    total_steps: int = 300
+    weight_decay: float = 0.1
+    log_every: int = 25
+    ckpt_every: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    remat: bool = False
+
+
+class Trainer:
+    def __init__(self, model: Model, cfg: TrainerConfig):
+        self.model = model
+        self.cfg = cfg
+        self.tx = adamw(
+            cosine_schedule(cfg.lr, cfg.warmup_steps, cfg.total_steps),
+            weight_decay=cfg.weight_decay)
+        self.step_fn = jax.jit(make_train_step(model, self.tx,
+                                               remat=cfg.remat))
+
+    def fit(self, params, batches: Iterator[Dict[str, np.ndarray]],
+            *, log: Callable[[str], None] = print):
+        opt_state = self.tx.init(params)
+        t0 = time.time()
+        history = []
+        for step, batch in enumerate(batches, start=1):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, m = self.step_fn(params, opt_state, batch)
+            if step % self.cfg.log_every == 0 or step == 1:
+                m = {k: float(v) for k, v in m.items()}
+                history.append({"step": step, **m})
+                log(f"step {step:5d} loss {m['loss']:.4f} "
+                    f"ppl {m['ppl']:.2f} gnorm {m['grad_norm']:.2f} "
+                    f"({time.time() - t0:.1f}s)")
+            if self.cfg.ckpt_every and step % self.cfg.ckpt_every == 0:
+                save_checkpoint(self.cfg.ckpt_dir, step, params)
+            if step >= self.cfg.total_steps:
+                break
+        return params, history

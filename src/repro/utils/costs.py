@@ -1,0 +1,154 @@
+"""Analytic FLOP / byte models per architecture family.
+
+XLA's cost_analysis counts while-loop bodies once, so for the scanned
+prefill/train chunk loops the HLO numbers undercount.  These closed-form
+models supply the roofline compute/memory terms; HLO numbers are reported
+alongside (exact for the loop-free decode lowering).
+
+All numbers are whole-program (sum over chips); the roofline divides by
+chip count.  Conventions:
+
+* matmul FLOPs = 2 * params_touched * tokens (fwd), x3 for train (bwd).
+* attention FLOPs = 4 * Σ_ctx * H * hd  (QK^T + AV, causal-exact).
+* SSD/mLSTM intra-chunk ≈ 4 * heads * chunk/2 * (N + P) per token plus the
+  O(N*P) state update.
+* bytes: weights read once per step (FSDP gathers don't change HBM reads),
+  KV cache fully streamed per decode step, activations ~c_act tensors of
+  (tokens, d) per layer for prefill (x3 + optimizer traffic for train).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+_DT = {"bfloat16": 2, "float32": 4, "float16": 2}
+
+
+def _attn_ctx_sum(s: int, window: int) -> float:
+    """Σ_pos ctx(pos) for causal (optionally windowed) self-attention."""
+    if window and window < s:
+        return window * s - window * (window - 1) / 2.0
+    return s * (s + 1) / 2.0
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid_attn_every
+    if cfg.family == "ssm":
+        return 0
+    return cfg.n_layers
+
+
+def _matmul_params(cfg: ModelConfig, *, active: bool = True) -> float:
+    n = cfg.active_param_count() if active else cfg.param_count()
+    emb_gather = cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        n -= emb_gather          # the gather-side table is not a matmul
+    return float(n)
+
+
+def _ssm_flops_per_token(cfg: ModelConfig) -> float:
+    """Per-token recurrence FLOPs (excluding projections, already counted)."""
+    if cfg.family == "hybrid":
+        nh, n, p, q = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_chunk
+        n_ssm_layers = cfg.n_layers
+        per = nh * (2 * (q / 2) * (n + p) + 6 * n * p)
+        return per * n_ssm_layers
+    if cfg.family == "ssm":
+        din = 2 * cfg.d_model
+        nh = cfg.n_heads
+        dk = din // nh
+        q = cfg.ssm_chunk
+        n_m = cfg.n_layers - cfg.n_layers // cfg.slstm_every
+        per = nh * (2 * (q / 2) * (dk + dk) + 6 * dk * dk)
+        return per * n_m
+    return 0.0
+
+
+def analytic_flops(cfg: ModelConfig, shape: ShapeConfig, *,
+                   window: Optional[int] = None,
+                   verify_tokens: int = 1) -> float:
+    w = window if window is not None else cfg.sliding_window
+    h, hd = cfg.n_heads, cfg.head_dim
+    la = _n_attn_layers(cfg)
+
+    if shape.kind in ("train", "prefill"):
+        tokens = shape.global_batch * shape.seq_len
+        mm = 2.0 * _matmul_params(cfg) * tokens
+        attn = 4.0 * _attn_ctx_sum(shape.seq_len, w) * h * hd * la \
+            * shape.global_batch
+        if cfg.family == "audio":
+            se = cfg.encoder_seq_len
+            attn += 4.0 * se * se * h * hd * cfg.n_encoder_layers \
+                * shape.global_batch                      # encoder, non-causal
+            attn += 4.0 * shape.seq_len * se * h * hd * cfg.n_layers \
+                * shape.global_batch                      # cross attention
+            mm += 2.0 * _matmul_params(cfg) * 0           # enc counted in params
+        ssm = _ssm_flops_per_token(cfg) * tokens
+        total = mm + attn + ssm
+        return 3.0 * total if shape.kind == "train" else total
+
+    # decode: verify_tokens new tokens against a seq_len context
+    tokens = shape.global_batch * verify_tokens
+    ctx = min(shape.seq_len, w) if w else shape.seq_len
+    mm = 2.0 * _matmul_params(cfg) * tokens
+    attn = 4.0 * ctx * h * hd * la * tokens
+    if cfg.family == "audio":
+        attn += 4.0 * cfg.encoder_seq_len * h * hd * cfg.n_layers * tokens
+    ssm = 0.0
+    if cfg.family == "hybrid":
+        ssm = cfg.n_layers * cfg.n_ssm_heads * 6 * cfg.ssm_state \
+            * cfg.ssm_head_dim * tokens
+    elif cfg.family == "ssm":
+        din = 2 * cfg.d_model
+        dk = din // cfg.n_heads
+        n_m = cfg.n_layers - cfg.n_layers // cfg.slstm_every
+        ssm = n_m * cfg.n_heads * 6 * dk * dk * tokens
+    return mm + attn + ssm
+
+
+def cache_bytes(cfg: ModelConfig, shape: ShapeConfig, *,
+                window: Optional[int] = None) -> float:
+    w = window if window is not None else cfg.sliding_window
+    b = shape.global_batch
+    dt = _DT.get(cfg.dtype, 2)
+    total = 0.0
+    la = _n_attn_layers(cfg)
+    if la:
+        length = min(shape.seq_len, w) if w else shape.seq_len
+        total += 2.0 * la * b * length * cfg.n_kv_heads * cfg.head_dim * dt
+    if cfg.family == "hybrid":
+        total += cfg.n_layers * b * cfg.n_ssm_heads * cfg.ssm_state \
+            * cfg.ssm_head_dim * 4
+    if cfg.family == "ssm":
+        din = 2 * cfg.d_model
+        dk = din // cfg.n_heads
+        n_m = cfg.n_layers - cfg.n_layers // cfg.slstm_every
+        total += n_m * cfg.n_heads * b * dk * (dk + 1) * 4
+    if cfg.family == "audio":
+        total += 2.0 * cfg.n_layers * b * cfg.encoder_seq_len \
+            * cfg.n_kv_heads * cfg.head_dim * dt
+    return total
+
+
+def analytic_bytes(cfg: ModelConfig, shape: ShapeConfig, *,
+                   window: Optional[int] = None,
+                   verify_tokens: int = 1) -> float:
+    dt = _DT.get(cfg.dtype, 2)
+    params = cfg.param_count()
+
+    if shape.kind == "decode":
+        # weights once + cache streamed once + new kv written
+        return params * dt + cache_bytes(cfg, shape, window=window) \
+            + shape.global_batch * verify_tokens * cfg.d_model * dt * 4
+
+    tokens = shape.global_batch * shape.seq_len
+    c_act = 8  # residual/attn/ffn intermediates per layer (write+read)
+    act = tokens * cfg.d_model * dt * c_act * cfg.n_layers
+    logits = tokens * cfg.vocab_size * dt
+    if shape.kind == "prefill":
+        return params * dt + act + logits
+    # train: fwd read + bwd read + grad write (bf16-ish) + fp32 master/opt
+    opt = params * 4 * 4          # p32, g32, mu, nu read+write amortised
+    return params * dt * 3 + opt + 2.5 * act + 3 * logits

@@ -1,0 +1,62 @@
+"""Dry-run lowering mode.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count, so a depth-L scanned model reports ~1/L of its FLOPs.  For the
+roofline extraction the dry-run activates this mode, which makes the model
+code (a) python-unroll the *layer* loops so per-layer work is counted
+exactly, and (b) widen attention chunks so decode attention is a single
+block (loop-free, exact).  Production execution keeps ``lax.scan``.
+
+Prefill/train attention & SSD chunk loops intentionally stay scanned (their
+unrolled HLO would be quadratic in blocks); their compute/memory terms are
+supplemented analytically in ``repro.utils.costs`` — collectives are
+unaffected because no collective ops live inside those chunk loops (the
+kv_seq axis is only sharded for decode shapes, which are loop-free here).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = contextvars.ContextVar("repro_unroll_layers", default=False)
+_ATTN_CHUNK = contextvars.ContextVar("repro_attn_chunk", default=None)
+
+
+@contextlib.contextmanager
+def dryrun_lowering(*, unroll_layers: bool = True,
+                    attn_chunk: Optional[int] = None):
+    t1 = _UNROLL.set(unroll_layers)
+    t2 = _ATTN_CHUNK.set(attn_chunk)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(t1)
+        _ATTN_CHUNK.reset(t2)
+
+
+def unroll_layers() -> bool:
+    return _UNROLL.get()
+
+
+def attn_chunk_override() -> Optional[int]:
+    return _ATTN_CHUNK.get()
+
+
+def maybe_scan(body, carry, xs):
+    """lax.scan in production; python unroll in dry-run lowering mode."""
+    if not _UNROLL.get():
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked

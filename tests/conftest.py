@@ -1,0 +1,17 @@
+import dataclasses
+
+import jax
+import pytest
+
+# Tests run on the single real CPU device (the dry-run forces 512 devices in
+# its own subprocess only).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32")

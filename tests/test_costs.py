@@ -1,0 +1,57 @@
+"""Analytic cost-model sanity tests."""
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.utils.costs import analytic_bytes, analytic_flops, cache_bytes
+
+
+def test_train_flops_scale_6nd():
+    cfg = get_config("granite-8b")
+    shape = get_shape("train_4k")
+    f = analytic_flops(cfg, shape)
+    tokens = shape.global_batch * shape.seq_len
+    lower = 6 * 7e9 * tokens          # 6·N·D ballpark (non-emb params)
+    assert f > lower, (f, lower)
+    assert f < 6 * 12e9 * tokens * 1.5
+
+
+def test_decode_flops_2nd():
+    cfg = get_config("granite-8b")
+    shape = get_shape("decode_32k")
+    f = analytic_flops(cfg, shape, verify_tokens=1)
+    # ~2·N per token + attention over 32k context
+    assert f > 2 * 7e9 * shape.global_batch
+    assert f < 2 * 12e9 * shape.global_batch * 2
+
+
+def test_moe_decode_uses_active_params():
+    dbrx = get_config("dbrx-132b")
+    shape = get_shape("decode_32k")
+    f = analytic_flops(dbrx, shape)
+    # active ~36B << total 132B
+    assert f < 2 * 60e9 * shape.global_batch * 1.5
+
+
+def test_window_caps_cache():
+    cfg = get_config("granite-8b")
+    shape = get_shape("long_500k")
+    full = cache_bytes(cfg, shape)
+    windowed = cache_bytes(cfg, shape, window=4096)
+    assert windowed < full / 100
+
+
+def test_ssm_state_constant_in_seq():
+    cfg = get_config("xlstm-1.3b")
+    c1 = cache_bytes(cfg, get_shape("decode_32k"))
+    c2 = cache_bytes(cfg, get_shape("long_500k"))
+    # state size scales only with batch (128 vs 1), never seq_len
+    assert c2 < c1
+
+
+def test_bytes_decode_dominated_by_params_plus_cache():
+    cfg = get_config("deepseek-67b")
+    shape = get_shape("decode_32k")
+    b = analytic_bytes(cfg, shape)
+    params = cfg.param_count() * 2
+    cache = cache_bytes(cfg, shape)
+    assert abs(b - (params + cache)) / b < 0.05

@@ -1,0 +1,54 @@
+"""HLO collective-accounting parser tests (synthetic HLO text)."""
+from repro.utils.hlo import (collective_bytes, collective_bytes_loop_aware,
+                             duplicate_collectives)
+
+HLO_FLAT = """
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %ag = f32[64,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = bf16[32,32]{1,0} all-reduce(%y), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+}
+"""
+
+HLO_LOOP = """
+%cond.1 (arg: (s32[])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body.2 (arg: (s32[])) -> (s32[]) {
+  %ar2 = f32[8,8]{1,0} all-reduce(%z), replica_groups={{0,1}}, to_apply=%add
+}
+
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %w = (s32[]) while(%init), condition=%cond.1, body=%body.2
+  %ag = f32[4,4]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+
+def test_flat_bytes():
+    b, c = collective_bytes(HLO_FLAT)
+    # all-gather: 64*128*4 bytes * 3/4
+    assert b["all-gather"] == int(64 * 128 * 4 * 3 / 4)
+    # all-reduce: 2 * 32*32*2 * 7/8
+    assert b["all-reduce"] == int(2 * 32 * 32 * 2 * 7 / 8)
+    assert c == {"all-gather": 1, "all-reduce": 1}
+
+
+def test_loop_aware_multiplies_body():
+    b, c = collective_bytes_loop_aware(HLO_LOOP)
+    one_ar = int(2 * 8 * 8 * 4 * 1 / 2)
+    assert b["all-reduce"] == 12 * one_ar            # trip count 12
+    assert c["all-reduce"] == 12
+    assert c["all-gather"] == 1                      # entry not multiplied
+
+
+def test_loop_aware_equals_flat_when_no_loops():
+    b1, c1 = collective_bytes(HLO_FLAT)
+    b2, c2 = collective_bytes_loop_aware(HLO_FLAT)
+    assert b1 == b2 and c1 == c2
+
+
+def test_duplicate_collectives_counts():
+    txt = HLO_FLAT + HLO_FLAT.replace("%ag", "%ag2").replace("%ar", "%ar2")
+    assert duplicate_collectives(txt) >= 1

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import verify as V
+from repro.models.layers import blockwise_attention
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 3),
+    k=st.integers(1, 8),
+    v=st.integers(5, 200),
+    theta=st.floats(0.5, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_verify_chain_invariants(b, k, v, theta, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((b, k + 1, v)) * 2, jnp.float32)
+    draft = jnp.asarray(rng.integers(0, v, (b, k)), jnp.int32)
+    key = jax.random.PRNGKey(seed % 1000)
+
+    strict = V.verify_chain(draft, logits, rule="strict", mode="greedy",
+                            key=key)
+    mars = V.verify_chain(draft, logits, rule="mars", mode="greedy",
+                          theta=theta, key=key)
+
+    for res in (strict, mars):
+        n_a, n_c = np.asarray(res.n_accept), np.asarray(res.n_commit)
+        assert ((0 <= n_a) & (n_a <= k)).all()
+        assert (n_c == n_a + 1).all()
+        out = np.asarray(res.out_tokens)
+        d = np.asarray(draft)
+        for i in range(b):
+            # accepted prefix must equal the draft prefix
+            np.testing.assert_array_equal(out[i, :n_a[i]], d[i, :n_a[i]])
+
+    # MARS (greedy base) accepts a superset of strict accepts
+    assert (np.asarray(mars.n_accept) >= np.asarray(strict.n_accept)).all()
+    assert (np.asarray(mars.n_relaxed)
+            <= np.asarray(mars.n_accept)).all()
+
+
+@settings(**SET)
+@given(
+    theta=st.floats(0.5, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_relaxation_iff_margin_condition(theta, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((4, 6, 50)) * 3, jnp.float32)
+    draft = jnp.asarray(rng.integers(0, 50, (4, 6)), jnp.int32)
+    relax = np.asarray(V.mars_relax_mask(draft, logits, theta))
+    vals, idx = jax.lax.top_k(logits, 2)
+    z1, z2 = np.asarray(vals[..., 0]), np.asarray(vals[..., 1])
+    expected = (np.asarray(draft) == np.asarray(idx[..., 1])) \
+        & (z1 > 0) & (z2 > 0) & (z2 / np.maximum(z1, 1e-30) > theta)
+    np.testing.assert_array_equal(relax, expected)
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 2),
+    t=st.integers(1, 5),
+    s=st.integers(4, 40),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 3]),
+    d=st.sampled_from([8, 16]),
+    chunk=st.sampled_from([4, 16, 64]),
+    window=st.sampled_from([0, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_blockwise_attention_matches_naive(b, t, s, hkv, g, d, chunk, window,
+                                           seed):
+    """Chunked online-softmax attention == naive masked softmax attention,
+    for any chunking — the invariant every attention path relies on."""
+    rng = np.random.default_rng(seed)
+    h = hkv * g
+    q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    q_pos = jnp.tile(jnp.arange(s - t, s)[None], (b, 1)).astype(jnp.int32)
+    k_pos = jnp.tile(jnp.arange(s)[None], (b, 1)).astype(jnp.int32)
+
+    got = blockwise_attention(q, k, v, q_pos, k_pos, window=window,
+                              chunk=chunk)
+
+    # naive reference
+    qg = q.reshape(b, t, hkv, g, d)
+    scores = jnp.einsum("btkgd,bskd->btkgs", qg, k) / np.sqrt(d)
+    valid = (k_pos[:, None, :] >= 0) & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        valid &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    scores = jnp.where(valid[:, :, None, None, :], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    want = jnp.einsum("btkgs,bskd->btkgd", probs, v).reshape(b, t, h, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(**SET)
+@given(
+    chunk=st.sampled_from([4, 8, 32]),
+    s=st.integers(5, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_recurrence_chunking_invariance(chunk, s, seed):
+    """chunked_linear_recurrence must give identical results for any chunk
+    size (== the sequential recurrence)."""
+    from repro.models.ssm import chunked_linear_recurrence, recurrent_step
+    rng = np.random.default_rng(seed)
+    b, h, n, p = 1, 2, 4, 8
+    c = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    log_decay = -jnp.abs(
+        jnp.asarray(rng.standard_normal((b, s, h)), jnp.float32)) * 0.2
+    scale = jnp.abs(jnp.asarray(rng.standard_normal((b, s, h)), jnp.float32))
+    h0 = jnp.asarray(rng.standard_normal((b, h, n, p)), jnp.float32) * 0.1
+
+    y1, s1 = chunked_linear_recurrence(c, bm, v, log_decay, scale,
+                                       chunk=chunk, init_state=h0)
+    y2, s2 = recurrent_step(c, bm, v, log_decay, scale, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=3e-4,
+                               atol=3e-4)

@@ -1,0 +1,97 @@
+"""Sharding-plan tests (no multi-device mesh needed: specs are pure data)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_shape, get_smoke, list_archs
+from repro.launch.shardplan import cache_specs, rules_for
+from repro.models import build_model
+from repro.sharding import axis_rules, param_specs
+from repro.sharding.rules import single_pod_rules
+
+
+def test_param_specs_dense():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    rules = single_pod_rules()
+    rules["fsdp"] = ("data",)
+    rules["fsdp_head"] = ("data",)
+    with axis_rules(rules):
+        specs = param_specs(params)
+    blk = specs["blocks"]
+    assert blk["attn"]["wq"] == P(None, "data", "model")   # layer, fsdp, heads
+    assert blk["attn"]["wo"] == P(None, "model", "data")
+    assert blk["mlp"]["w1"] == P(None, "data", "model")
+    assert blk["norm1"]["scale"] == P()
+    assert specs["embedding"] == P("model", "data")
+
+
+def test_param_specs_divisible_16way():
+    """Every sharded weight dim must divide by 16 under the single-pod plan
+    (uneven shards are legal in GSPMD but we keep the plan clean)."""
+    for arch in list_archs():
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        shape = get_shape("decode_32k")
+        rules = rules_for(arch, shape, multi_pod=False)
+        with axis_rules(rules):
+            specs = param_specs(params)
+        flat_p, _ = jax.tree_util.tree_flatten_with_path(params)
+        flat_s = jax.tree_util.tree_flatten(
+            specs, is_leaf=lambda x: isinstance(x, P))[0]
+        for (pth, leaf), spec in zip(flat_p, flat_s):
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 10):
+                if ax == "model":
+                    name = "/".join(str(getattr(k, 'key', k)) for k in pth)
+                    assert dim % 16 == 0, (arch, name, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+@pytest.mark.parametrize("arch", ["granite-8b", "zamba2-2.7b", "xlstm-1.3b",
+                                  "whisper-large-v3", "dbrx-132b"])
+def test_cache_specs_structure_matches_cache(arch, shape_name):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    enc = None
+    if cfg.family == "audio":
+        enc = jax.ShapeDtypeStruct((2, cfg.encoder_seq_len, cfg.d_model),
+                                   jnp.float32)
+    cache = jax.eval_shape(
+        lambda p, f: model.init_cache(p, 2, 128, encoder_frames=f),
+        params, enc)
+    rules = rules_for(arch, get_shape(shape_name), multi_pod=False)
+    specs = cache_specs(cache, rules)
+    # same tree structure and every spec rank <= leaf rank
+    jax.tree_util.tree_map(
+        lambda leaf, sp: None, cache, specs)
+    flat_c = jax.tree_util.tree_leaves(cache)
+    flat_s = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for leaf, sp in zip(flat_c, flat_s):
+        assert len(sp) <= leaf.ndim, (leaf.shape, sp)
+
+
+def test_rules_long500k_batch_unsharded():
+    rules = rules_for("granite-8b", get_shape("long_500k"), multi_pod=True)
+    assert rules["batch"] is None
+    assert rules["kv_seq"] == "data"
+
+
+def test_rules_train_fsdp():
+    rules = rules_for("deepseek-67b", get_shape("train_4k"), multi_pod=True)
+    assert rules["fsdp"] == ("pod", "data")
+    assert rules["batch"] == ("pod", "data")
+
+
+def test_granite_moe_exceptions():
+    rules = rules_for("granite-moe-3b-a800m", get_shape("decode_32k"),
+                      multi_pod=False)
+    assert rules["experts"] is None   # 40 % 16 != 0
+    assert rules["heads"] is None     # 24 % 16 != 0
+    assert rules["ff"] == "model"

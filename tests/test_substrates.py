@@ -1,0 +1,90 @@
+"""Optimizer / data / checkpoint / trainer substrate tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.data import ByteTokenizer, MarkovCorpus, make_lm_batches
+from repro.optim import adamw, apply_updates
+from repro.optim.schedule import cosine_schedule
+
+
+def test_adamw_minimises_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,))}
+    tx = adamw(0.1, weight_decay=0.0)
+    state = tx.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - target))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = tx.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(s(jnp.asarray(100))) <= 0.11
+    assert float(s(jnp.asarray(55))) < float(s(jnp.asarray(15)))
+
+
+def test_byte_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    text = "MARS: margin-aware vérification ✓"
+    ids = tok.encode(text, bos=True, eos=True)
+    assert ids[0] == tok.BOS and ids[-1] == tok.EOS
+    assert tok.decode(ids) == text
+
+
+def test_markov_corpus_entropy_knob():
+    lo = MarkovCorpus(vocab_size=32, temperature=0.3, seed=1)
+    hi = MarkovCorpus(vocab_size=32, temperature=2.0, seed=1)
+    ent = lambda p: -(p * np.log(np.maximum(p, 1e-12))).sum(-1).mean()
+    assert ent(hi._probs) > ent(lo._probs) + 0.3
+
+
+def test_lm_batches_shapes():
+    corpus = MarkovCorpus(vocab_size=16, seed=0)
+    batches = list(make_lm_batches(corpus, batch=4, seq_len=32, n_batches=3))
+    assert len(batches) == 3
+    assert batches[0]["tokens"].shape == (4, 33)
+    assert batches[0]["tokens"].max() < 16
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "b": [jnp.ones((4,), jnp.int32), jnp.zeros((2,), jnp.float32)]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, tree)
+        assert latest_step(d) == 7
+        out = load_checkpoint(d, 7, jax.tree.map(np.asarray, tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_reduces_loss(rng):
+    import dataclasses
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32",
+                              vocab_size=32)
+    model = build_model(cfg)
+    params = model.init(rng)
+    corpus = MarkovCorpus(vocab_size=32, temperature=0.7, seed=0)
+    trainer = Trainer(model, TrainerConfig(lr=3e-3, warmup_steps=5,
+                                           total_steps=40, log_every=10))
+    params, hist = trainer.fit(
+        params, make_lm_batches(corpus, batch=8, seq_len=32, n_batches=40),
+        log=lambda s: None)
+    # 40 CPU steps: expect a clear but not dramatic decrease
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.05

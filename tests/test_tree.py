@@ -1,0 +1,117 @@
+"""Tree-draft speculative decoding tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import EagleDrafter, init_eagle_params, make_ar_generate_fn
+from repro.core.tree import (TreeEngineConfig, make_caterpillar,
+                             make_tree_generate_fn, verify_tree)
+from repro.models import build_model
+
+
+def test_caterpillar_template():
+    tpl = make_caterpillar(k=3, branch=2)
+    assert len(tpl.depth) == 1 + 3 * 2
+    # root attends only itself
+    assert tpl.mask[0].sum() == 1
+    # chain node at depth 3 attends root + chain(1,2) + self = 4
+    chain3 = int(np.where((tpl.depth == 3) & tpl.is_chain)[0][0])
+    assert tpl.mask[chain3].sum() == 4
+    # siblings never appear in anyone else's mask column
+    sib = int(np.where((tpl.depth == 1) & ~tpl.is_chain)[0][0])
+    assert tpl.mask[:, sib].sum() == 1  # only itself
+
+
+def test_verify_tree_sibling_rescue():
+    """Chain rejected at depth 1, but a sibling matches top-1 -> rescued."""
+    tpl = make_caterpillar(k=2, branch=2)
+    v = 16
+    b = 1
+    n = len(tpl.depth)
+    # node tokens: root=0, chain d1=5, sib d1=7, chain d2=9, sib d2=11
+    node_tokens = jnp.asarray([[0, 5, 7, 9, 11]], jnp.int32)
+    logits = np.full((b, n, v), -5.0, np.float32)
+    logits[0, 0, 7] = 5.0           # root's successor: top1 = 7 (not 5!)
+    # sibling 7's successor: top1 = 3
+    sib1 = 2
+    logits[0, sib1, 3] = 5.0
+    out, n_commit, n_accept, n_rel = verify_tree(
+        tpl, node_tokens, jnp.asarray(logits), rule="strict", mode="greedy",
+        theta=0.9, temperature=0.0, key=jax.random.PRNGKey(0))
+    assert int(n_accept[0]) == 1          # the rescued sibling
+    assert int(n_commit[0]) == 2
+    np.testing.assert_array_equal(np.asarray(out[0, :2]), [7, 3])
+
+
+def test_verify_tree_mars_relaxes_sibling():
+    tpl = make_caterpillar(k=1, branch=2)
+    v = 16
+    node_tokens = jnp.asarray([[0, 5, 7]], jnp.int32)   # root, chain, sib
+    logits = np.full((1, 3, v), -5.0, np.float32)
+    logits[0, 0, 2] = 5.0      # top1 = 2 (chain 5 rejected strictly)
+    logits[0, 0, 7] = 4.8      # top2 = 7 = sibling, ratio 0.96 > 0.9
+    logits[0, 2, 1] = 5.0      # sibling successor top1 = 1
+    strict = verify_tree(tpl, node_tokens, jnp.asarray(logits),
+                         rule="strict", mode="greedy", theta=0.9,
+                         temperature=0.0, key=jax.random.PRNGKey(0))
+    mars = verify_tree(tpl, node_tokens, jnp.asarray(logits),
+                       rule="mars", mode="greedy", theta=0.9,
+                       temperature=0.0, key=jax.random.PRNGKey(0))
+    assert int(strict[2][0]) == 0
+    assert int(mars[2][0]) == 1           # sibling rescued via relaxation
+    assert int(mars[3][0]) == 1           # counted as relaxed
+    np.testing.assert_array_equal(np.asarray(mars[0][0, :2]), [7, 1])
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "dbrx-132b"])
+def test_tree_strict_greedy_equals_ar(arch, rng):
+    """With strict greedy verification the tree engine must still reproduce
+    the AR output exactly (sibling rescue == the correction token)."""
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32")
+    tgt = build_model(cfg)
+    t_params = tgt.init(jax.random.PRNGKey(1))
+    e_params = init_eagle_params(cfg, jax.random.PRNGKey(7))
+    drafter = EagleDrafter(tgt, k=3, temperature=0.0)
+
+    B, S, NEW = 2, 8, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, S), 3,
+                                cfg.vocab_size)
+    plen = jnp.full((B,), S, jnp.int32)
+
+    ar = make_ar_generate_fn(tgt, temperature=0.0)
+    out_ar = ar(t_params, prompt, plen, jax.random.PRNGKey(9), max_new=NEW)
+
+    gen = make_tree_generate_fn(
+        tgt, drafter, TreeEngineConfig(k=3, branch=2, rule="strict",
+                                       mode="greedy", temperature=0.0))
+    out = gen(t_params, e_params, prompt, plen, jax.random.PRNGKey(9),
+              max_new=NEW)
+    for b in range(B):
+        n = S + NEW
+        np.testing.assert_array_equal(
+            np.asarray(out_ar["tokens"])[b, :n],
+            np.asarray(out["tokens"])[b, :n])
+
+
+def test_tree_mars_runs_and_counts(rng):
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    t_params = tgt.init(jax.random.PRNGKey(1))
+    e_params = init_eagle_params(cfg, jax.random.PRNGKey(7))
+    drafter = EagleDrafter(tgt, k=3, temperature=0.0)
+    gen = make_tree_generate_fn(
+        tgt, drafter, TreeEngineConfig(k=3, branch=3, rule="mars",
+                                       mode="greedy", temperature=0.0))
+    B, S = 2, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, S), 3,
+                                cfg.vocab_size)
+    plen = jnp.full((B,), S, jnp.int32)
+    out = gen(t_params, e_params, prompt, plen, jax.random.PRNGKey(0),
+              max_new=12)
+    st = out["stats"]
+    assert (np.asarray(st["commits"]) == np.asarray(out["lengths"] - plen)).all()
+    assert (np.asarray(st["relaxed"]) <= np.asarray(st["accepts"])).all()

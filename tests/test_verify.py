@@ -1,0 +1,124 @@
+"""Unit tests for the MARS verification rule (paper Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import verify as V
+
+
+def make_logits(rows):
+    """rows: list of dicts {token: logit}; vocab inferred."""
+    v = max(max(r) for r in rows) + 1
+    out = np.full((len(rows), v), -5.0, np.float32)
+    for i, r in enumerate(rows):
+        for tok, z in r.items():
+            out[i, tok] = z
+    return jnp.asarray(out)
+
+
+def test_exact_match_all_accept():
+    # drafts equal the target argmax everywhere -> all accepted + bonus
+    logits = make_logits([{3: 5.0}, {4: 5.0}, {1: 5.0}])  # K=2 + bonus row
+    draft = jnp.asarray([[3, 4]])
+    res = V.verify_chain(draft, logits[None], rule="strict", mode="greedy")
+    assert int(res.n_accept[0]) == 2
+    assert int(res.n_commit[0]) == 3
+    np.testing.assert_array_equal(np.asarray(res.out_tokens[0]), [3, 4, 1])
+
+
+def test_first_mismatch_truncates():
+    logits = make_logits([{3: 5.0}, {4: 5.0}, {1: 5.0}])
+    draft = jnp.asarray([[9, 4]])          # first token wrong
+    res = V.verify_chain(draft, logits[None], rule="strict", mode="greedy")
+    assert int(res.n_accept[0]) == 0
+    np.testing.assert_array_equal(np.asarray(res.out_tokens[0, :1]), [3])
+    assert int(res.n_commit[0]) == 1
+
+
+def test_mars_relaxes_low_margin_top2():
+    # z1=5.0, z2=4.8 -> ratio 0.96 > 0.9: draft == top2 accepted via MARS
+    logits = make_logits([{3: 5.0, 7: 4.8}, {4: 5.0}, {1: 5.0}])
+    draft = jnp.asarray([[7, 4]])
+    strict = V.verify_chain(draft, logits[None], rule="strict", mode="greedy")
+    mars = V.verify_chain(draft, logits[None], rule="mars", mode="greedy",
+                          theta=0.9)
+    assert int(strict.n_accept[0]) == 0
+    assert int(mars.n_accept[0]) == 2
+    assert int(mars.n_relaxed[0]) == 1
+    np.testing.assert_array_equal(np.asarray(mars.out_tokens[0]), [7, 4, 1])
+
+
+def test_mars_respects_theta():
+    # ratio = 4.0/5.0 = 0.8 < 0.9 -> still rejected (high margin)
+    logits = make_logits([{3: 5.0, 7: 4.0}, {4: 5.0}, {1: 5.0}])
+    draft = jnp.asarray([[7, 4]])
+    mars = V.verify_chain(draft, logits[None], rule="mars", mode="greedy",
+                          theta=0.9)
+    assert int(mars.n_accept[0]) == 0
+    # but a permissive theta accepts it
+    mars_lo = V.verify_chain(draft, logits[None], rule="mars", mode="greedy",
+                             theta=0.75)
+    assert int(mars_lo.n_accept[0]) == 2
+
+
+def test_mars_positivity_guard():
+    # top-2 logits negative: ratio undefined regime -> no relaxation even
+    # though z2/z1 = (-1)/(-0.9)... guard requires z1>0, z2>0
+    logits = make_logits([{3: 0, 7: 0}, {4: 5.0}, {1: 5.0}])
+    logits = logits.at[0, 3].set(-0.9).at[0, 7].set(-1.0)
+    draft = jnp.asarray([[7, 4]])
+    mars = V.verify_chain(draft, logits[None], rule="mars", mode="greedy")
+    assert int(mars.n_relaxed[0]) == 0
+
+
+def test_top2_ratio_bounds():
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((32, 50)),
+                         jnp.float32) * 3
+    _, _, ratio, valid = V.top2_and_ratio(logits)
+    r = np.asarray(ratio)[np.asarray(valid)]
+    assert ((r > 0) & (r <= 1.0)).all()
+
+
+def test_mars_kernel_path_matches_reference():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((2, 8, 64)) * 2, jnp.float32)
+    draft = jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    a = V.verify_chain(draft, jnp.pad(logits, ((0, 0), (0, 1), (0, 0))),
+                       rule="mars", mode="greedy", use_kernel=False, key=key)
+    b = V.verify_chain(draft, jnp.pad(logits, ((0, 0), (0, 1), (0, 0))),
+                       rule="mars", mode="greedy", use_kernel=True, key=key)
+    np.testing.assert_array_equal(np.asarray(a.out_tokens),
+                                  np.asarray(b.out_tokens))
+    np.testing.assert_array_equal(np.asarray(a.n_relaxed),
+                                  np.asarray(b.n_relaxed))
+
+
+def test_strict_sampling_preserves_target_distribution():
+    """Monte-Carlo check of the Leviathan residual scheme: the first emitted
+    token's marginal must equal the target distribution, regardless of the
+    draft distribution."""
+    key = jax.random.PRNGKey(0)
+    v = 5
+    t_logits = jnp.asarray([0.5, 1.5, -0.3, 0.9, 0.1], jnp.float32)
+    q_probs = jnp.asarray([0.5, 0.1, 0.1, 0.2, 0.1], jnp.float32)
+    p = np.asarray(jax.nn.softmax(t_logits))
+
+    n = 6000
+    keys = jax.random.split(key, n)
+
+    def one(k):
+        kd, kv = jax.random.split(k)
+        d = jax.random.categorical(kd, jnp.log(q_probs))
+        draft = d[None, None]                       # (1, 1)
+        logits = jnp.stack([t_logits, t_logits])[None]  # (1, 2, V)
+        res = V.verify_chain(
+            draft, logits, rule="strict", mode="sample", temperature=1.0,
+            key=kv, draft_token_probs=q_probs[d][None, None],
+            draft_full_probs=q_probs[None, None, :])
+        return res.out_tokens[0, 0]
+
+    toks = np.asarray(jax.vmap(one)(keys))
+    emp = np.bincount(toks, minlength=v) / n
+    assert np.abs(emp - p).max() < 0.03, (emp, p)
