@@ -5,6 +5,13 @@ measures what the tree adds on the trained bench pair: a caterpillar tree
 with `branch` candidates per depth lets a rejected chain step be *rescued*
 by an accepted sibling — under MARS, also by a relaxed low-margin sibling.
 
+Both topologies run through the unified ``DecodeSession`` engine core —
+the only difference between rows is ``EngineConfig(topology=...)``.  All
+rows (tree included) now use the ``guard="margin"`` small-model extension
+the chain rows always used, so chain-vs-tree is apples-to-apples; tree MARS
+numbers therefore shift slightly vs the pre-unification benchmark, whose
+tree path hard-coded the paper's positive-logit guard.
+
     PYTHONPATH=src python -m benchmarks.tree_vs_chain
 """
 from __future__ import annotations
@@ -13,9 +20,7 @@ import jax
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import (EagleDrafter, EngineConfig, make_generate_fn,
-                        metrics)
-from repro.core.tree import TreeEngineConfig, make_tree_generate_fn
+from repro.core import EagleDrafter, EngineConfig, make_generate_fn, metrics
 
 K = 3
 
@@ -26,29 +31,20 @@ def run(max_new=64, n_prompts=4):
     drafter = EagleDrafter(target, k=K, temperature=0.0)
     p, plen = C.prompts(n_prompts)
 
+    configs = [("chain", 1)] + [("tree", b) for b in (2, 3)]
     rows = []
-    # chain engine, strict and MARS
-    for rule in ("strict", "mars"):
-        gen = make_generate_fn(target, drafter,
-                               EngineConfig(k=K, rule=rule, mode="greedy",
-                                            temperature=0.0, guard="margin"))
-        out = gen(t_params, e_params, p, plen, jax.random.PRNGKey(0),
-                  max_new=max_new)
-        t = metrics.tau(out["stats"])
-        rows.append((f"chain/{rule}", t,
-                     metrics.relax_fraction(out["stats"])))
-
-    # tree engine, strict and MARS, branch sweep
-    for branch in (2, 3):
+    for topology, branch in configs:
         for rule in ("strict", "mars"):
-            gen = make_tree_generate_fn(
+            name = (f"chain/{rule}" if topology == "chain"
+                    else f"tree-b{branch}/{rule}")
+            gen = make_generate_fn(
                 target, drafter,
-                TreeEngineConfig(k=K, branch=branch, rule=rule,
-                                 mode="greedy", temperature=0.0))
+                EngineConfig(k=K, rule=rule, mode="greedy", temperature=0.0,
+                             guard="margin", topology=topology,
+                             branch=branch))
             out = gen(t_params, e_params, p, plen, jax.random.PRNGKey(0),
                       max_new=max_new)
-            t = metrics.tau(out["stats"])
-            rows.append((f"tree-b{branch}/{rule}", t,
+            rows.append((name, metrics.tau(out["stats"]),
                          metrics.relax_fraction(out["stats"])))
 
     for name, t, rf in rows:

@@ -5,40 +5,59 @@ through the slot scheduler with speculative decoding + MARS verification,
 printing per-request τ and latency — the paper's serving scenario at CPU
 scale.
 
+The server is a thin wrapper over the shared ``DecodeSession`` engine core,
+so the same scheduler serves chain drafts (independent small-LM drafter)
+AND tree drafts (EAGLE-style head + caterpillar tree) — the second pass
+below flips ``EngineConfig(topology="tree")`` and nothing else.
+
     PYTHONPATH=src python examples/serve_continuous.py
 """
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import EngineConfig, IndependentDrafter
+from repro.core import EagleDrafter, EngineConfig, IndependentDrafter
 from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
 
 
-def main():
-    target, t_params, draft, d_params = C.get_pair()
-
-    server = SpecServer(
-        target, IndependentDrafter(draft, k=4, temperature=1.0),
-        t_params, d_params,
-        EngineConfig(k=4, rule="mars", mode="sample", temperature=1.0, guard="margin"),
-        ServerConfig(slots=4, max_len=256, max_prompt_len=32))
-
+def serve(server, n_req=12, max_tokens=48, label=""):
     cor = C.corpus()
-    n_req = 12
     for i in range(n_req):
         prompt = cor.sample_batch(1, 24, seed=100 + i)[0]
         server.submit(Request(uid=i, prompt=prompt,
-                              params=SamplingParams(max_tokens=48)))
-
-    print(f"serving {n_req} requests on {server.cfg.slots} slots ...")
+                              params=SamplingParams(max_tokens=max_tokens)))
+    print(f"serving {n_req} {label} requests on {server.cfg.slots} slots ...")
     responses = server.run()
     taus = []
     for r in sorted(responses, key=lambda r: r.uid):
         taus.append(r.tau)
         print(f"  req {r.uid:2d}: {len(r.tokens):3d} tokens  "
               f"tau={r.tau:4.2f}  latency={r.latency_s:5.2f}s")
-    print(f"\nmean tau = {np.mean(taus):.2f} "
-          f"(tokens committed per verify cycle; >1 == speculative win)")
+    print(f"mean tau = {np.mean(taus):.2f} "
+          f"(tokens committed per verify cycle; >1 == speculative win)\n")
+
+
+def main():
+    target, t_params, draft, d_params = C.get_pair()
+
+    # chain topology: independent small-LM drafter, sampling verification
+    serve(SpecServer(
+        target, IndependentDrafter(draft, k=4, temperature=1.0),
+        t_params, d_params,
+        EngineConfig(k=4, rule="mars", mode="sample", temperature=1.0,
+                     guard="margin"),
+        ServerConfig(slots=4, max_len=256, max_prompt_len=32)),
+        label="chain")
+
+    # tree topology: EAGLE-style head, caterpillar tree, greedy + MARS —
+    # same scheduler, same session core, different draft topology
+    e_params = C.train_eagle_head(target, t_params)
+    serve(SpecServer(
+        target, EagleDrafter(target, k=3, temperature=0.0),
+        t_params, e_params,
+        EngineConfig(k=3, rule="mars", mode="greedy", temperature=0.0,
+                     guard="margin", topology="tree", branch=2),
+        ServerConfig(slots=4, max_len=256, max_prompt_len=32)),
+        label="tree")
 
 
 if __name__ == "__main__":

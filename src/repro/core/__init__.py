@@ -2,13 +2,20 @@
 Speculative Verification (MARS), plus the drafters and engine around it."""
 from repro.core.verify import (
     DEFAULT_THETA,
+    VerifyBackend,
     VerifyResult,
     mars_relax_mask,
+    resolve_backend,
     top2_and_ratio,
     verify_chain,
 )
-from repro.core.engine import (
+from repro.core.session import (
+    CycleOutcome,
+    DecodeSession,
+    DecodeState,
     EngineConfig,
+)
+from repro.core.engine import (
     SpecEngine,
     make_ar_generate_fn,
     make_generate_fn,
@@ -26,6 +33,7 @@ from repro.core.drafter import (
 from repro.core.tree import (
     TreeEngineConfig,
     TreeSpecEngine,
+    TreeTopology,
     make_caterpillar,
     make_tree_generate_fn,
     verify_tree,
@@ -33,11 +41,12 @@ from repro.core.tree import (
 from repro.core import metrics
 
 __all__ = [
-    "DEFAULT_THETA", "VerifyResult", "mars_relax_mask", "top2_and_ratio",
-    "verify_chain", "EngineConfig", "SpecEngine", "make_ar_generate_fn",
-    "make_generate_fn", "Committed", "DraftOutput", "EagleDrafter",
-    "IndependentDrafter", "MedusaDrafter", "PLDrafter", "init_eagle_params",
-    "init_medusa_params", "metrics", "TreeEngineConfig",
-    "TreeSpecEngine", "make_caterpillar", "make_tree_generate_fn",
-    "verify_tree",
+    "DEFAULT_THETA", "VerifyBackend", "VerifyResult", "mars_relax_mask",
+    "resolve_backend", "top2_and_ratio", "verify_chain", "CycleOutcome",
+    "DecodeSession", "DecodeState", "EngineConfig", "SpecEngine",
+    "make_ar_generate_fn", "make_generate_fn", "Committed", "DraftOutput",
+    "EagleDrafter", "IndependentDrafter", "MedusaDrafter", "PLDrafter",
+    "init_eagle_params", "init_medusa_params", "metrics", "TreeEngineConfig",
+    "TreeSpecEngine", "TreeTopology", "make_caterpillar",
+    "make_tree_generate_fn", "verify_tree",
 ]

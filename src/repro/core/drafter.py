@@ -14,10 +14,16 @@ Four drafter families, matching the paper's comparison set:
 
 All drafters implement the same jit-friendly protocol:
 
-  init_state(params, batch, max_len)              -> state
-  prefill(params, state, tokens, lengths)         -> state
-  draft(params, state, last_token, extras, key)   -> (DraftOutput, state)
-  sync(params, state, committed, extras)          -> state
+  init_state(params, batch, max_len)                   -> state
+  prefill(params, state, tokens, lengths, slot_mask=)  -> state
+  draft(params, state, last_token, extras, key)        -> (DraftOutput, state)
+  sync(params, state, committed, extras)               -> state
+  reset_slots(state, slot_mask)                        -> state
+
+``slot_mask`` (B,) marks the batch rows being (re)admitted — the shared
+``DecodeSession`` uses it both for whole-batch generation (all rows) and for
+continuous-batching admission (one slot), so masked rows are never
+disturbed.  ``reset_slots`` clears per-row drafter state for those rows.
 
 ``extras`` carries engine context: the token buffer + lengths (PLD) and the
 target features from the verify pass (EAGLE / Medusa).  MARS — the paper's
@@ -85,11 +91,16 @@ class IndependentDrafter:
     def init_state(self, params, batch: int, max_len: int) -> Dict[str, Any]:
         return {"cache": self.model.init_cache(params, batch, max_len)}
 
-    def prefill(self, params, state, tokens, lengths):
+    def reset_slots(self, state, slot_mask):
+        return {"cache": self.model.reset_slots(state["cache"], slot_mask)}
+
+    def prefill(self, params, state, tokens, lengths, slot_mask=None):
         """Feed prompt[:-1] (the final prompt token stays pending)."""
         b, s = tokens.shape
         pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
         mask = pos < (lengths - 1)[:, None]
+        if slot_mask is not None:
+            mask = mask & slot_mask[:, None]
         cache = state["cache"]
         _, cache = self.model.decode(params, tokens, pos, cache, token_mask=mask)
         return {"cache": cache}
@@ -168,6 +179,16 @@ class EagleDrafter:
         feat = jnp.zeros((batch, self.cfg.d_model), L.dtype_of(self.cfg))
         return {"cache": cache, "feat": feat}
 
+    def reset_slots(self, state, slot_mask):
+        # kv entries are masked by stored absolute position, so invalidating
+        # the row's positions is a full wipe; the feature carry re-grounds
+        # at admission prefill
+        cache = dict(state["cache"])
+        cache["pos"] = jnp.where(slot_mask[:, None], L._INVALID_POS,
+                                 cache["pos"])
+        feat = jnp.where(slot_mask[:, None], 0.0, state["feat"])
+        return {"cache": cache, "feat": feat.astype(state["feat"].dtype)}
+
     def _step(self, params, target_params, tok, feat, pos, cache, token_mask=None):
         cfg = self.cfg
         emb = target_params["embedding"][tok].astype(feat.dtype)     # (B,1? d)
@@ -182,7 +203,7 @@ class EagleDrafter:
         logits = new_feat @ w
         return logits, new_feat, new_cache
 
-    def prefill(self, params, state, tokens, lengths):
+    def prefill(self, params, state, tokens, lengths, slot_mask=None):
         # feed prompt[:-1] token-by-token is wasteful; fuse once: here we
         # simply reset and rely on sync() grounding — the head conditions on
         # the last feature only, plus its own kv of drafted steps.
@@ -249,7 +270,11 @@ class MedusaDrafter:
         return {"feat": jnp.zeros((batch, self.cfg.d_model),
                                   L.dtype_of(self.cfg))}
 
-    def prefill(self, params, state, tokens, lengths):
+    def reset_slots(self, state, slot_mask):
+        feat = jnp.where(slot_mask[:, None], 0.0, state["feat"])
+        return {"feat": feat.astype(state["feat"].dtype)}
+
+    def prefill(self, params, state, tokens, lengths, slot_mask=None):
         return state
 
     def draft(self, params, state, last_token, extras, key):
@@ -294,7 +319,10 @@ class PLDrafter:
     def init_state(self, params, batch: int, max_len: int) -> Dict[str, Any]:
         return {}
 
-    def prefill(self, params, state, tokens, lengths):
+    def reset_slots(self, state, slot_mask):
+        return state
+
+    def prefill(self, params, state, tokens, lengths, slot_mask=None):
         return state
 
     def draft(self, params, state, last_token, extras, key):

@@ -1,238 +1,57 @@
-"""Speculative-decoding engine: the draft → parallel-verify → commit loop.
+"""Chain speculative-decoding engine — a thin wrapper over the shared
+:class:`repro.core.session.DecodeSession` engine core.
 
-The whole generation loop is one ``jax.lax.while_loop`` so it jits end to
-end.  Per cycle:
+All draft → parallel-verify → commit mechanics live in ``core/session.py``:
+the :class:`~repro.core.session.DecodeState` carry, the jit-traceable
+``cycle``, EOS/buffer-commit bookkeeping, and cache rollback.  This module
+keeps the historical ``SpecEngine`` / ``make_generate_fn`` entry points (now
+topology-aware: ``EngineConfig(topology="tree")`` drafts caterpillar trees
+through the very same session) plus the vanilla autoregressive baseline.
 
-  1. the drafter proposes K tokens continuing from the pending last token;
-  2. the target model scores ``[last_token, d_1..d_K]`` in ONE decode pass
-     (K+1 positions — this is the memory-bound pass MARS amortises);
-  3. the verify rule (strict / MARS, greedy / sampling) accepts a prefix and
-     emits a correction-or-bonus token, i.e. ``n_accept + 1`` committed;
-  4. caches roll back: attention caches by index rewind; recurrent families
-     (ssm / hybrid) re-apply the committed prefix from the pre-cycle state
-     with a token mask (state checkpoint + recompute — the standard scheme
-     for SSM speculative decoding);
-  5. the drafter syncs (index rewind + feature re-grounding).
+Shared ``DecodeSession`` contract (see ``core/session.py`` for details):
 
-Cache-layout invariant: ``cache.index`` counts tokens whose kv/state is
-stored; the *pending* last committed token is not yet in the cache and is
-the first input of the next cycle.
+* cache-layout invariant — ``cache.index`` counts cached tokens; the
+  pending last committed token is not yet cached and opens the next cycle;
+* rollback scheme — attention caches rewind their index, recurrent caches
+  recompute the committed prefix from the pre-cycle state under a token
+  mask;
+* topology hook — chain vs tree drafts differ only in the strategy object
+  that proposes, scores, and verifies candidates each cycle.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import verify as V
-from repro.core.drafter import Committed, DraftOutput
+from repro.core.session import (  # noqa: F401  (re-exported API)
+    DecodeSession,
+    DecodeState,
+    EngineConfig,
+    make_generate_fn,
+)
 from repro.models.model import Model
 
 
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    k: int = 7                       # draft length (paper default)
-    rule: str = "mars"               # "strict" | "mars"
-    mode: str = "sample"             # "greedy" | "sample"
-    theta: float = V.DEFAULT_THETA
-    temperature: float = 1.0
-    eos_token: Optional[int] = None
-    use_kernel: bool = False         # fused Pallas mars_verify
-    guard: str = "positive"          # "positive" (paper) | "margin" (ext.)
-
-
 class SpecEngine:
+    """Historical chain-engine facade; delegates to :class:`DecodeSession`."""
+
     def __init__(self, target: Model, drafter, cfg: EngineConfig):
+        self.session = DecodeSession(target, drafter, cfg)
         self.target = target
         self.drafter = drafter
         self.cfg = cfg
 
-    # -- one verify cycle (jit-traceable) ------------------------------------
-    def cycle(self, t_params, d_params, carry, theta=None):
-        cfg = self.cfg
-        k = cfg.k
-        theta = cfg.theta if theta is None else theta
-        (buf, lengths, finished, t_cache, d_state, last_token, key,
-         stats) = carry
-        b = last_token.shape[0]
-        key, k_draft, k_verify = jax.random.split(key, 3)
-        active = ~finished
+    def cycle(self, t_params, d_params, carry, theta=None) -> DecodeState:
+        return self.session.cycle(t_params, d_params, carry, theta=theta)
 
-        extras = {
-            "target_params": t_params,
-            "tokens_buf": buf,
-            "lengths": lengths,
-            "index": t_cache["index"],
-        }
-
-        # 1. draft
-        d_out, d_state = self.drafter.draft(
-            d_params, d_state, last_token, extras, k_draft)
-
-        # 2. target parallel pass over [last_token, d_1..d_K]
-        base_index = t_cache["index"]
-        inputs = jnp.concatenate([last_token[:, None], d_out.tokens], axis=1)
-        positions = base_index[:, None] + jnp.arange(k + 1, dtype=jnp.int32)[None]
-        mask = jnp.broadcast_to(active[:, None], (b, k + 1))
-        if self.target.is_recurrent:
-            pre_cache = t_cache
-            res_t = self.target.decode(
-                t_params, inputs, positions, t_cache, token_mask=mask,
-                with_features=self.drafter.wants_features)
-        else:
-            res_t = self.target.decode(
-                t_params, inputs, positions, t_cache, token_mask=mask,
-                with_features=self.drafter.wants_features)
-        if self.drafter.wants_features:
-            logits, t_cache, feats = res_t
-        else:
-            logits, t_cache = res_t
-            feats = None
-
-        # 3. verify
-        res = V.verify_chain(
-            d_out.tokens, logits, rule=cfg.rule, mode=cfg.mode,
-            theta=theta, temperature=cfg.temperature, key=k_verify,
-            draft_token_probs=d_out.token_probs,
-            draft_full_probs=d_out.full_probs,
-            use_kernel=cfg.use_kernel, guard=cfg.guard)
-
-        n_commit = jnp.where(active, res.n_commit, 0)
-
-        # EOS truncation
-        if cfg.eos_token is not None:
-            pos_k = jnp.arange(k + 1)[None]
-            is_eos = (res.out_tokens == cfg.eos_token) & (pos_k < n_commit[:, None])
-            any_eos = is_eos.any(axis=1)
-            first_eos = jnp.argmax(is_eos, axis=1)
-            n_commit = jnp.where(any_eos, jnp.minimum(n_commit, first_eos + 1),
-                                 n_commit)
-            finished = finished | (any_eos & active)
-
-        # 4. write committed tokens into the buffer (slot L = trash)
-        l_buf = buf.shape[1] - 1
-        # never count commits past the buffer end (the row finishes anyway)
-        n_commit = jnp.minimum(n_commit,
-                               jnp.maximum(l_buf - lengths, 0))
-        wpos = lengths[:, None] + jnp.arange(k + 1, dtype=jnp.int32)[None]
-        wvalid = (jnp.arange(k + 1)[None] < n_commit[:, None]) & (wpos < l_buf)
-        wslot = jnp.where(wvalid, wpos, l_buf)
-        buf = buf.at[jnp.arange(b)[:, None], wslot].set(res.out_tokens)
-        new_lengths = lengths + n_commit
-        finished = finished | (new_lengths >= l_buf)
-
-        # 5. cache bookkeeping
-        committed = Committed(res.out_tokens, res.n_accept, n_commit,
-                              base_index, features=feats, active=active)
-        if self.target.is_recurrent:
-            # recompute: re-apply [last_token, accepted drafts] from the
-            # pre-cycle state; masked tail freezes the state
-            rmask = (jnp.arange(k + 1, dtype=jnp.int32)[None]
-                     < (res.n_accept + 1)[:, None]) & active[:, None]
-            out_r = self.target.decode(
-                t_params, inputs, positions, pre_cache, token_mask=rmask)
-            t_cache = out_r[1]
-        else:
-            t_cache = dict(t_cache)
-            t_cache["index"] = jnp.where(
-                active, base_index + 1 + res.n_accept, base_index)
-
-        d_state = self.drafter.sync(d_params, d_state, committed, extras)
-
-        # pending token for the next cycle
-        last_idx = jnp.clip(n_commit - 1, 0, k)
-        new_last = jnp.take_along_axis(res.out_tokens, last_idx[:, None], 1)[:, 0]
-        last_token = jnp.where(active, new_last, last_token)
-        lengths = new_lengths
-
-        stats = {
-            "cycles": stats["cycles"] + active.astype(jnp.int32),
-            "commits": stats["commits"] + n_commit,
-            "accepts": stats["accepts"] + jnp.where(active, res.n_accept, 0),
-            "relaxed": stats["relaxed"] + jnp.where(active, res.n_relaxed, 0),
-        }
-        return (buf, lengths, finished, t_cache, d_state, last_token, key,
-                stats)
-
-    # -- full generation ------------------------------------------------------
-    def generate(self, t_params, d_params, prompt: jnp.ndarray,
-                 prompt_len: jnp.ndarray, max_new: int, key,
-                 theta=None, encoder_frames=None) -> Dict[str, Any]:
-        """prompt: (B, S) right-padded; prompt_len: (B,) valid lengths."""
-        cfg = self.cfg
-        b, s = prompt.shape
-        l_buf = s + max_new + cfg.k + 2
-        buf = jnp.zeros((b, l_buf + 1), jnp.int32)  # +1 trash slot
-        buf = buf.at[:, :s].set(prompt)
-
-        t_cache = self.target.init_cache(t_params, b, l_buf,
-                                         encoder_frames=encoder_frames)
-        d_state = self.drafter.init_state(d_params, b, l_buf)
-
-        # prefill prompt[:-1]; the final prompt token is pending
-        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-        pmask = pos < (prompt_len - 1)[:, None]
-        out = self.target.decode(t_params, prompt, pos, t_cache,
-                                 token_mask=pmask,
-                                 with_features=self.drafter.wants_features)
-        if self.drafter.wants_features:
-            _, t_cache, pfeats = out
-            # ground drafter feature on the feature of the last cached token
-            idx = jnp.clip(prompt_len - 2, 0, s - 1)[:, None, None]
-            feat0 = jnp.take_along_axis(
-                pfeats, jnp.broadcast_to(idx, (b, 1, pfeats.shape[-1])), 1)[:, 0]
-            if "feat" in d_state:
-                d_state = {**d_state, "feat": feat0.astype(d_state["feat"].dtype)}
-        else:
-            _, t_cache = out
-        d_state = self.drafter.prefill(d_params, d_state, prompt, prompt_len)
-
-        last_token = jnp.take_along_axis(
-            prompt, jnp.clip(prompt_len - 1, 0, s - 1)[:, None], 1)[:, 0]
-        lengths = prompt_len
-        finished = jnp.zeros((b,), bool)
-        stats = {k_: jnp.zeros((b,), jnp.int32)
-                 for k_ in ("cycles", "commits", "accepts", "relaxed")}
-        carry = (buf, lengths, finished, t_cache, d_state, last_token, key,
-                 stats)
-
-        max_cycles = max_new  # worst case: 1 committed token per cycle
-
-        def cond(state):
-            c = state[2]
-            st = state[7]
-            return (~c).any() & (st["cycles"].max() < max_cycles)
-
-        def body(state):
-            return self.cycle(t_params, d_params, state, theta=theta)
-
-        (buf, lengths, finished, _, _, _, _, stats) = jax.lax.while_loop(
-            cond, body, carry)
-        return {
-            "tokens": buf[:, :-1],
-            "lengths": jnp.minimum(lengths, l_buf),
-            "finished": finished,
-            "stats": stats,
-        }
-
-
-def make_generate_fn(target: Model, drafter, cfg: EngineConfig):
-    """Returns a jitted generate(t_params, d_params, prompt, prompt_len, key)."""
-    engine = SpecEngine(target, drafter, cfg)
-
-    @functools.partial(jax.jit, static_argnames=("max_new",))
-    def generate(t_params, d_params, prompt, prompt_len, key, max_new=64,
+    def generate(self, t_params, d_params, prompt, prompt_len, max_new, key,
                  theta=None, encoder_frames=None):
-        if theta is None:
-            theta = cfg.theta
-        return engine.generate(t_params, d_params, prompt, prompt_len,
-                               max_new, key, theta=jnp.asarray(theta),
-                               encoder_frames=encoder_frames)
-
-    return generate
+        return self.session.generate(t_params, d_params, prompt, prompt_len,
+                                     max_new, key, theta=theta,
+                                     encoder_frames=encoder_frames)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,423 @@
+"""Shared speculative-decoding engine core: one draft → verify → commit cycle.
+
+Every consumer of speculative decoding in this repo — ``SpecEngine`` batch
+generation, tree decoding, and the continuous-batching ``SpecServer`` — runs
+the same cycle over the same carry.  This module owns that cycle once:
+
+* :class:`DecodeState` — the carry pytree (token buffer, lengths, finished
+  flags, target cache, drafter state, pending last token, PRNG key, stats).
+* :class:`DecodeSession` — prefill (full-batch and slot-masked admission),
+  one jit-traceable ``cycle``, EOS/buffer-commit bookkeeping, and cache
+  rollback; parameterised by a *draft topology* strategy.
+* :class:`ChainTopology` — K-token chain drafts scored with one parallel
+  target decode (the pass MARS amortises).
+* ``TreeTopology`` (in ``repro.core.tree``) — caterpillar tree drafts scored
+  with one virtual tree-attention pass.
+
+Cache-layout invariant: ``cache.index`` counts tokens whose kv/state is
+stored; the *pending* last committed token is not yet in the cache and is
+the first input of the next cycle.
+
+Rollback scheme (shared by all topologies via :meth:`DecodeSession.rollback`):
+
+* attention-family targets whose score pass wrote draft kv into the cache
+  roll back by **index rewind** — stale slots past ``base + 1 + n_accept``
+  are masked by position and overwritten later;
+* recurrent targets (ssm / hybrid) and virtual (non-writing) score passes
+  **recompute**: re-apply ``[last_token, committed...]`` from the pre-cycle
+  state with a token mask, so the cache only ever holds committed tokens.
+
+Topology hook: a topology implements ``buffer_margin`` (buffer slack beyond
+``max_new``) and ``run(session, t_params, d_params, state, extras, k_draft,
+k_verify, theta, active)`` returning a :class:`CycleOutcome`; the session
+reads the cycle width off ``out_tokens`` and applies the shared EOS
+truncation, buffer commit, pending-token update, and stats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import verify as V
+from repro.core.drafter import Committed
+from repro.models.model import Model
+
+STAT_KEYS = ("cycles", "commits", "accepts", "relaxed")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    k: int = 7                       # draft length (paper default)
+    rule: str = "mars"               # "strict" | "mars"
+    mode: str = "sample"             # "greedy" | "sample"
+    theta: float = V.DEFAULT_THETA
+    temperature: float = 1.0
+    eos_token: Optional[int] = None
+    use_kernel: bool = False         # fused Pallas mars_verify
+    guard: str = "positive"          # "positive" (paper) | "margin" (ext.)
+    topology: str = "chain"          # "chain" | "tree"
+    branch: int = 2                  # tree only: candidates per depth
+
+    def backend(self) -> V.VerifyBackend:
+        return V.VerifyBackend(use_kernel=self.use_kernel, guard=self.guard)
+
+
+class DecodeState(NamedTuple):
+    """The decode carry.  A NamedTuple so it is simultaneously a pytree
+    (while_loop / jit friendly) and unpackable as the historical 8-tuple."""
+    buf: jnp.ndarray            # (B, L+1) committed tokens (+1 trash slot)
+    lengths: jnp.ndarray        # (B,) committed length incl. prompt
+    finished: jnp.ndarray       # (B,) bool; True == idle/finished slot
+    t_cache: Any                # target cache pytree
+    d_state: Any                # drafter state pytree
+    last_token: jnp.ndarray     # (B,) pending token (not yet in cache)
+    key: jnp.ndarray            # PRNG key
+    stats: Dict[str, jnp.ndarray]
+
+
+class CycleOutcome(NamedTuple):
+    """What a topology hands back to the session after one cycle.
+
+    ``d_state`` is pre-sync: the session calls ``drafter.sync`` itself after
+    EOS truncation and buffer clamping so the ``Committed`` record carries
+    the final ``n_commit`` (the drafter contract)."""
+    out_tokens: jnp.ndarray     # (B, W) committed tokens (padded past n_commit)
+    n_accept: jnp.ndarray       # (B,) accepted draft tokens
+    n_commit: jnp.ndarray       # (B,) valid tokens in out_tokens
+    n_relaxed: jnp.ndarray      # (B,) accepts that needed MARS relaxation
+    t_cache: Any
+    d_state: Any
+    base_index: jnp.ndarray     # (B,) target cache index pre-cycle
+    features: Any = None        # (B, W, d) target features or None
+
+
+# ---------------------------------------------------------------------------
+# Topologies
+# ---------------------------------------------------------------------------
+
+class ChainTopology:
+    """K-token chain drafts, scored by one parallel target decode pass that
+    writes into the cache (rolled back afterwards by the session)."""
+
+    name = "chain"
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self.k = cfg.k
+
+    @property
+    def buffer_margin(self) -> int:
+        return self.k + 2
+
+    def run(self, session: "DecodeSession", t_params, d_params,
+            state: DecodeState, extras, k_draft, k_verify, theta,
+            active) -> CycleOutcome:
+        cfg = self.cfg
+        k = self.k
+        target, drafter = session.target, session.drafter
+        b = state.last_token.shape[0]
+
+        # 1. draft
+        d_out, d_state = drafter.draft(
+            d_params, state.d_state, state.last_token, extras, k_draft)
+
+        # 2. target parallel pass over [last_token, d_1..d_K]
+        base_index = state.t_cache["index"]
+        inputs = jnp.concatenate(
+            [state.last_token[:, None], d_out.tokens], axis=1)
+        positions = (base_index[:, None]
+                     + jnp.arange(k + 1, dtype=jnp.int32)[None])
+        mask = jnp.broadcast_to(active[:, None], (b, k + 1))
+        pre_cache = state.t_cache
+        res_t = target.decode(
+            t_params, inputs, positions, state.t_cache, token_mask=mask,
+            with_features=drafter.wants_features)
+        if drafter.wants_features:
+            logits, t_cache, feats = res_t
+        else:
+            logits, t_cache = res_t
+            feats = None
+
+        # 3. verify
+        res = V.verify_chain(
+            d_out.tokens, logits, rule=cfg.rule, mode=cfg.mode,
+            theta=theta, temperature=cfg.temperature, key=k_verify,
+            draft_token_probs=d_out.token_probs,
+            draft_full_probs=d_out.full_probs,
+            backend=cfg.backend())
+
+        # 4. cache rollback (drafter sync happens in the session, once the
+        #    final n_commit is known)
+        t_cache, _ = session.rollback(
+            t_params, pre_cache, t_cache, inputs, positions, res.n_accept,
+            active, base_index, scored_in_place=True, want_features=False)
+
+        return CycleOutcome(res.out_tokens, res.n_accept, res.n_commit,
+                            res.n_relaxed, t_cache, d_state, base_index,
+                            features=feats)
+
+
+def _make_topology(cfg: EngineConfig):
+    if cfg.topology == "chain":
+        return ChainTopology(cfg)
+    if cfg.topology == "tree":
+        from repro.core.tree import TreeTopology
+        return TreeTopology(cfg)
+    raise ValueError(f"unknown topology {cfg.topology!r}")
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+class DecodeSession:
+    """The shared draft → verify → commit engine core.
+
+    ``SpecEngine``, ``TreeSpecEngine``, and ``SpecServer`` are thin wrappers
+    over this class; they share its carry (:class:`DecodeState`), its cycle,
+    and its rollback — so a verification or bookkeeping improvement lands in
+    every consumer at once.
+    """
+
+    def __init__(self, target: Model, drafter, cfg: EngineConfig):
+        self.target = target
+        self.drafter = drafter
+        self.cfg = cfg
+        self.topology = _make_topology(cfg)
+        if cfg.topology == "tree":
+            if target.is_recurrent:
+                raise NotImplementedError(
+                    "tree verification needs attention-family targets; use "
+                    "the chain topology for ssm/hybrid")
+            if not hasattr(drafter, "_step"):
+                raise TypeError(
+                    "tree topology drafts with the EAGLE-style step head; "
+                    f"{type(drafter).__name__} does not expose one")
+
+    # -- state construction ---------------------------------------------------
+    def init_state(self, t_params, d_params, batch: int, max_len: int, *,
+                   key=None, encoder_frames=None) -> DecodeState:
+        """Fresh all-idle carry (``finished`` everywhere); rows come alive
+        via :meth:`prefill`."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return DecodeState(
+            buf=jnp.zeros((batch, max_len + 1), jnp.int32),  # +1 trash slot
+            lengths=jnp.zeros((batch,), jnp.int32),
+            finished=jnp.ones((batch,), bool),
+            t_cache=self.target.init_cache(t_params, batch, max_len,
+                                           encoder_frames=encoder_frames),
+            d_state=self.drafter.init_state(d_params, batch, max_len),
+            last_token=jnp.zeros((batch,), jnp.int32),
+            key=key,
+            stats={k: jnp.zeros((batch,), jnp.int32) for k in STAT_KEYS},
+        )
+
+    def prefill(self, t_params, d_params, state: DecodeState,
+                prompt: jnp.ndarray, prompt_len: jnp.ndarray,
+                slot_mask: Optional[jnp.ndarray] = None) -> DecodeState:
+        """Admit prompts into the rows of ``slot_mask`` (None = all rows).
+
+        Resets the admitted rows' caches, writes the prompt into the buffer,
+        prefills ``prompt[:-1]`` with a slot-masked decode (the final prompt
+        token stays pending), and grounds feature-carrying drafters.  Rows
+        outside the mask are untouched, so mid-flight admissions never
+        disturb in-flight neighbours.
+        """
+        state = DecodeState(*state)
+        b, s = prompt.shape
+        if slot_mask is None:
+            slot_mask = jnp.ones((b,), bool)
+
+        t_cache = self.target.reset_slots(state.t_cache, slot_mask)
+        d_state = self.drafter.reset_slots(state.d_state, slot_mask)
+
+        width = state.buf.shape[1]
+        row = jnp.pad(prompt, ((0, 0), (0, width - s)))
+        buf = jnp.where(slot_mask[:, None], row, state.buf)
+        lengths = jnp.where(slot_mask, prompt_len, state.lengths)
+        finished = jnp.where(slot_mask, False, state.finished)
+        stats = {k: jnp.where(slot_mask, 0, v)
+                 for k, v in state.stats.items()}
+
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        pmask = slot_mask[:, None] & (pos < (prompt_len - 1)[:, None])
+        out = self.target.decode(t_params, prompt, pos, t_cache,
+                                 token_mask=pmask,
+                                 with_features=self.drafter.wants_features)
+        if self.drafter.wants_features:
+            _, t_cache, pfeats = out
+            # ground the drafter feature on the last *cached* prompt token
+            idx = jnp.clip(prompt_len - 2, 0, s - 1)[:, None, None]
+            feat0 = jnp.take_along_axis(
+                pfeats, jnp.broadcast_to(idx, (b, 1, pfeats.shape[-1])),
+                1)[:, 0]
+            if "feat" in d_state:
+                feat = jnp.where(slot_mask[:, None],
+                                 feat0.astype(d_state["feat"].dtype),
+                                 d_state["feat"])
+                d_state = {**d_state, "feat": feat}
+        else:
+            _, t_cache = out
+        d_state = self.drafter.prefill(d_params, d_state, prompt, prompt_len,
+                                       slot_mask=slot_mask)
+
+        last = jnp.take_along_axis(
+            prompt, jnp.clip(prompt_len - 1, 0, s - 1)[:, None], 1)[:, 0]
+        last_token = jnp.where(slot_mask, last, state.last_token)
+        return DecodeState(buf, lengths, finished, t_cache, d_state,
+                           last_token, state.key, stats)
+
+    # -- cache rollback (shared by all topologies) ----------------------------
+    def rollback(self, t_params, pre_cache, post_cache, inputs, positions,
+                 n_accept, active, base_index, *, scored_in_place: bool,
+                 want_features: bool):
+        """Bring the target cache to exactly the committed prefix.
+
+        ``scored_in_place`` marks that the score pass wrote the draft chunk
+        into ``post_cache``; attention families then roll back by index
+        rewind.  Recurrent families — and virtual score passes that never
+        wrote (``post_cache`` is None) — re-apply ``inputs[:, :n_accept+1]``
+        from ``pre_cache`` with a token mask instead.  Returns
+        ``(cache, features-or-None)``; features cover ``inputs`` rows when a
+        recompute ran with ``want_features``.
+        """
+        if scored_in_place and not self.target.is_recurrent:
+            cache = dict(post_cache)
+            cache["index"] = jnp.where(
+                active, base_index + 1 + n_accept, base_index)
+            return cache, None
+        w = inputs.shape[1]
+        rmask = ((jnp.arange(w, dtype=jnp.int32)[None]
+                  < (n_accept + 1)[:, None]) & active[:, None])
+        res = self.target.decode(t_params, inputs, positions, pre_cache,
+                                 token_mask=rmask,
+                                 with_features=want_features)
+        if want_features:
+            _, cache, feats = res
+        else:
+            (_, cache), feats = res, None
+        cache = dict(cache)
+        cache["index"] = jnp.where(
+            active, base_index + 1 + n_accept, base_index)
+        return cache, feats
+
+    # -- one verify cycle (jit-traceable) -------------------------------------
+    def cycle(self, t_params, d_params, state, theta=None) -> DecodeState:
+        cfg = self.cfg
+        theta = cfg.theta if theta is None else theta
+        state = DecodeState(*state)
+        b = state.last_token.shape[0]
+        key, k_draft, k_verify = jax.random.split(state.key, 3)
+        active = ~state.finished
+        finished = state.finished
+
+        extras = {
+            "target_params": t_params,
+            "tokens_buf": state.buf,
+            "lengths": state.lengths,
+            "index": state.t_cache["index"],
+        }
+        out = self.topology.run(self, t_params, d_params, state, extras,
+                                k_draft, k_verify, theta, active)
+
+        n_commit = jnp.where(active, out.n_commit, 0)
+        w = out.out_tokens.shape[1]
+        pos_k = jnp.arange(w, dtype=jnp.int32)[None]
+
+        # EOS truncation
+        if cfg.eos_token is not None:
+            is_eos = ((out.out_tokens == cfg.eos_token)
+                      & (pos_k < n_commit[:, None]))
+            any_eos = is_eos.any(axis=1)
+            first_eos = jnp.argmax(is_eos, axis=1)
+            n_commit = jnp.where(any_eos,
+                                 jnp.minimum(n_commit, first_eos + 1),
+                                 n_commit)
+            finished = finished | (any_eos & active)
+
+        # commit tokens into the buffer (slot L = trash)
+        l_buf = state.buf.shape[1] - 1
+        # never count commits past the buffer end (the row finishes anyway)
+        n_commit = jnp.minimum(n_commit,
+                               jnp.maximum(l_buf - state.lengths, 0))
+        wpos = state.lengths[:, None] + pos_k
+        wvalid = (pos_k < n_commit[:, None]) & (wpos < l_buf)
+        wslot = jnp.where(wvalid, wpos, l_buf)
+        buf = state.buf.at[jnp.arange(b)[:, None], wslot].set(out.out_tokens)
+        lengths = state.lengths + n_commit
+        finished = finished | (lengths >= l_buf)
+
+        # drafter sync sees the final (EOS-truncated, buffer-clamped)
+        # n_commit, per the Committed contract
+        committed = Committed(out.out_tokens, out.n_accept, n_commit,
+                              out.base_index, features=out.features,
+                              active=active)
+        d_state = self.drafter.sync(d_params, out.d_state, committed, extras)
+
+        # pending token for the next cycle
+        last_idx = jnp.clip(n_commit - 1, 0, w - 1)
+        new_last = jnp.take_along_axis(
+            out.out_tokens, last_idx[:, None], 1)[:, 0]
+        last_token = jnp.where(active, new_last, state.last_token)
+
+        stats = {
+            "cycles": state.stats["cycles"] + active.astype(jnp.int32),
+            "commits": state.stats["commits"] + n_commit,
+            "accepts": state.stats["accepts"]
+            + jnp.where(active, out.n_accept, 0),
+            "relaxed": state.stats["relaxed"]
+            + jnp.where(active, out.n_relaxed, 0),
+        }
+        return DecodeState(buf, lengths, finished, out.t_cache, d_state,
+                           last_token, key, stats)
+
+    # -- full generation ------------------------------------------------------
+    def generate(self, t_params, d_params, prompt: jnp.ndarray,
+                 prompt_len: jnp.ndarray, max_new: int, key,
+                 theta=None, encoder_frames=None) -> Dict[str, Any]:
+        """prompt: (B, S) right-padded; prompt_len: (B,) valid lengths."""
+        b, s = prompt.shape
+        l_buf = s + max_new + self.topology.buffer_margin
+        state = self.init_state(t_params, d_params, b, l_buf, key=key,
+                                encoder_frames=encoder_frames)
+        state = self.prefill(t_params, d_params, state, prompt, prompt_len)
+
+        max_cycles = max_new  # worst case: 1 committed token per cycle
+
+        def cond(st):
+            st = DecodeState(*st)
+            return (~st.finished).any() & (st.stats["cycles"].max()
+                                           < max_cycles)
+
+        def body(st):
+            return self.cycle(t_params, d_params, st, theta=theta)
+
+        final = DecodeState(*jax.lax.while_loop(cond, body, state))
+        return {
+            "tokens": final.buf[:, :-1],
+            "lengths": jnp.minimum(final.lengths, l_buf),
+            "finished": final.finished,
+            "stats": final.stats,
+        }
+
+
+def make_generate_fn(target: Model, drafter, cfg: EngineConfig):
+    """Returns a jitted generate(t_params, d_params, prompt, prompt_len, key)
+    for any topology the config names."""
+    session = DecodeSession(target, drafter, cfg)
+
+    @functools.partial(jax.jit, static_argnames=("max_new",))
+    def generate(t_params, d_params, prompt, prompt_len, key, max_new=64,
+                 theta=None, encoder_frames=None):
+        if theta is None:
+            theta = cfg.theta
+        return session.generate(t_params, d_params, prompt, prompt_len,
+                                max_new, key, theta=jnp.asarray(theta),
+                                encoder_frames=encoder_frames)
+
+    return generate

@@ -1,29 +1,36 @@
-"""Tree-draft speculative decoding with MARS verification.
+"""Tree-draft topology for the shared ``DecodeSession`` engine core.
 
 The paper (§2.3) notes MARS applies on top of tree-based verification; this
-module implements it with a *caterpillar* tree (EAGLE-lite): a main draft
-chain of depth K plus ``branch-1`` sibling candidates at every depth, taken
-from the drafter's own top-k at that step (no extra drafter passes).
+module implements the *caterpillar* tree (EAGLE-lite) as a draft-topology
+strategy plugged into :class:`repro.core.session.DecodeSession` — the same
+session that runs chain decoding and the continuous-batching server, so
+tree drafts serve, share the fused Pallas verify kernel, and inherit every
+bookkeeping improvement for free.
 
-Verification scores all nodes in ONE virtual target pass (tree-ancestry
-attention against the KV cache, nothing written), then:
+Topology: a main draft chain of depth K plus ``branch-1`` sibling candidates
+at every depth, taken from the drafter's own top-k at that step (no extra
+drafter passes).  Verification scores all nodes in ONE virtual target pass
+(tree-ancestry attention against the KV cache, nothing written), then:
 
   1. walk the chain; at the first rejected chain node, try to *rescue* with
      an accepted sibling at that depth (exact-match or MARS-relaxed);
   2. a rescued sibling contributes its own bonus continuation from its
      (already computed!) node logits — this is where trees beat chains;
-  3. commit the chosen path with a masked regular decode from the pre-cycle
-     cache (the same recompute pass recurrent targets use), so the KV cache
-     only ever contains committed tokens.
+  3. the session commits the chosen path via its shared recompute rollback
+     (a masked decode from the pre-cycle cache — the same pass recurrent
+     targets use), so the KV cache only ever contains committed tokens.
 
 Node layout: node 0 = root (the pending last token, depth 0); depth d >= 1
-holds ``branch`` nodes, the first being the chain node.
+holds ``branch`` nodes, the first being the chain node.  All exact/relax
+decisions route through :class:`repro.core.verify.VerifyBackend`, which
+flattens the (B, N, V) node logits to the kernel's (rows, V) layout when the
+fused path is selected.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +38,8 @@ import numpy as np
 
 from repro.core import verify as V
 from repro.core.drafter import _sample
+from repro.core.session import (CycleOutcome, DecodeSession, DecodeState,
+                                EngineConfig)
 from repro.models.model import Model
 
 
@@ -79,7 +88,6 @@ def draft_tree_eagle(drafter, params, state, last_token, extras, key,
     cache, feat = state["cache"], state["feat"]
     keys = jax.random.split(key, tpl.k)
     b = last_token.shape[0]
-    n = len(tpl.depth)
 
     toks = [last_token]                     # node 0 = root
     probs = [jnp.ones((b,), jnp.float32)]
@@ -114,7 +122,9 @@ def draft_tree_eagle(drafter, params, state, last_token, extras, key,
 def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
                 node_logits: jnp.ndarray, *, rule: str, mode: str,
                 theta: float, temperature: float, key,
-                node_probs: Optional[jnp.ndarray] = None):
+                node_probs: Optional[jnp.ndarray] = None,
+                use_kernel: bool = False, guard: str = "positive",
+                backend: Optional[V.VerifyBackend] = None):
     """Choose the committed path.
 
     node_tokens: (B, N); node_logits: (B, N, V) — logits[i] is the target
@@ -125,13 +135,18 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
     b, n, v = node_logits.shape
     k, branch = tpl.k, tpl.branch
     key_acc, key_extra = jax.random.split(key)
+    backend = V.resolve_backend(backend, use_kernel=use_kernel, guard=guard)
 
     parent = jnp.asarray(tpl.parent)
     parent_logits = node_logits[:, jnp.maximum(parent, 0)]   # (B, N, V)
 
+    need_relax = rule == "mars"
+    if mode == "greedy" or need_relax:
+        exact, relax_raw = backend.exact_and_relax(node_tokens, parent_logits,
+                                                   theta)
+
     if mode == "greedy":
-        top1 = jnp.argmax(parent_logits, -1)
-        accept = node_tokens == top1
+        accept = exact
     else:
         logp = jax.nn.log_softmax(
             parent_logits.astype(jnp.float32)
@@ -143,8 +158,8 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
         accept = u * jnp.maximum(q, 1e-30) < p_tok
 
     relax = jnp.zeros_like(accept)
-    if rule == "mars":
-        relax = V.mars_relax_mask(node_tokens, parent_logits, theta) & ~accept
+    if need_relax:
+        relax = relax_raw & ~accept
         accept = accept | relax
 
     # chain walk
@@ -156,19 +171,26 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
 
     # sibling rescue at depth n_chain + 1 (if any sibling accepted there)
     # node index of sibling j at depth d: chain nodes are first per depth
-    sib_cols = []
-    for d in range(1, k + 1):
-        base = 1 + (d - 1) * branch
-        sib_cols.append([base + j for j in range(1, branch)])
-    sib_cols = jnp.asarray(sib_cols)                          # (K, branch-1)
-    fail_depth = jnp.minimum(n_chain, k - 1)                  # depth idx (0-based)
-    sib_nodes = sib_cols[fail_depth]                          # (B, branch-1)
-    sib_acc = jnp.take_along_axis(accept, sib_nodes, 1)       # (B, branch-1)
-    sib_rel = jnp.take_along_axis(relax, sib_nodes, 1)
-    has_rescue = sib_acc.any(1) & (n_chain < k)
-    first_sib = jnp.argmax(sib_acc, 1)
-    rescue_node = jnp.take_along_axis(sib_nodes, first_sib[:, None], 1)[:, 0]
-    rescue_rel = jnp.take_along_axis(sib_rel, first_sib[:, None], 1)[:, 0]
+    if branch > 1:
+        sib_cols = []
+        for d in range(1, k + 1):
+            base = 1 + (d - 1) * branch
+            sib_cols.append([base + j for j in range(1, branch)])
+        sib_cols = jnp.asarray(sib_cols)                      # (K, branch-1)
+        fail_depth = jnp.minimum(n_chain, k - 1)              # depth (0-based)
+        sib_nodes = sib_cols[fail_depth]                      # (B, branch-1)
+        sib_acc = jnp.take_along_axis(accept, sib_nodes, 1)   # (B, branch-1)
+        sib_rel = jnp.take_along_axis(relax, sib_nodes, 1)
+        has_rescue = sib_acc.any(1) & (n_chain < k)
+        first_sib = jnp.argmax(sib_acc, 1)
+        rescue_node = jnp.take_along_axis(
+            sib_nodes, first_sib[:, None], 1)[:, 0]
+        rescue_rel = jnp.take_along_axis(
+            sib_rel, first_sib[:, None], 1)[:, 0]
+    else:                                 # pure chain: nothing to rescue with
+        has_rescue = jnp.zeros((b,), bool)
+        rescue_node = jnp.zeros((b,), jnp.int32)
+        rescue_rel = jnp.zeros((b,), bool)
 
     # the node whose logits give the extra token:
     #   full chain accepted -> last chain node (bonus)
@@ -206,6 +228,72 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
     return out, n_commit, n_accept, n_relaxed
 
 
+# ---------------------------------------------------------------------------
+# Topology strategy for DecodeSession
+# ---------------------------------------------------------------------------
+
+class TreeTopology:
+    """Caterpillar-tree drafts scored by one virtual (non-writing) target
+    pass; the session's shared recompute rollback commits the chosen path."""
+
+    name = "tree"
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self.tpl = make_caterpillar(cfg.k, cfg.branch)
+
+    @property
+    def width(self) -> int:
+        return self.tpl.k + 2        # chain prefix + rescue + extra
+
+    @property
+    def buffer_margin(self) -> int:
+        return self.tpl.k + 3
+
+    def run(self, session: DecodeSession, t_params, d_params,
+            state: DecodeState, extras, k_draft, k_verify, theta,
+            active) -> CycleOutcome:
+        cfg, tpl = self.cfg, self.tpl
+        target, drafter = session.target, session.drafter
+        kk = self.width
+
+        # 1. draft the tree (EAGLE-style head, no extra drafter passes)
+        draft, d_state = draft_tree_eagle(
+            drafter, d_params, state.d_state, state.last_token, extras,
+            k_draft, tpl)
+
+        # 2. score all nodes in one virtual pass (nothing written)
+        base_index = state.t_cache["index"]
+        positions = base_index[:, None] + jnp.asarray(tpl.depth)[None]
+        node_logits = target.decode_virtual(
+            t_params, draft.tokens, positions, state.t_cache,
+            jnp.asarray(tpl.mask))
+
+        # 3. verify: chain walk + sibling rescue
+        out, n_commit, n_accept, n_relaxed = verify_tree(
+            tpl, draft.tokens, node_logits, rule=cfg.rule, mode=cfg.mode,
+            theta=theta, temperature=cfg.temperature, key=k_verify,
+            node_probs=draft.token_probs, backend=cfg.backend())
+
+        # 4. commit via the shared rollback: the virtual pass never wrote, so
+        #    the current cache IS the pre-cycle state to recompute from
+        commit_inputs = jnp.concatenate(
+            [state.last_token[:, None], out[:, :kk - 1]], 1)
+        commit_pos = (base_index[:, None]
+                      + jnp.arange(kk, dtype=jnp.int32)[None])
+        t_cache, feats = session.rollback(
+            t_params, state.t_cache, None, commit_inputs, commit_pos,
+            n_accept, active, base_index, scored_in_place=False,
+            want_features=drafter.wants_features)
+
+        return CycleOutcome(out, n_accept, n_commit, n_relaxed, t_cache,
+                            d_state, base_index, features=feats)
+
+
+# ---------------------------------------------------------------------------
+# Historical entry points (thin wrappers over DecodeSession)
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass(frozen=True)
 class TreeEngineConfig:
     k: int = 5
@@ -214,143 +302,41 @@ class TreeEngineConfig:
     mode: str = "greedy"
     theta: float = V.DEFAULT_THETA
     temperature: float = 0.0
+    use_kernel: bool = False
+    guard: str = "positive"
+
+    def to_engine_config(self) -> EngineConfig:
+        return EngineConfig(k=self.k, rule=self.rule, mode=self.mode,
+                            theta=self.theta, temperature=self.temperature,
+                            use_kernel=self.use_kernel, guard=self.guard,
+                            topology="tree", branch=self.branch)
 
 
 class TreeSpecEngine:
-    """Tree-draft engine for attention-family targets with an EAGLE-style
-    drafter (the paper's EAGLE-3 + MARS configuration, tree edition)."""
+    """Tree-draft engine facade for attention-family targets with an
+    EAGLE-style drafter; delegates to the shared :class:`DecodeSession`."""
 
     def __init__(self, target: Model, drafter, cfg: TreeEngineConfig):
-        if target.is_recurrent:
-            raise NotImplementedError(
-                "tree verification needs attention-family targets; use the "
-                "chain engine for ssm/hybrid")
+        self.cfg = cfg
+        self.session = DecodeSession(target, drafter, cfg.to_engine_config())
         self.target = target
         self.drafter = drafter
-        self.cfg = cfg
-        self.tpl = make_caterpillar(cfg.k, cfg.branch)
+        self.tpl = self.session.topology.tpl
 
-    def cycle(self, t_params, d_params, carry):
-        cfg, tpl = self.cfg, self.tpl
-        (buf, lengths, finished, t_cache, d_state, last_token, key,
-         stats) = carry
-        b = last_token.shape[0]
-        key, k_draft, k_verify = jax.random.split(key, 3)
-        active = ~finished
-
-        extras = {"target_params": t_params, "tokens_buf": buf,
-                  "lengths": lengths, "index": t_cache["index"]}
-        draft, d_state = draft_tree_eagle(
-            self.drafter, d_params, d_state, last_token, extras, k_draft, tpl)
-
-        base = t_cache["index"]
-        positions = base[:, None] + jnp.asarray(tpl.depth)[None]
-        node_logits = self.target.decode_virtual(
-            t_params, draft.tokens, positions, t_cache,
-            jnp.asarray(tpl.mask))
-
-        out, n_commit, n_accept, n_relaxed = verify_tree(
-            tpl, draft.tokens, node_logits, rule=cfg.rule, mode=cfg.mode,
-            theta=cfg.theta, temperature=cfg.temperature, key=k_verify,
-            node_probs=draft.token_probs)
-        n_commit = jnp.where(active, n_commit, 0)
-
-        # commit pass: regular masked decode of [last_token, path...] writes
-        # the accepted path into the cache (and computes features for sync)
-        kk = tpl.k + 2
-        commit_inputs = jnp.concatenate([last_token[:, None], out[:, :kk - 1]],
-                                        1)
-        commit_pos = base[:, None] + jnp.arange(kk, dtype=jnp.int32)[None]
-        cmask = (jnp.arange(kk)[None] < n_accept[:, None] + 1) \
-            & active[:, None]
-        res = self.target.decode(t_params, commit_inputs, commit_pos, t_cache,
-                                 token_mask=cmask,
-                                 with_features=self.drafter.wants_features)
-        if self.drafter.wants_features:
-            _, t_cache, feats = res
-        else:
-            _, t_cache = res
-            feats = None
-        t_cache = dict(t_cache)
-        t_cache["index"] = jnp.where(active, base + 1 + n_accept, base)
-
-        # drafter sync: feature of the last committed (cached) token
-        if self.drafter.wants_features and feats is not None:
-            idx = jnp.clip(n_accept, 0, kk - 1)[:, None, None]
-            feat = jnp.take_along_axis(
-                feats, jnp.broadcast_to(idx, (b, 1, feats.shape[-1])), 1)[:, 0]
-            feat = jnp.where(active[:, None], feat, d_state["feat"])
-            d_state = {**d_state, "feat": feat.astype(d_state["feat"].dtype)}
-
-        # buffer write
-        l_buf = buf.shape[1] - 1
-        n_commit = jnp.minimum(n_commit, jnp.maximum(l_buf - lengths, 0))
-        wpos = lengths[:, None] + jnp.arange(kk, dtype=jnp.int32)[None]
-        wvalid = (jnp.arange(kk)[None] < n_commit[:, None]) & (wpos < l_buf)
-        wslot = jnp.where(wvalid, wpos, l_buf)
-        buf = buf.at[jnp.arange(b)[:, None], wslot].set(out)
-        lengths = lengths + n_commit
-        finished = finished | (lengths >= l_buf)
-
-        last_idx = jnp.clip(n_commit - 1, 0, kk - 1)
-        new_last = jnp.take_along_axis(out, last_idx[:, None], 1)[:, 0]
-        last_token = jnp.where(active, new_last, last_token)
-
-        stats = {
-            "cycles": stats["cycles"] + active.astype(jnp.int32),
-            "commits": stats["commits"] + n_commit,
-            "accepts": stats["accepts"] + jnp.where(active, n_accept, 0),
-            "relaxed": stats["relaxed"] + jnp.where(active, n_relaxed, 0),
-        }
-        return (buf, lengths, finished, t_cache, d_state, last_token, key,
-                stats)
+    def cycle(self, t_params, d_params, carry) -> DecodeState:
+        return self.session.cycle(t_params, d_params, carry)
 
     def generate(self, t_params, d_params, prompt, prompt_len, max_new, key):
-        b, s = prompt.shape
-        l_buf = s + max_new + self.cfg.k + 3
-        buf = jnp.zeros((b, l_buf + 1), jnp.int32).at[:, :s].set(prompt)
-        t_cache = self.target.init_cache(t_params, b, l_buf)
-        d_state = self.drafter.init_state(d_params, b, l_buf)
-
-        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-        pmask = pos < (prompt_len - 1)[:, None]
-        out = self.target.decode(t_params, prompt, pos, t_cache,
-                                 token_mask=pmask,
-                                 with_features=self.drafter.wants_features)
-        if self.drafter.wants_features:
-            _, t_cache, pfeats = out
-            idx = jnp.clip(prompt_len - 2, 0, s - 1)[:, None, None]
-            feat0 = jnp.take_along_axis(
-                pfeats, jnp.broadcast_to(idx, (b, 1, pfeats.shape[-1])), 1)[:, 0]
-            d_state = {**d_state, "feat": feat0.astype(d_state["feat"].dtype)}
-        else:
-            _, t_cache = out
-
-        last_token = jnp.take_along_axis(
-            prompt, jnp.clip(prompt_len - 1, 0, s - 1)[:, None], 1)[:, 0]
-        stats = {k: jnp.zeros((b,), jnp.int32)
-                 for k in ("cycles", "commits", "accepts", "relaxed")}
-        carry = (buf, prompt_len, jnp.zeros((b,), bool), t_cache, d_state,
-                 last_token, key, stats)
-
-        def cond(st):
-            return (~st[2]).any() & (st[7]["cycles"].max() < max_new)
-
-        def body(st):
-            return self.cycle(t_params, d_params, st)
-
-        (buf, lengths, finished, _, _, _, _, stats) = jax.lax.while_loop(
-            cond, body, carry)
-        return {"tokens": buf[:, :-1], "lengths": jnp.minimum(lengths, l_buf),
-                "finished": finished, "stats": stats}
+        return self.session.generate(t_params, d_params, prompt, prompt_len,
+                                     max_new, key)
 
 
 def make_tree_generate_fn(target: Model, drafter, cfg: TreeEngineConfig):
-    engine = TreeSpecEngine(target, drafter, cfg)
+    session = DecodeSession(target, drafter, cfg.to_engine_config())
 
     @functools.partial(jax.jit, static_argnames=("max_new",))
     def generate(t_params, d_params, prompt, prompt_len, key, max_new=64):
-        return engine.generate(t_params, d_params, prompt, prompt_len,
-                               max_new, key)
+        return session.generate(t_params, d_params, prompt, prompt_len,
+                                max_new, key)
 
     return generate

@@ -18,10 +18,18 @@ All functions are vectorised over batch and jit-friendly.  A fused Pallas
 kernel implementing the top-2 + ratio + accept decision in one HBM pass over
 the logits lives in ``repro.kernels.mars_verify``; this module is the
 reference semantics (and the default CPU path).
+
+Implementation selection is centralised in :class:`VerifyBackend`: every
+verification path (chain and tree alike) obtains its exact-match and
+relaxation masks from one dispatch point that picks the reference jnp path
+or the fused Pallas kernel per call.  The kernel operates on a flattened
+``(rows, V)`` layout, so chain chunks ``(B, K, V)`` and tree node logits
+``(B, N, V)`` share the same code path.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,9 +82,58 @@ def mars_relax_mask(draft_tokens: jnp.ndarray, target_logits: jnp.ndarray,
     return (draft_tokens == top2) & valid & (ratio > theta)
 
 
-def _accept_greedy(draft_tokens, target_logits):
-    top1 = jnp.argmax(target_logits, axis=-1)
-    return draft_tokens == top1
+# ---------------------------------------------------------------------------
+# VerifyBackend — the single reference-vs-kernel dispatch point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VerifyBackend:
+    """Per-call selection of the verification implementation.
+
+    ``use_kernel=True`` routes the top-2 + accept decision through the fused
+    Pallas kernel (``repro.kernels.mars_verify``) whenever its semantics
+    apply — the kernel hard-codes the paper's positive-logit guard, so the
+    ``guard="margin"`` small-model extension always falls back to the
+    reference path.  Inputs may carry any leading shape: ``(B, K)`` chain
+    chunks and ``(B, N)`` tree nodes are both flattened to the kernel's
+    ``(rows, V)`` layout.
+    """
+    use_kernel: bool = False
+    guard: str = "positive"
+
+    @property
+    def kind(self) -> str:
+        return ("kernel" if self.use_kernel and self.guard == "positive"
+                else "reference")
+
+    def exact_and_relax(self, draft_tokens: jnp.ndarray,
+                        target_logits: jnp.ndarray, theta,
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Masks (draft == target top-1) and (MARS-relaxable), any leading
+        shape; ``target_logits`` has one trailing vocab axis."""
+        if self.kind == "kernel":
+            from repro.kernels import ops as kops
+            v = target_logits.shape[-1]
+            flat_d = draft_tokens.reshape(1, -1)
+            flat_l = target_logits.reshape(1, -1, v)
+            exact, relax, _, _ = kops.mars_verify(flat_d, flat_l, theta)
+            return (exact.reshape(draft_tokens.shape),
+                    relax.reshape(draft_tokens.shape))
+        # one top-k pass yields both masks (top-1 for exact, top-2 + ratio
+        # for the relaxation) — no separate argmax scan over the vocab
+        top1, top2, ratio, valid = top2_and_ratio(target_logits, self.guard)
+        exact = draft_tokens == top1
+        relax = (draft_tokens == top2) & valid & (ratio > theta)
+        return exact, relax
+
+
+def resolve_backend(backend: Optional[VerifyBackend] = None, *,
+                    use_kernel: bool = False, guard: str = "positive",
+                    ) -> VerifyBackend:
+    """Normalise the (backend | use_kernel/guard kwargs) calling conventions."""
+    if backend is not None:
+        return backend
+    return VerifyBackend(use_kernel=use_kernel, guard=guard)
 
 
 def _accept_sampling(draft_tokens, target_logits, draft_token_probs,
@@ -138,6 +195,7 @@ def verify_chain(draft_tokens: jnp.ndarray,
                  draft_full_probs: Optional[jnp.ndarray] = None,
                  use_kernel: bool = False,
                  guard: str = "positive",
+                 backend: Optional[VerifyBackend] = None,
                  ) -> VerifyResult:
     """Verify a chain draft.
 
@@ -146,17 +204,24 @@ def verify_chain(draft_tokens: jnp.ndarray,
                     token *at draft position i* (row K = bonus distribution).
     rule          : "strict" | "mars"
     mode          : "greedy" | "sample"
+    backend       : optional :class:`VerifyBackend`; when None one is built
+                    from ``use_kernel``/``guard``.
     """
     b, k = draft_tokens.shape
     assert target_logits.shape[1] == k + 1
     if key is None:
         key = jax.random.PRNGKey(0)
     k_acc, k_corr = jax.random.split(key)
+    backend = resolve_backend(backend, use_kernel=use_kernel, guard=guard)
 
     logits_at_draft = target_logits[:, :k]
+    need_relax = rule == "mars"
+    if mode == "greedy" or need_relax:
+        exact, relax = backend.exact_and_relax(draft_tokens, logits_at_draft,
+                                               theta)
 
     if mode == "greedy":
-        accept = _accept_greedy(draft_tokens, logits_at_draft)
+        accept = exact
     else:
         if draft_token_probs is None:
             raise ValueError("sampling verification needs draft_token_probs")
@@ -164,13 +229,7 @@ def verify_chain(draft_tokens: jnp.ndarray,
                                   draft_token_probs, k_acc, temperature)
 
     relaxed = jnp.zeros_like(accept)
-    if rule == "mars":
-        if use_kernel:
-            from repro.kernels import ops as kops
-            relax = kops.mars_relax(draft_tokens, logits_at_draft, theta)
-        else:
-            relax = mars_relax_mask(draft_tokens, logits_at_draft, theta,
-                                    guard)
+    if need_relax:
         relaxed = relax & ~accept
         accept = accept | relax
 

@@ -1,0 +1,19 @@
+"""Pallas API compatibility shims.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+releases; every kernel in this package routes through :func:`compiler_params`
+so either JAX works (and very old JAX without the class degrades to None,
+which ``pallas_call`` accepts).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "TPUCompilerParams",
+                          getattr(pltpu, "CompilerParams", None))
+
+
+def compiler_params(**kwargs):
+    if _CompilerParams is None:
+        return None
+    return _CompilerParams(**kwargs)

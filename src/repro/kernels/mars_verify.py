@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import compiler_params as _compiler_params
+
 NEG = -1e30
 
 
@@ -125,7 +127,8 @@ def mars_verify_kernel(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
         out_specs=[row_spec] * 6,
         out_shape=out_shapes,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
     )(draft_tokens, logits, theta_arr)
     z1, i1, z2, i2, exact, relax = outs
     sl = slice(0, t)

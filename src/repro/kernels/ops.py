@@ -36,13 +36,6 @@ def mars_verify(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
     return rs(exact), rs(relax), rs(t1), rs(t2)
 
 
-def mars_relax(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
-               theta: float) -> jnp.ndarray:
-    """(B, K) relaxation mask — drop-in for verify.mars_relax_mask."""
-    _, relax, _, _ = mars_verify(draft_tokens, logits, theta)
-    return relax
-
-
 def decode_attention(q, k, v, k_pos, q_pos, *, window: int = 0,
                      block_len: int = 512):
     return decode_attention_kernel(q, k, v, k_pos, q_pos, window=window,

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import compiler_params as _compiler_params
+
 
 def _kernel(c_ref, b_ref, v_ref, cum_ref, scale_ref, h0_ref,
             y_ref, state_ref):
@@ -92,6 +94,6 @@ def ssd_chunk_kernel(c, b, v, cum, scale, h0, *, interpret: bool = False):
             jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel")),
+        compiler_params=_compiler_params(dimension_semantics=("parallel", "parallel")),
     )(c, b, v, cum, scale, h0)
     return y, state

@@ -4,9 +4,14 @@
         --arch granite-8b --smoke --rule mars --theta 0.9 \
         --slots 4 --requests 8
 
+    # tree-draft serving (EAGLE-style drafter, caterpillar tree)
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch granite-8b --smoke --topology tree --branch 2 --k 3
+
 With ``--smoke`` the reduced config is instantiated with random weights
 (engine demo); otherwise checkpoints are loaded from --ckpt-dir (trained
-with repro.launch.train).
+with repro.launch.train).  Both topologies run through the same shared
+``DecodeSession`` engine core inside the server.
 """
 from __future__ import annotations
 
@@ -19,7 +24,8 @@ import numpy as np
 from repro.checkpoint import latest_step, load_checkpoint
 from repro.configs import get_config, get_smoke, list_archs
 from repro.configs.base import ModelConfig
-from repro.core import EngineConfig, IndependentDrafter
+from repro.core import (EagleDrafter, EngineConfig, IndependentDrafter,
+                        init_eagle_params)
 from repro.models import build_model
 from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
 
@@ -33,6 +39,9 @@ def main():
     ap.add_argument("--rule", default="mars", choices=["mars", "strict"])
     ap.add_argument("--theta", type=float, default=0.9)
     ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--topology", default="chain", choices=["chain", "tree"])
+    ap.add_argument("--branch", type=int, default=2,
+                    help="tree topology: candidates per depth")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
@@ -51,19 +60,32 @@ def main():
         t_params = load_checkpoint(args.ckpt_dir, step, t_params,
                                    name=args.arch)
 
-    d_cfg = ModelConfig(name="draft", family="dense", n_layers=1, d_model=64,
-                        n_heads=2, n_kv_heads=2, d_ff=128,
-                        vocab_size=cfg.vocab_size, dtype="float32")
-    draft = build_model(d_cfg)
-    d_params = draft.init(jax.random.PRNGKey(1))
+    # NOTE: the drafter is randomly initialised in both modes — this
+    # launcher demos the serving engine; only the target loads checkpoints.
+    # A random drafter just drives tau toward 1 (drafts mostly rejected).
+    if args.topology == "tree":
+        # tree drafts need the EAGLE-style step head
+        drafter = EagleDrafter(target, k=args.k,
+                               temperature=args.temperature)
+        d_params = init_eagle_params(cfg, jax.random.PRNGKey(1))
+        if not args.smoke:
+            print("warning: serving with a randomly initialised EAGLE head "
+                  "(no drafter checkpoint support); expect tau ~= 1")
+    else:
+        d_cfg = ModelConfig(name="draft", family="dense", n_layers=1,
+                            d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                            vocab_size=cfg.vocab_size, dtype="float32")
+        draft = build_model(d_cfg)
+        drafter = IndependentDrafter(draft, k=args.k,
+                                     temperature=args.temperature)
+        d_params = draft.init(jax.random.PRNGKey(1))
 
     server = SpecServer(
-        target, IndependentDrafter(draft, k=args.k,
-                                   temperature=args.temperature),
-        t_params, d_params,
+        target, drafter, t_params, d_params,
         EngineConfig(k=args.k, rule=args.rule, theta=args.theta,
                      mode="sample" if args.temperature > 0 else "greedy",
-                     temperature=args.temperature),
+                     temperature=args.temperature,
+                     topology=args.topology, branch=args.branch),
         ServerConfig(slots=args.slots, max_len=256, max_prompt_len=32))
 
     rng = np.random.default_rng(0)
@@ -72,7 +94,7 @@ def main():
             uid=i, prompt=rng.integers(3, cfg.vocab_size, 12).astype(np.int32),
             params=SamplingParams(max_tokens=args.max_tokens)))
     print(f"serving {args.requests} requests "
-          f"({args.rule}, θ={args.theta}, K={args.k}) ...")
+          f"({args.topology}, {args.rule}, θ={args.theta}, K={args.k}) ...")
     for r in sorted(server.run(), key=lambda r: r.uid):
         print(f"  req {r.uid:2d}: {len(r.tokens):3d} tokens "
               f"tau={r.tau:4.2f} latency={r.latency_s:5.2f}s")

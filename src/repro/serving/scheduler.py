@@ -2,28 +2,36 @@
 
 vLLM-style slot scheduler specialised for draft–verify cycles: a fixed
 number of batch slots share one jitted verify-cycle program; finished slots
-are refilled from the waiting queue between cycles.  Admission resets the
-slot's cache rows (attention pos invalidation / recurrent state zeroing) and
-prefills the prompt with a slot-masked decode, so admissions never disturb
-in-flight neighbours.
+are refilled from the waiting queue between cycles.
 
-Host-side logic (queueing, detokenisation) is deliberately thin; all the
-per-token work happens in two jitted programs: ``_prefill`` and the engine's
-``cycle``.
+All device-side state and logic belong to the shared
+:class:`repro.core.session.DecodeSession` engine core — the server holds one
+:class:`~repro.core.session.DecodeState` carry and runs exactly two jitted
+programs over it: the session's slot-masked ``prefill`` (admission: cache
+row reset + prompt prefill, neighbours untouched) and the session's
+``cycle``.  Because the topology is a session-level strategy, the server
+serves chain AND tree drafts with the same scheduler: pass
+``EngineConfig(topology="tree", branch=...)`` with an EAGLE-style drafter.
+
+The session contract the server relies on (see ``core/session.py``):
+``cache.index`` counts cached tokens (the pending last token is not yet
+cached); rollback is index-rewind for attention caches and masked recompute
+for recurrent ones; ``finished == True`` marks an idle slot safe to reuse.
+
+Host-side logic (queueing, budgets, detokenisation) is deliberately thin.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import EngineConfig, SpecEngine
+from repro.core.session import DecodeSession, EngineConfig
 from repro.models.model import Model
 
 
@@ -63,106 +71,63 @@ class ServerConfig:
 class SpecServer:
     def __init__(self, target: Model, drafter, t_params, d_params,
                  engine_cfg: EngineConfig, cfg: ServerConfig):
-        self.engine = SpecEngine(target, drafter, engine_cfg)
+        self.session = DecodeSession(target, drafter, engine_cfg)
         self.target, self.drafter = target, drafter
         self.t_params, self.d_params = t_params, d_params
         self.cfg = cfg
         self.ecfg = engine_cfg
 
-        b, l = cfg.slots, cfg.max_len
-        self.buf = jnp.zeros((b, l + 1), jnp.int32)
-        self.lengths = jnp.zeros((b,), jnp.int32)
-        self.finished = jnp.ones((b,), bool)      # all idle initially
+        b = cfg.slots
+        self.state = self.session.init_state(t_params, d_params, b,
+                                             cfg.max_len)
         self.budget = np.zeros((b,), np.int64)    # host-side per-slot budget
-        self.t_cache = target.init_cache(t_params, b, l)
-        self.d_state = drafter.init_state(d_params, b, l)
-        self.last_token = jnp.zeros((b,), jnp.int32)
-        self.key = jax.random.PRNGKey(0)
-        self.stats = {k: jnp.zeros((b,), jnp.int32)
-                      for k in ("cycles", "commits", "accepts", "relaxed")}
 
         self.queue: deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * b
         self.slot_t0 = np.zeros((b,), np.float64)
         self.slot_base_len = np.zeros((b,), np.int64)
         self.slot_base_stats = {k: np.zeros((b,), np.int64)
-                                for k in self.stats}
+                                for k in self.state.stats}
         self._responses: List[Response] = []
 
-        self._cycle = jax.jit(self._cycle_impl)
+        self._cycle = jax.jit(
+            lambda tp, dp, st: self.session.cycle(tp, dp, st))
         self._prefill = jax.jit(self._prefill_impl)
 
+    # -- host views of the carry -----------------------------------------
+    @property
+    def buf(self):
+        return self.state.buf
+
+    @property
+    def lengths(self):
+        return self.state.lengths
+
+    @property
+    def finished(self):
+        return self.state.finished
+
+    @property
+    def stats(self):
+        return self.state.stats
+
     # ------------------------------------------------------------------
-    def _cycle_impl(self, t_params, d_params, carry):
-        return self.engine.cycle(t_params, d_params, carry)
-
-    def _prefill_impl(self, t_params, d_params, carry, prompt, plen, slot):
-        """Admit one request into slot: reset caches, write prompt, prefill."""
-        (buf, lengths, finished, t_cache, d_state, last_token, key,
-         stats) = carry
-        b = lengths.shape[0]
+    def _prefill_impl(self, t_params, d_params, state, prompt, plen, slot):
+        """Admit one request into ``slot`` via the session's slot-masked
+        prefill (broadcast the single prompt row; only the slot row lands)."""
+        b = self.cfg.slots
         smask = jnp.arange(b) == slot
-
-        t_cache = self.target.reset_slots(t_cache, smask)
-        if hasattr(self.drafter, "model"):
-            d_cache = self.drafter.model.reset_slots(d_state["cache"], smask)
-            d_state = {**d_state, "cache": d_cache}
-
-        s = prompt.shape[0]
-        # write prompt into the slot's buffer row
-        row = jnp.where(jnp.arange(buf.shape[1]) < s,
-                        jnp.pad(prompt, (0, buf.shape[1] - s)), 0)
-        buf = jnp.where(smask[:, None], row[None], buf)
-        lengths = jnp.where(smask, plen, lengths)
-        finished = jnp.where(smask, False, finished)
-        stats = {k: jnp.where(smask, 0, v) for k, v in stats.items()}
-
-        # slot-masked prefill of prompt[:-1]
-        tokens = jnp.broadcast_to(prompt[None], (b, s))
-        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-        pmask = smask[:, None] & (pos < plen - 1)
-        out = self.target.decode(self.t_params, tokens, pos, t_cache,
-                                 token_mask=pmask,
-                                 with_features=self.drafter.wants_features)
-        if self.drafter.wants_features:
-            _, new_t_cache, feats = out
-            idx = jnp.clip(plen - 2, 0, s - 1)
-            f0 = jnp.take_along_axis(
-                feats, jnp.full((b, 1, feats.shape[-1]), idx, jnp.int32), 1)[:, 0]
-            if "feat" in d_state:
-                feat = jnp.where(smask[:, None],
-                                 f0.astype(d_state["feat"].dtype),
-                                 d_state["feat"])
-                d_state = {**d_state, "feat": feat}
-        else:
-            _, new_t_cache = out
-        t_cache = new_t_cache
-
-        if hasattr(self.drafter, "model"):
-            _, d_cache = self.drafter.model.decode(
-                self.d_params, tokens, pos, d_state["cache"],
-                token_mask=pmask)
-            d_state = {**d_state, "cache": d_cache}
-
-        last = prompt[jnp.clip(plen - 1, 0, s - 1)]
-        last_token = jnp.where(smask, last, last_token)
-        return (buf, lengths, finished, t_cache, d_state, last_token, key,
-                stats)
+        prompt_b = jnp.broadcast_to(prompt[None], (b, prompt.shape[0]))
+        plen_b = jnp.full((b,), plen, jnp.int32)
+        return self.session.prefill(t_params, d_params, state, prompt_b,
+                                    plen_b, slot_mask=smask)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _carry(self):
-        return (self.buf, self.lengths, self.finished, self.t_cache,
-                self.d_state, self.last_token, self.key, self.stats)
-
-    def _set_carry(self, carry):
-        (self.buf, self.lengths, self.finished, self.t_cache, self.d_state,
-         self.last_token, self.key, self.stats) = carry
-
     def _admit(self):
-        finished = np.asarray(self.finished)
+        finished = np.asarray(self.state.finished)
         for slot in range(self.cfg.slots):
             if not finished[slot]:
                 continue
@@ -174,26 +139,26 @@ class SpecServer:
                 prompt = np.zeros((s,), np.int32)
                 plen = min(len(req.prompt), s)
                 prompt[:plen] = req.prompt[:plen]
-                carry = self._prefill(
-                    self.t_params, self.d_params, self._carry(),
+                self.state = self._prefill(
+                    self.t_params, self.d_params, self.state,
                     jnp.asarray(prompt), jnp.int32(plen), jnp.int32(slot))
-                self._set_carry(carry)
                 self.slot_req[slot] = req
                 self.slot_t0[slot] = time.time()
                 self.slot_base_len[slot] = plen
                 self.budget[slot] = req.params.max_tokens
-                for k in self.stats:
+                for k in self.state.stats:
                     self.slot_base_stats[k][slot] = int(
-                        np.asarray(self.stats[k])[slot])
+                        np.asarray(self.state.stats[k])[slot])
 
     def _harvest(self, slot: int):
         req = self.slot_req[slot]
         if req is None:
             return
-        toks = np.asarray(self.buf)[slot, :int(np.asarray(self.lengths)[slot])]
-        cyc = int(np.asarray(self.stats["cycles"])[slot]
+        toks = np.asarray(self.state.buf)[
+            slot, :int(np.asarray(self.state.lengths)[slot])]
+        cyc = int(np.asarray(self.state.stats["cycles"])[slot]
                   - self.slot_base_stats["cycles"][slot])
-        com = int(np.asarray(self.stats["commits"])[slot]
+        com = int(np.asarray(self.state.stats["commits"])[slot]
                   - self.slot_base_stats["commits"][slot])
         self._responses.append(Response(
             uid=req.uid,
@@ -207,18 +172,17 @@ class SpecServer:
         self._admit()
         if all(r is None for r in self.slot_req):
             return
-        carry = self._cycle(self.t_params, self.d_params, self._carry())
-        self._set_carry(carry)
+        self.state = self._cycle(self.t_params, self.d_params, self.state)
         # budget exhaustion -> finish slot
-        lengths = np.asarray(self.lengths)
-        fin = np.asarray(self.finished).copy()
+        lengths = np.asarray(self.state.lengths)
+        fin = np.asarray(self.state.finished).copy()
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
             produced = lengths[slot] - self.slot_base_len[slot]
             if produced >= self.budget[slot]:
                 fin[slot] = True
-        self.finished = jnp.asarray(fin)
+        self.state = self.state._replace(finished=jnp.asarray(fin))
 
     def run(self, *, max_ticks: int = 10_000) -> List[Response]:
         for _ in range(max_ticks):
@@ -226,7 +190,7 @@ class SpecServer:
                 break
             self.step()
             # harvest finished
-            finished = np.asarray(self.finished)
+            finished = np.asarray(self.state.finished)
             for slot, req in enumerate(self.slot_req):
                 if req is not None and finished[slot]:
                     self._harvest(slot)

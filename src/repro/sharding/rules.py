@@ -137,6 +137,10 @@ def _spec_for_path(path: str, ndim: int) -> P:
             if axes is None:
                 return P()
             resolved = [rules.get(a) if a else None for a in axes]
+            # a 1-tuple mesh mapping (e.g. ("data",)) is the same sharding
+            # as the bare axis name; normalise so specs compare cleanly
+            resolved = [a[0] if isinstance(a, tuple) and len(a) == 1 else a
+                        for a in resolved]
             # pad leading dims (layer stacking) with None
             pad = [None] * (ndim - len(resolved))
             if ndim < len(resolved):

@@ -1,0 +1,155 @@
+"""Tests for the shared DecodeSession engine core.
+
+Covers the refactor's contract: chain and tree are interchangeable draft
+topologies over one engine (parity at branch=1), the continuous-batching
+server runs tree drafts end-to-end, and the fused Pallas kernel path agrees
+with the reference on tree node logits.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import (EagleDrafter, EngineConfig, init_eagle_params,
+                        make_generate_fn)
+from repro.core.tree import make_caterpillar, verify_tree
+from repro.models import build_model
+from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
+
+K = 3
+
+
+@pytest.fixture(scope="module")
+def eagle_setup():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    t_params = tgt.init(jax.random.PRNGKey(1))
+    e_params = init_eagle_params(cfg, jax.random.PRNGKey(7))
+    return cfg, tgt, t_params, e_params
+
+
+@pytest.mark.parametrize("rule", ["strict", "mars"])
+def test_chain_tree_parity_branch1(eagle_setup, rule):
+    """A branch-1 'tree' is a chain: under greedy verification both
+    topologies must commit identical tokens through the shared session."""
+    cfg, tgt, t_params, e_params = eagle_setup
+    drafter = EagleDrafter(tgt, k=K, temperature=0.0)
+    B, S, NEW = 2, 8, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, S), 3,
+                                cfg.vocab_size)
+    plen = jnp.full((B,), S, jnp.int32)
+
+    outs = {}
+    for topology in ("chain", "tree"):
+        gen = make_generate_fn(
+            tgt, drafter,
+            EngineConfig(k=K, rule=rule, mode="greedy", temperature=0.0,
+                         topology=topology, branch=1))
+        outs[topology] = gen(t_params, e_params, prompt, plen,
+                             jax.random.PRNGKey(9), max_new=NEW)
+
+    for b in range(B):
+        n = S + NEW
+        np.testing.assert_array_equal(
+            np.asarray(outs["chain"]["tokens"])[b, :n],
+            np.asarray(outs["tree"]["tokens"])[b, :n])
+
+
+def test_server_serves_tree_drafts(eagle_setup):
+    """EngineConfig(topology='tree') must serve end-to-end through the
+    continuous-batching scheduler (more requests than slots)."""
+    cfg, tgt, t_params, e_params = eagle_setup
+    server = SpecServer(
+        tgt, EagleDrafter(tgt, k=K, temperature=0.0), t_params, e_params,
+        EngineConfig(k=K, rule="mars", mode="greedy", temperature=0.0,
+                     topology="tree", branch=2),
+        ServerConfig(slots=2, max_len=96, max_prompt_len=12))
+    rng = np.random.default_rng(0)
+    n = 3
+    for i in range(n):
+        server.submit(Request(
+            uid=i,
+            prompt=rng.integers(3, cfg.vocab_size, size=6).astype(np.int32),
+            params=SamplingParams(max_tokens=8)))
+    resps = server.run()
+    assert sorted(r.uid for r in resps) == list(range(n))
+    for r in resps:
+        assert len(r.tokens) >= 8
+        assert r.n_cycles >= 1
+        assert 1.0 <= r.tau <= K + 2
+
+
+def test_server_tree_matches_offline_tree(eagle_setup):
+    """Served tree generation must equal offline tree generation for the
+    same prompt (greedy): the server shares the session's carry mechanics."""
+    cfg, tgt, t_params, e_params = eagle_setup
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(3, cfg.vocab_size, size=8).astype(np.int32)
+    max_tokens = 10
+
+    ecfg = EngineConfig(k=K, rule="strict", mode="greedy", temperature=0.0,
+                        topology="tree", branch=2)
+    server = SpecServer(
+        tgt, EagleDrafter(tgt, k=K, temperature=0.0), t_params, e_params,
+        ecfg, ServerConfig(slots=2, max_len=96, max_prompt_len=12))
+    server.submit(Request(uid=0, prompt=prompt,
+                          params=SamplingParams(max_tokens=max_tokens)))
+    served = {r.uid: r.tokens for r in server.run()}[0]
+
+    gen = make_generate_fn(tgt, EagleDrafter(tgt, k=K, temperature=0.0), ecfg)
+    out = gen(t_params, e_params, jnp.asarray(prompt)[None],
+              jnp.asarray([len(prompt)], jnp.int32), jax.random.PRNGKey(0),
+              max_new=max_tokens + K + 1)
+    offline = np.asarray(out["tokens"])[0, len(prompt):]
+    n = min(len(served), max_tokens)
+    np.testing.assert_array_equal(served[:n], offline[:n])
+
+
+def test_tree_kernel_matches_reference():
+    """verify_tree must agree between the fused Pallas kernel (flattened
+    (B*N, V) layout, interpret mode on CPU) and the reference path."""
+    tpl = make_caterpillar(K, 2)
+    n = len(tpl.depth)
+    rng = np.random.default_rng(3)
+    b, v = 2, 64
+    node_logits = jnp.asarray(rng.standard_normal((b, n, v)) * 2, jnp.float32)
+    node_tokens = jnp.asarray(rng.integers(0, v, (b, n)), jnp.int32)
+    # plant an exact match and a near-tie relaxation candidate
+    parent_logits = node_logits[:, np.maximum(tpl.parent, 0)]
+    top = jax.lax.top_k(parent_logits, 2)[1]
+    node_tokens = node_tokens.at[0, 1].set(top[0, 1, 0])   # chain d1 exact
+    node_tokens = node_tokens.at[1, 1].set(top[1, 1, 1])   # chain d1 top-2
+
+    key = jax.random.PRNGKey(0)
+    ref = verify_tree(tpl, node_tokens, node_logits, rule="mars",
+                      mode="greedy", theta=0.9, temperature=0.0, key=key,
+                      use_kernel=False)
+    ker = verify_tree(tpl, node_tokens, node_logits, rule="mars",
+                      mode="greedy", theta=0.9, temperature=0.0, key=key,
+                      use_kernel=True)
+    for a, b_ in zip(ref, ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_chain_kernel_backend_generates(eagle_setup):
+    """End-to-end chain generation with the fused verify kernel enabled
+    (interpret mode on CPU) matches the reference backend."""
+    cfg, tgt, t_params, e_params = eagle_setup
+    drafter = EagleDrafter(tgt, k=K, temperature=0.0)
+    B, S, NEW = 1, 8, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, S), 3,
+                                cfg.vocab_size)
+    plen = jnp.full((B,), S, jnp.int32)
+    outs = {}
+    for use_kernel in (False, True):
+        gen = make_generate_fn(
+            tgt, drafter,
+            EngineConfig(k=K, rule="mars", mode="greedy", temperature=0.0,
+                         use_kernel=use_kernel))
+        outs[use_kernel] = gen(t_params, e_params, prompt, plen,
+                               jax.random.PRNGKey(9), max_new=NEW)
+    np.testing.assert_array_equal(np.asarray(outs[False]["tokens"]),
+                                  np.asarray(outs[True]["tokens"]))
