@@ -1,9 +1,14 @@
 """End-to-end serving driver: continuous-batching MARS server.
 
 Trains the tiny pair (cached), then serves a stream of batched requests
-through the slot scheduler with speculative decoding + MARS verification,
-printing per-request τ and latency — the paper's serving scenario at CPU
-scale.
+through the device-resident slot scheduler with speculative decoding + MARS
+verification, printing per-request τ and latency — the paper's serving
+scenario at CPU scale.
+
+Each request carries its own ``SamplingParams`` (token budget AND
+temperature): both live in the device carry, so the tick loop enforces them
+without any host round-trip — note the per-request τ spread across the
+mixed-temperature stream, and the host-sync counter at the end.
 
 The server is a thin wrapper over the shared ``DecodeSession`` engine core,
 so the same scheduler serves chain drafts (independent small-LM drafter)
@@ -12,20 +17,27 @@ below flips ``EngineConfig(topology="tree")`` and nothing else.
 
     PYTHONPATH=src python examples/serve_continuous.py
 """
+import os
+import sys
+
 import numpy as np
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import common as C
 from repro.core import EagleDrafter, EngineConfig, IndependentDrafter
 from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
 
 
-def serve(server, n_req=12, max_tokens=48, label=""):
+def serve(server, n_req=12, max_tokens=48, label="", temperatures=(1.0,)):
     cor = C.corpus()
     for i in range(n_req):
         prompt = cor.sample_batch(1, 24, seed=100 + i)[0]
+        temp = temperatures[i % len(temperatures)]
         server.submit(Request(uid=i, prompt=prompt,
-                              params=SamplingParams(max_tokens=max_tokens)))
-    print(f"serving {n_req} {label} requests on {server.cfg.slots} slots ...")
+                              params=SamplingParams(max_tokens=max_tokens,
+                                                    temperature=temp)))
+    print(f"serving {n_req} {label} requests on {server.cfg.slots} slots "
+          f"(temperatures {list(temperatures)}) ...")
     responses = server.run()
     taus = []
     for r in sorted(responses, key=lambda r: r.uid):
@@ -33,20 +45,24 @@ def serve(server, n_req=12, max_tokens=48, label=""):
         print(f"  req {r.uid:2d}: {len(r.tokens):3d} tokens  "
               f"tau={r.tau:4.2f}  latency={r.latency_s:5.2f}s")
     print(f"mean tau = {np.mean(taus):.2f} "
-          f"(tokens committed per verify cycle; >1 == speculative win)\n")
+          f"(tokens committed per verify cycle; >1 == speculative win)")
+    print(f"host syncs: {server.host_syncs} across {server.step_calls} "
+          f"fused tick groups — the tick loop itself never touches the "
+          f"host\n")
 
 
 def main():
     target, t_params, draft, d_params = C.get_pair()
 
-    # chain topology: independent small-LM drafter, sampling verification
+    # chain topology: independent small-LM drafter, sampling verification,
+    # a different per-request temperature riding each slot's carry
     serve(SpecServer(
         target, IndependentDrafter(draft, k=4, temperature=1.0),
         t_params, d_params,
         EngineConfig(k=4, rule="mars", mode="sample", temperature=1.0,
                      guard="margin"),
         ServerConfig(slots=4, max_len=256, max_prompt_len=32)),
-        label="chain")
+        label="chain", temperatures=(0.5, 1.0, 2.0))
 
     # tree topology: EAGLE-style head, caterpillar tree, greedy + MARS —
     # same scheduler, same session core, different draft topology

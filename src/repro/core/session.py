@@ -5,7 +5,11 @@ generation, tree decoding, and the continuous-batching ``SpecServer`` — runs
 the same cycle over the same carry.  This module owns that cycle once:
 
 * :class:`DecodeState` — the carry pytree (token buffer, lengths, finished
-  flags, target cache, drafter state, pending last token, PRNG key, stats).
+  flags, target cache, drafter state, pending last token, PRNG key, stats,
+  per-slot remaining token budget, per-slot verification temperature).
+  Budgets and temperatures are *device-resident serving state*: ``cycle``
+  clamps commits to the budget and flips ``finished`` on-device, so a
+  scheduler can run many fused cycles between host polls.
 * :class:`DecodeSession` — prefill (full-batch and slot-masked admission),
   one jit-traceable ``cycle``, EOS/buffer-commit bookkeeping, and cache
   rollback; parameterised by a *draft topology* strategy.
@@ -66,9 +70,18 @@ class EngineConfig:
         return V.VerifyBackend(use_kernel=self.use_kernel, guard=self.guard)
 
 
+NO_BUDGET = jnp.int32(2**30)     # "unlimited" per-slot token budget
+
+
 class DecodeState(NamedTuple):
     """The decode carry.  A NamedTuple so it is simultaneously a pytree
-    (while_loop / jit friendly) and unpackable as the historical 8-tuple."""
+    (while_loop / jit friendly) and positionally unpackable.
+
+    All *per-request serving state* lives here, on device: ``budget`` and
+    ``temperature`` extend the historical 8-tuple so a scheduler tick never
+    has to round-trip through the host to enforce ``max_tokens`` or
+    per-request sampling temperature — ``cycle`` clamps commits to the
+    budget, decrements it, and flips ``finished`` on-device."""
     buf: jnp.ndarray            # (B, L+1) committed tokens (+1 trash slot)
     lengths: jnp.ndarray        # (B,) committed length incl. prompt
     finished: jnp.ndarray       # (B,) bool; True == idle/finished slot
@@ -77,6 +90,8 @@ class DecodeState(NamedTuple):
     last_token: jnp.ndarray     # (B,) pending token (not yet in cache)
     key: jnp.ndarray            # PRNG key
     stats: Dict[str, jnp.ndarray]
+    budget: jnp.ndarray         # (B,) remaining new tokens this request may emit
+    temperature: jnp.ndarray    # (B,) per-slot verification temperature
 
 
 class CycleOutcome(NamedTuple):
@@ -113,6 +128,11 @@ class ChainTopology:
     def buffer_margin(self) -> int:
         return self.k + 2
 
+    @property
+    def commit_width(self) -> int:
+        """Most tokens one cycle can commit (accepted chain + correction)."""
+        return self.k + 1
+
     def run(self, session: "DecodeSession", t_params, d_params,
             state: DecodeState, extras, k_draft, k_verify, theta,
             active) -> CycleOutcome:
@@ -145,7 +165,7 @@ class ChainTopology:
         # 3. verify
         res = V.verify_chain(
             d_out.tokens, logits, rule=cfg.rule, mode=cfg.mode,
-            theta=theta, temperature=cfg.temperature, key=k_verify,
+            theta=theta, temperature=state.temperature, key=k_verify,
             draft_token_probs=d_out.token_probs,
             draft_full_probs=d_out.full_probs,
             backend=cfg.backend())
@@ -215,11 +235,14 @@ class DecodeSession:
             last_token=jnp.zeros((batch,), jnp.int32),
             key=key,
             stats={k: jnp.zeros((batch,), jnp.int32) for k in STAT_KEYS},
+            budget=jnp.full((batch,), NO_BUDGET, jnp.int32),
+            temperature=jnp.full((batch,), self.cfg.temperature, jnp.float32),
         )
 
     def prefill(self, t_params, d_params, state: DecodeState,
                 prompt: jnp.ndarray, prompt_len: jnp.ndarray,
-                slot_mask: Optional[jnp.ndarray] = None) -> DecodeState:
+                slot_mask: Optional[jnp.ndarray] = None,
+                budget=None, temperature=None) -> DecodeState:
         """Admit prompts into the rows of ``slot_mask`` (None = all rows).
 
         Resets the admitted rows' caches, writes the prompt into the buffer,
@@ -227,11 +250,27 @@ class DecodeSession:
         token stays pending), and grounds feature-carrying drafters.  Rows
         outside the mask are untouched, so mid-flight admissions never
         disturb in-flight neighbours.
+
+        ``budget`` (scalar or (B,)) sets the admitted rows' remaining-token
+        budget (None = unlimited); ``temperature`` (scalar or (B,)) their
+        verification temperature (None = the config default).  Both live in
+        the device carry, so admission is the only time the host supplies
+        per-request serving state.
         """
         state = DecodeState(*state)
         b, s = prompt.shape
         if slot_mask is None:
             slot_mask = jnp.ones((b,), bool)
+        if budget is None:
+            budget = NO_BUDGET
+        if temperature is None:
+            temperature = self.cfg.temperature
+        budget_row = jnp.broadcast_to(
+            jnp.asarray(budget, jnp.int32), (b,))
+        temp_row = jnp.broadcast_to(
+            jnp.asarray(temperature, jnp.float32), (b,))
+        new_budget = jnp.where(slot_mask, budget_row, state.budget)
+        new_temp = jnp.where(slot_mask, temp_row, state.temperature)
 
         t_cache = self.target.reset_slots(state.t_cache, slot_mask)
         d_state = self.drafter.reset_slots(state.d_state, slot_mask)
@@ -270,7 +309,8 @@ class DecodeSession:
             prompt, jnp.clip(prompt_len - 1, 0, s - 1)[:, None], 1)[:, 0]
         last_token = jnp.where(slot_mask, last, state.last_token)
         return DecodeState(buf, lengths, finished, t_cache, d_state,
-                           last_token, state.key, stats)
+                           last_token, state.key, stats,
+                           new_budget, new_temp)
 
     # -- cache rollback (shared by all topologies) ----------------------------
     def rollback(self, t_params, pre_cache, post_cache, inputs, positions,
@@ -345,6 +385,12 @@ class DecodeSession:
         # never count commits past the buffer end (the row finishes anyway)
         n_commit = jnp.minimum(n_commit,
                                jnp.maximum(l_buf - state.lengths, 0))
+        # budget clamp: a request never emits more than its remaining token
+        # budget; exhaustion flips ``finished`` on-device, so the serving
+        # tick needs no host round-trip to enforce ``max_tokens``
+        n_commit = jnp.minimum(n_commit, jnp.maximum(state.budget, 0))
+        budget = state.budget - jnp.where(active, n_commit, 0)
+        finished = finished | (active & (budget <= 0))
         wpos = state.lengths[:, None] + pos_k
         wvalid = (pos_k < n_commit[:, None]) & (wpos < l_buf)
         wslot = jnp.where(wvalid, wpos, l_buf)
@@ -359,11 +405,14 @@ class DecodeSession:
                               active=active)
         d_state = self.drafter.sync(d_params, out.d_state, committed, extras)
 
-        # pending token for the next cycle
+        # pending token for the next cycle; rows whose clamps forced
+        # n_commit == 0 committed nothing, so out_tokens[:, 0] is garbage
+        # for them — keep their previous pending token
         last_idx = jnp.clip(n_commit - 1, 0, w - 1)
         new_last = jnp.take_along_axis(
             out.out_tokens, last_idx[:, None], 1)[:, 0]
-        last_token = jnp.where(active, new_last, state.last_token)
+        last_token = jnp.where(active & (n_commit > 0), new_last,
+                               state.last_token)
 
         stats = {
             "cycles": state.stats["cycles"] + active.astype(jnp.int32),
@@ -374,7 +423,8 @@ class DecodeSession:
             + jnp.where(active, out.n_relaxed, 0),
         }
         return DecodeState(buf, lengths, finished, out.t_cache, d_state,
-                           last_token, key, stats)
+                           last_token, key, stats, budget,
+                           state.temperature)
 
     # -- full generation ------------------------------------------------------
     def generate(self, t_params, d_params, prompt: jnp.ndarray,
@@ -385,7 +435,8 @@ class DecodeSession:
         l_buf = s + max_new + self.topology.buffer_margin
         state = self.init_state(t_params, d_params, b, l_buf, key=key,
                                 encoder_frames=encoder_frames)
-        state = self.prefill(t_params, d_params, state, prompt, prompt_len)
+        state = self.prefill(t_params, d_params, state, prompt, prompt_len,
+                             budget=max_new)
 
         max_cycles = max_new  # worst case: 1 committed token per cycle
 

@@ -121,14 +121,15 @@ def draft_tree_eagle(drafter, params, state, last_token, extras, key,
 
 def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
                 node_logits: jnp.ndarray, *, rule: str, mode: str,
-                theta: float, temperature: float, key,
+                theta: float, temperature, key,
                 node_probs: Optional[jnp.ndarray] = None,
                 use_kernel: bool = False, guard: str = "positive",
                 backend: Optional[V.VerifyBackend] = None):
     """Choose the committed path.
 
     node_tokens: (B, N); node_logits: (B, N, V) — logits[i] is the target
-    distribution for the *successor* of node i.
+    distribution for the *successor* of node i.  ``temperature`` may be a
+    scalar or a per-row ``(B,)`` vector (per-request serving temperature).
 
     Returns (out_tokens (B, K+2), n_commit (B,), n_accept, n_relaxed).
     """
@@ -148,9 +149,9 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
     if mode == "greedy":
         accept = exact
     else:
+        t = V._temp_like(temperature, parent_logits.ndim)
         logp = jax.nn.log_softmax(
-            parent_logits.astype(jnp.float32)
-            / jnp.maximum(temperature, 1e-6), -1)
+            parent_logits.astype(jnp.float32) / jnp.maximum(t, 1e-6), -1)
         p_tok = jnp.exp(jnp.take_along_axis(
             logp, node_tokens[..., None], -1))[..., 0]
         u = jax.random.uniform(key_acc, node_tokens.shape)
@@ -204,7 +205,8 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
     if mode == "greedy":
         extra = jnp.argmax(src_logits, -1).astype(jnp.int32)
     else:
-        lf = src_logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+        t = V._temp_like(temperature, src_logits.ndim)
+        lf = src_logits.astype(jnp.float32) / jnp.maximum(t, 1e-6)
         extra = jax.random.categorical(key_extra, lf, -1).astype(jnp.int32)
 
     # assemble committed tokens: chain prefix (+ rescue) + extra
@@ -247,6 +249,11 @@ class TreeTopology:
         return self.tpl.k + 2        # chain prefix + rescue + extra
 
     @property
+    def commit_width(self) -> int:
+        """Most tokens one cycle can commit (chain + rescue + extra)."""
+        return self.tpl.k + 2
+
+    @property
     def buffer_margin(self) -> int:
         return self.tpl.k + 3
 
@@ -272,7 +279,7 @@ class TreeTopology:
         # 3. verify: chain walk + sibling rescue
         out, n_commit, n_accept, n_relaxed = verify_tree(
             tpl, draft.tokens, node_logits, rule=cfg.rule, mode=cfg.mode,
-            theta=theta, temperature=cfg.temperature, key=k_verify,
+            theta=theta, temperature=state.temperature, key=k_verify,
             node_probs=draft.token_probs, backend=cfg.backend())
 
         # 4. commit via the shared rollback: the virtual pass never wrote, so

@@ -136,12 +136,22 @@ def resolve_backend(backend: Optional[VerifyBackend] = None, *,
     return VerifyBackend(use_kernel=use_kernel, guard=guard)
 
 
+def _temp_like(temperature, ndim: int) -> jnp.ndarray:
+    """Broadcast a scalar or per-row ``(B,)`` temperature against logits of
+    rank ``ndim`` (trailing vocab axis).  Per-row temperatures are how the
+    serving layer threads ``SamplingParams.temperature`` through the shared
+    device-resident carry without a per-request recompile."""
+    t = jnp.asarray(temperature, jnp.float32)
+    return t.reshape(t.shape + (1,) * (ndim - t.ndim))
+
+
 def _accept_sampling(draft_tokens, target_logits, draft_token_probs,
                      key, temperature):
     """Leviathan accept: u < p(v)/q(v) with p the (temperature-scaled)
     target distribution and q the drafter's probability of its own sample."""
+    t = _temp_like(temperature, target_logits.ndim)
     logp = jax.nn.log_softmax(
-        target_logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6),
+        target_logits.astype(jnp.float32) / jnp.maximum(t, 1e-6),
         axis=-1)
     p_draft = jnp.exp(
         jnp.take_along_axis(logp, draft_tokens[..., None], axis=-1))[..., 0]
@@ -165,8 +175,9 @@ def _correction_token(target_logits_all, n_accept, *, mode, key, temperature,
     if mode == "greedy":
         return jnp.argmax(sel, axis=-1).astype(jnp.int32)
 
+    t = _temp_like(temperature, sel.ndim)
     logp = jax.nn.log_softmax(
-        sel.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
+        sel.astype(jnp.float32) / jnp.maximum(t, 1e-6), axis=-1)
     p = jnp.exp(logp)
     if draft_full_probs is not None:
         # residual distribution at the rejected position
@@ -189,7 +200,7 @@ def verify_chain(draft_tokens: jnp.ndarray,
                  rule: str = "mars",
                  mode: str = "sample",
                  theta: float = DEFAULT_THETA,
-                 temperature: float = 1.0,
+                 temperature=1.0,
                  key: Optional[jnp.ndarray] = None,
                  draft_token_probs: Optional[jnp.ndarray] = None,
                  draft_full_probs: Optional[jnp.ndarray] = None,
@@ -204,6 +215,8 @@ def verify_chain(draft_tokens: jnp.ndarray,
                     token *at draft position i* (row K = bonus distribution).
     rule          : "strict" | "mars"
     mode          : "greedy" | "sample"
+    temperature   : scalar or per-row ``(B,)`` vector — the serving layer
+                    passes the per-slot temperatures it carries on device.
     backend       : optional :class:`VerifyBackend`; when None one is built
                     from ``use_kernel``/``guard``.
     """

@@ -46,6 +46,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=32)
+    ap.add_argument("--steps-per-sync", type=int, default=4,
+                    help="max fused verify cycles per host poll when an "
+                         "EOS token can preempt a slot early")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -86,18 +89,24 @@ def main():
                      mode="sample" if args.temperature > 0 else "greedy",
                      temperature=args.temperature,
                      topology=args.topology, branch=args.branch),
-        ServerConfig(slots=args.slots, max_len=256, max_prompt_len=32))
+        ServerConfig(slots=args.slots, max_len=256, max_prompt_len=32,
+                     steps_per_sync=args.steps_per_sync))
 
+    # per-request sampling params ride the device carry: each request may
+    # ask for its own temperature and token budget
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         server.submit(Request(
             uid=i, prompt=rng.integers(3, cfg.vocab_size, 12).astype(np.int32),
-            params=SamplingParams(max_tokens=args.max_tokens)))
+            params=SamplingParams(max_tokens=args.max_tokens,
+                                  temperature=args.temperature)))
     print(f"serving {args.requests} requests "
           f"({args.topology}, {args.rule}, θ={args.theta}, K={args.k}) ...")
     for r in sorted(server.run(), key=lambda r: r.uid):
         print(f"  req {r.uid:2d}: {len(r.tokens):3d} tokens "
               f"tau={r.tau:4.2f} latency={r.latency_s:5.2f}s")
+    print(f"host syncs: {server.host_syncs} across {server.step_calls} "
+          f"fused tick groups (tick loop itself is sync-free)")
 
 
 if __name__ == "__main__":

@@ -1,24 +1,41 @@
-"""Continuous-batching speculative-decoding server.
+"""Continuous-batching speculative-decoding server — device-resident.
 
 vLLM-style slot scheduler specialised for draft–verify cycles: a fixed
-number of batch slots share one jitted verify-cycle program; finished slots
-are refilled from the waiting queue between cycles.
+number of batch slots share one jitted program; finished slots are refilled
+from the waiting queue between *sync points*, not between cycles.
 
-All device-side state and logic belong to the shared
-:class:`repro.core.session.DecodeSession` engine core — the server holds one
-:class:`~repro.core.session.DecodeState` carry and runs exactly two jitted
-programs over it: the session's slot-masked ``prefill`` (admission: cache
-row reset + prompt prefill, neighbours untouched) and the session's
-``cycle``.  Because the topology is a session-level strategy, the server
-serves chain AND tree drafts with the same scheduler: pass
+The device-resident contract
+----------------------------
+
+Everything a verify cycle needs to run — and to *stop* — lives in the
+:class:`~repro.core.session.DecodeState` carry on device: the token buffer,
+lengths, finished flags, caches, the pending token, and (since this
+scheduler was rewritten) the per-slot remaining token ``budget`` and
+per-slot verification ``temperature``.  ``DecodeSession.cycle`` clamps each
+commit to the budget, decrements it, and flips ``finished`` on-device, so:
+
+* the tick loop is **sync-free** — :meth:`SpecServer.step` dispatches
+  ``steps_per_sync`` fused cycles (one ``lax.fori_loop`` jit with the carry
+  donated, so buffers are reused rather than copied) and performs **zero**
+  device→host transfers;
+* the host may observe the carry only at :meth:`SpecServer.sync`: one small
+  poll of the ``finished`` flags, then — only when something finished — a
+  single ``device_get`` of the finished rows (tokens, lengths, stats);
+* the host *writes* serving state only at admission: one slot-masked
+  ``prefill`` call admits **all** refillable slots at once, carrying each
+  request's prompt, ``max_tokens`` budget, and temperature into the masked
+  rows (in-flight neighbours are untouched).
+
+``host_syncs`` counts every device→host transfer the server performs; tests
+and ``benchmarks/serving_throughput.py`` assert it stays zero across
+``step()`` and grows only at sync points.
+
+Because the topology is a session-level strategy, the server serves chain
+AND tree drafts with the same scheduler: pass
 ``EngineConfig(topology="tree", branch=...)`` with an EAGLE-style drafter.
 
-The session contract the server relies on (see ``core/session.py``):
-``cache.index`` counts cached tokens (the pending last token is not yet
-cached); rollback is index-rewind for attention caches and masked recompute
-for recurrent ones; ``finished == True`` marks an idle slot safe to reuse.
-
-Host-side logic (queueing, budgets, detokenisation) is deliberately thin.
+Host-side logic (queueing, response assembly, detokenisation) is
+deliberately thin and never feeds back into the carry mid-flight.
 """
 from __future__ import annotations
 
@@ -31,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.session import DecodeSession, EngineConfig
+from repro.core.session import DecodeSession, DecodeState, EngineConfig
 from repro.models.model import Model
 
 
@@ -66,6 +83,12 @@ class ServerConfig:
     slots: int = 4
     max_len: int = 512
     max_prompt_len: int = 128
+    # Cap on fused verify cycles per dispatch when EOS can preempt a slot
+    # early.  Without an EOS token the cap is ignored: a cycle commits at
+    # most ``commit_width`` tokens, so the host can bound — from budgets it
+    # already knows — how many cycles must pass before ANY slot can finish,
+    # and fuses exactly that many (zero wasted cycles, zero early polls).
+    steps_per_sync: int = 4
 
 
 class SpecServer:
@@ -80,119 +103,232 @@ class SpecServer:
         b = cfg.slots
         self.state = self.session.init_state(t_params, d_params, b,
                                              cfg.max_len)
-        self.budget = np.zeros((b,), np.int64)    # host-side per-slot budget
 
         self.queue: deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * b
         self.slot_t0 = np.zeros((b,), np.float64)
         self.slot_base_len = np.zeros((b,), np.int64)
-        self.slot_base_stats = {k: np.zeros((b,), np.int64)
-                                for k in self.state.stats}
+        # host-side lower bound on tokens each slot still owes (refreshed
+        # from budgets at admission, from polled lengths at sync) — this is
+        # what lets the scheduler size fused tick groups with no waste
+        self.slot_remaining = np.zeros((b,), np.int64)
         self._responses: List[Response] = []
+        # host view of the finished flags, refreshed only at sync points
+        # (init_state starts all-idle, i.e. every slot is refillable)
+        self._finished_host = np.ones((b,), bool)
+        self.host_syncs = 0        # device→host transfers performed
+        self.step_calls = 0        # fused tick groups dispatched
+        # observed tokens committed per cycle (EMA over the device-side
+        # cycles/commits counters, which only advance while a slot is
+        # active — so mid-group finishes don't bias the estimate) — drives
+        # group sizing
+        self._tau_est = float(self.session.topology.commit_width)
+        self._last_cycles = np.zeros((b,), np.int64)
+        self._last_commits = np.zeros((b,), np.int64)
 
-        self._cycle = jax.jit(
-            lambda tp, dp, st: self.session.cycle(tp, dp, st))
-        self._prefill = jax.jit(self._prefill_impl)
+        def _fused_cycles(tp, dp, state, steps):
+            # dynamic trip count: group size varies tick to tick without
+            # recompilation, and the loop exits early on-device once every
+            # slot is finished (a mis-sized group never burns dead cycles)
+            def cond(carry):
+                i, st = carry
+                return (i < steps) & (~DecodeState(*st).finished).any()
 
-    # -- host views of the carry -----------------------------------------
+            def body(carry):
+                i, st = carry
+                return i + 1, tuple(self.session.cycle(tp, dp,
+                                                       DecodeState(*st)))
+
+            _, out = jax.lax.while_loop(cond, body,
+                                        (jnp.int32(0), tuple(state)))
+            return DecodeState(*out)
+
+        def _admit_all(tp, dp, state, prompts, plens, smask, budgets, temps):
+            return self.session.prefill(tp, dp, state, prompts, plens,
+                                        slot_mask=smask, budget=budgets,
+                                        temperature=temps)
+
+        def _gather_rows(state, idx):
+            return {"buf": state.buf[idx],
+                    "lengths": state.lengths[idx],
+                    "stats": {k: v[idx] for k, v in state.stats.items()}}
+
+        # the carry is donated: the jitted program reuses its buffers
+        # in place of allocating a fresh carry every dispatch
+        self._cycle = jax.jit(_fused_cycles, donate_argnums=(2,))
+        self._prefill = jax.jit(_admit_all, donate_argnums=(2,))
+        self._gather = jax.jit(_gather_rows)
+
+    # -- host snapshots of the carry (debug/inspection views).  The carry
+    # is donated on every dispatch, so these return fresh host copies — a
+    # device array view held across step() would be a deleted buffer — and
+    # they go through the counted transfer funnel like every other read.
     @property
     def buf(self):
-        return self.state.buf
+        return self._device_get(self.state.buf)
 
     @property
     def lengths(self):
-        return self.state.lengths
+        return self._device_get(self.state.lengths)
 
     @property
     def finished(self):
-        return self.state.finished
+        return self._device_get(self.state.finished)
 
     @property
     def stats(self):
-        return self.state.stats
+        return self._device_get(self.state.stats)
 
-    # ------------------------------------------------------------------
-    def _prefill_impl(self, t_params, d_params, state, prompt, plen, slot):
-        """Admit one request into ``slot`` via the session's slot-masked
-        prefill (broadcast the single prompt row; only the slot row lands)."""
-        b = self.cfg.slots
-        smask = jnp.arange(b) == slot
-        prompt_b = jnp.broadcast_to(prompt[None], (b, prompt.shape[0]))
-        plen_b = jnp.full((b,), plen, jnp.int32)
-        return self.session.prefill(t_params, d_params, state, prompt_b,
-                                    plen_b, slot_mask=smask)
+    def _device_get(self, tree):
+        """Single funnel for device→host transfers (counted)."""
+        self.host_syncs += 1
+        return jax.device_get(tree)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
     def _admit(self):
-        finished = np.asarray(self.state.finished)
-        for slot in range(self.cfg.slots):
-            if not finished[slot]:
-                continue
-            if self.slot_req[slot] is not None:
-                self._harvest(slot)
-            if self.queue:
-                req = self.queue.popleft()
-                s = self.cfg.max_prompt_len
-                prompt = np.zeros((s,), np.int32)
-                plen = min(len(req.prompt), s)
-                prompt[:plen] = req.prompt[:plen]
-                self.state = self._prefill(
-                    self.t_params, self.d_params, self.state,
-                    jnp.asarray(prompt), jnp.int32(plen), jnp.int32(slot))
-                self.slot_req[slot] = req
-                self.slot_t0[slot] = time.time()
-                self.slot_base_len[slot] = plen
-                self.budget[slot] = req.params.max_tokens
-                for k in self.state.stats:
-                    self.slot_base_stats[k][slot] = int(
-                        np.asarray(self.state.stats[k])[slot])
+        """Admit queued requests into refillable slots with ONE slot-masked
+        prefill call (no per-request dispatch, no host reads: refillable
+        slots are known from the last sync's ``finished`` poll).
 
-    def _harvest(self, slot: int):
-        req = self.slot_req[slot]
-        if req is None:
+        Admission hysteresis: a prefill pass costs the same whether it
+        admits one request or all of them, so a freed slot is held back
+        while more finishers are expected within ONE more fused group —
+        clustered finishes then share a single prefill pass — but never
+        longer: when the remaining slots still owe more than a group's
+        worth of tokens, the free slots admit immediately rather than idle
+        behind a long-running neighbour."""
+        b = self.cfg.slots
+        free = [s for s in range(b)
+                if self._finished_host[s] and self.slot_req[s] is None]
+        if not free or not self.queue:
             return
-        toks = np.asarray(self.state.buf)[
-            slot, :int(np.asarray(self.state.lengths)[slot])]
-        cyc = int(np.asarray(self.state.stats["cycles"])[slot]
-                  - self.slot_base_stats["cycles"][slot])
-        com = int(np.asarray(self.state.stats["commits"])[slot]
-                  - self.slot_base_stats["commits"][slot])
-        self._responses.append(Response(
-            uid=req.uid,
-            tokens=toks[int(self.slot_base_len[slot]):],
-            n_cycles=cyc, n_committed=com,
-            latency_s=time.time() - self.slot_t0[slot]))
-        self.slot_req[slot] = None
+        if len(free) < min(len(self.queue), b):
+            active = [int(self.slot_remaining[s]) for s in range(b)
+                      if self.slot_req[s] is not None
+                      and not self._finished_host[s]]
+            tau = min(max(self._tau_est, 1.0),
+                      float(self.session.topology.commit_width))
+            if active and np.ceil(min(active) / tau) <= 1:
+                return      # next finisher ~1 group away: wait and batch
+        s_len = self.cfg.max_prompt_len
+        prompts = np.zeros((b, s_len), np.int32)
+        plens = np.zeros((b,), np.int32)
+        smask = np.zeros((b,), bool)
+        budgets = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        now = time.time()
+        for slot in free:
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            plen = min(len(req.prompt), s_len)
+            prompts[slot, :plen] = req.prompt[:plen]
+            plens[slot] = plen
+            smask[slot] = True
+            budgets[slot] = req.params.max_tokens
+            temps[slot] = req.params.temperature
+            self.slot_req[slot] = req
+            self.slot_t0[slot] = now
+            self.slot_base_len[slot] = plen
+            self.slot_remaining[slot] = min(
+                req.params.max_tokens,
+                self.cfg.max_len - plen)       # buffer-room bound
+            self._finished_host[slot] = False
+            # prefill resets the admitted rows' device stats to zero
+            self._last_cycles[slot] = 0
+            self._last_commits[slot] = 0
+        self.state = self._prefill(
+            self.t_params, self.d_params, self.state, prompts, plens,
+            smask, budgets, temps)
+
+    def _group_size(self) -> int:
+        """Fused cycles until the next moment a slot is *expected* to
+        finish: a cycle commits at most ``commit_width`` tokens but on
+        average ``tau`` of them, so a slot owing ``r`` tokens runs for
+        about ``ceil(r / tau)`` more cycles (never fewer than
+        ``ceil(r / commit_width)``).  Computed entirely from host-cached
+        budgets/lengths and the observed tau — no transfer.  An EOS token
+        can preempt a slot much earlier, so then ``steps_per_sync`` caps
+        the group."""
+        w = self.session.topology.commit_width
+        active = [int(self.slot_remaining[s])
+                  for s in range(self.cfg.slots)
+                  if self.slot_req[s] is not None and not self._finished_host[s]]
+        if not active:
+            return 1
+        tau = min(max(self._tau_est, 1.0), float(w))
+        steps = max(1, int(np.ceil(min(active) / tau)))
+        if self.ecfg.eos_token is not None:
+            steps = min(steps, max(1, self.cfg.steps_per_sync))
+        return steps
 
     def step(self):
-        """One scheduler tick: admit, run one verify cycle, mark budget."""
-        self._admit()
+        """One scheduler tick: dispatch one fused group of verify cycles
+        (adaptively sized, see :meth:`_group_size`).  Budget exhaustion,
+        EOS, and buffer limits all flip ``finished`` inside the jitted
+        program — no device→host transfer happens here."""
         if all(r is None for r in self.slot_req):
+            return                      # nothing in flight: no dispatch
+        self.step_calls += 1
+        self.state = self._cycle(self.t_params, self.d_params, self.state,
+                                 np.int32(self._group_size()))
+
+    def sync(self):
+        """The only point where the host observes the carry: one poll of
+        the finished flags + lengths (refreshing the group-sizing bounds),
+        then harvest all newly finished rows with a single gathered
+        ``device_get``."""
+        poll = self._device_get({"finished": self.state.finished,
+                                 "lengths": self.state.lengths,
+                                 "cycles": self.state.stats["cycles"],
+                                 "commits": self.state.stats["commits"]})
+        self._finished_host = np.array(poll["finished"])  # writable copy
+        d_cycles = d_commits = 0
+        for s in range(self.cfg.slots):
+            if self.slot_req[s] is not None:
+                req = self.slot_req[s]
+                produced = int(poll["lengths"][s]) - int(self.slot_base_len[s])
+                self.slot_remaining[s] = min(
+                    req.params.max_tokens - produced,
+                    self.cfg.max_len - int(poll["lengths"][s]))
+                d_cycles += int(poll["cycles"][s]) - int(self._last_cycles[s])
+                d_commits += (int(poll["commits"][s])
+                              - int(self._last_commits[s]))
+                self._last_cycles[s] = int(poll["cycles"][s])
+                self._last_commits[s] = int(poll["commits"][s])
+        if d_cycles > 0:
+            obs = d_commits / d_cycles
+            self._tau_est = 0.5 * self._tau_est + 0.5 * max(obs, 0.1)
+        done = [s for s in range(self.cfg.slots)
+                if self._finished_host[s] and self.slot_req[s] is not None]
+        if not done:
             return
-        self.state = self._cycle(self.t_params, self.d_params, self.state)
-        # budget exhaustion -> finish slot
-        lengths = np.asarray(self.state.lengths)
-        fin = np.asarray(self.state.finished).copy()
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            produced = lengths[slot] - self.slot_base_len[slot]
-            if produced >= self.budget[slot]:
-                fin[slot] = True
-        self.state = self.state._replace(finished=jnp.asarray(fin))
+        # fixed-size index (pad with the first entry) so the gather has one
+        # shape for any number of finished slots — a single compiled program
+        pad = done + [done[0]] * (self.cfg.slots - len(done))
+        rows = self._device_get(
+            self._gather(self.state, np.asarray(pad, np.int32)))
+        now = time.time()
+        for j, slot in enumerate(done):
+            req = self.slot_req[slot]
+            base = int(self.slot_base_len[slot])
+            toks = rows["buf"][j, base:int(rows["lengths"][j])]
+            self._responses.append(Response(
+                uid=req.uid, tokens=np.asarray(toks),
+                n_cycles=int(rows["stats"]["cycles"][j]),
+                n_committed=int(rows["stats"]["commits"][j]),
+                latency_s=now - self.slot_t0[slot]))
+            self.slot_req[slot] = None
 
     def run(self, *, max_ticks: int = 10_000) -> List[Response]:
         for _ in range(max_ticks):
             if not self.queue and all(r is None for r in self.slot_req):
                 break
+            self._admit()
             self.step()
-            # harvest finished
-            finished = np.asarray(self.state.finished)
-            for slot, req in enumerate(self.slot_req):
-                if req is not None and finished[slot]:
-                    self._harvest(slot)
+            self.sync()
         out, self._responses = self._responses, []
         return out
