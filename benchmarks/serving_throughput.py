@@ -12,8 +12,18 @@ Also reports host-sync counts: the device-resident tick loop performs zero
 device→host transfers per fused tick group; the legacy loop performs
 several per cycle.
 
+``--cache {dense,paged}`` selects the KV layout of the device-resident
+server, and a long-context admission section compares the two layouts at
+EQUAL device KV memory: the dense server reserves a worst-case ``max_len``
+ring per slot, the paged server spends the same bytes on a shared block
+pool — and admits several times more concurrent requests whose *actual*
+usage is short, with outputs bit-identical to offline
+``DecodeSession.generate`` (greedy).  Reported as
+``serving/longctx_admission_*`` CSV rows.
+
     python -m benchmarks.serving_throughput            # trained tiny pair
     python -m benchmarks.serving_throughput --quick    # random weights (CI)
+    python -m benchmarks.serving_throughput --quick --cache paged
 
 Emits the same ``name,us_per_call,derived`` CSV rows as ``benchmarks/run.py``.
 """
@@ -28,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EngineConfig, IndependentDrafter
+from repro.core import EngineConfig, IndependentDrafter, make_generate_fn
 from repro.models import build_model
 from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
 
@@ -191,6 +201,95 @@ def _measure(servers, reqs, max_tokens, repeats=3):
     return best
 
 
+# ---------------------------------------------------------------------------
+# Long-context admission capacity at equal device KV memory
+# ---------------------------------------------------------------------------
+
+def _run_tracking_concurrency(server, reqs):
+    """Drive the scheduler loop by hand, recording peak in-flight slots."""
+    for r in reqs:
+        server.submit(dataclasses.replace(r))
+    peak = 0
+    for _ in range(10_000):
+        if not server.queue and all(x is None for x in server.slot_req):
+            break
+        server._admit()
+        peak = max(peak, sum(x is not None for x in server.slot_req))
+        server.step()
+        server.sync()
+    resps, server._responses = server._responses, []
+    return resps, peak
+
+
+def longctx_admission(target, t_params, draft, d_params, *, k=3):
+    """Both layouts get the same device KV budget and must be able to hold a
+    ``max_len``-token request per slot; the workload's ACTUAL usage is short
+    (prompt + a small budget).  Dense admits one request per reserved ring;
+    paged admits until pool headroom runs out.  Returns the CSV rows and
+    asserts paged responses equal offline greedy generation."""
+    from repro.models.layers import TRASH_SLOTS
+
+    max_len, prompt_len, max_tokens, bs = 192, 8, 8, 16
+    dense_slots = 2
+    # equal K/V bytes: the dense rings' token capacity, re-spent on a pool
+    kv_tokens = dense_slots * (max_len + TRASH_SLOTS)
+    pool_blocks = kv_tokens // bs
+    ecfg = EngineConfig(k=k, rule="strict", mode="greedy", temperature=0.0)
+
+    def mk(cache, slots, pool=0):
+        return SpecServer(
+            target, IndependentDrafter(draft, k=k, temperature=0.0),
+            t_params, d_params, ecfg,
+            ServerConfig(slots=slots, max_len=max_len,
+                         max_prompt_len=prompt_len, cache=cache,
+                         block_size=bs, pool_blocks=pool))
+
+    from repro.models.paging import PagedCacheConfig
+    per_req = PagedCacheConfig(bs, pool_blocks).request_blocks(
+        prompt_len, max_tokens, k + 2, max_len)   # chain buffer_margin = k+2
+    paged_slots = (pool_blocks - 1) // per_req
+
+    from benchmarks import common as C
+    prompts = C.corpus().sample_batch(paged_slots, prompt_len, seed=7)
+    reqs = [Request(uid=i, prompt=np.asarray(prompts[i], np.int32),
+                    params=SamplingParams(max_tokens=max_tokens,
+                                          temperature=0.0))
+            for i in range(paged_slots)]
+
+    d_resps, d_peak = _run_tracking_concurrency(mk("dense", dense_slots), reqs)
+    p_resps, p_peak = _run_tracking_concurrency(
+        mk("paged", paged_slots, pool_blocks), reqs)
+    assert len(d_resps) == len(p_resps) == paged_slots
+
+    # paged responses must equal offline greedy generation, per request
+    gen = make_generate_fn(target, IndependentDrafter(draft, k=k,
+                                                      temperature=0.0), ecfg)
+    out = gen(t_params, d_params, jnp.asarray(prompts),
+              jnp.full((paged_slots,), prompt_len, jnp.int32),
+              jax.random.PRNGKey(0), max_new=max_tokens)
+    offline = np.asarray(out["tokens"])[:, prompt_len:prompt_len + max_tokens]
+    for r in p_resps:
+        np.testing.assert_array_equal(np.asarray(r.tokens),
+                                      offline[r.uid],
+                                      err_msg=f"paged req {r.uid} != offline")
+
+    ratio = p_peak / max(d_peak, 1)
+    print(f"\nlong-context admission at equal KV memory "
+          f"({kv_tokens} tokens/layer, max_len={max_len}):")
+    print(f"  dense : {d_peak:3d} concurrent ({dense_slots} rings reserved)")
+    print(f"  paged : {p_peak:3d} concurrent ({pool_blocks}-block pool, "
+          f"{per_req} blocks/request)")
+    print(f"  ratio : {ratio:.1f}x  (paged outputs == offline greedy)")
+    return [
+        ("serving/longctx_admission_dense", 0.0,
+         f"concurrent={d_peak};kv_tokens={kv_tokens}"),
+        ("serving/longctx_admission_paged", 0.0,
+         f"concurrent={p_peak};kv_tokens={kv_tokens};block={bs}"),
+        ("serving/longctx_admission_ratio", 0.0,
+         f"x={ratio:.1f};outputs=offline_match"),
+    ]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -203,6 +302,9 @@ def main():
                          "common production regime): admission dominates")
     ap.add_argument("--steps-per-sync", type=int, default=4)
     ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--cache", default="dense", choices=["dense", "paged"],
+                    help="KV layout of the device-resident server (the "
+                         "legacy baseline always runs dense)")
     args = ap.parse_args()
 
     from benchmarks import common as C
@@ -221,7 +323,8 @@ def main():
     scfg = ServerConfig(slots=args.slots,
                         max_len=args.prompt_len + max_tokens + args.k + 4,
                         max_prompt_len=args.prompt_len,
-                        steps_per_sync=args.steps_per_sync)
+                        steps_per_sync=args.steps_per_sync,
+                        cache=args.cache)
     reqs = _requests(n_req, max_tokens, args.prompt_len, C.corpus())
 
     def new_server():
@@ -234,7 +337,7 @@ def main():
 
     print(f"workload: {n_req} requests x {max_tokens} tokens "
           f"(prompt {args.prompt_len}), {args.slots} slots, K={args.k}, "
-          f"steps_per_sync={args.steps_per_sync}")
+          f"steps_per_sync={args.steps_per_sync}, cache={args.cache}")
     best = _measure({"new": new_server(), "old": old_server()},
                     reqs, max_tokens, repeats=2 if args.quick else 3)
     new, old = best["new"], best["old"]
@@ -253,12 +356,15 @@ def main():
     rows = [
         ("serving/device_resident",
          new["wall_s"] / max(new["ticks"], 1) * 1e6,
-         f"tok_s={new['tok_s']:.1f};syncs_per_group={new['syncs_per_tick']:.2f}"),
+         f"tok_s={new['tok_s']:.1f};cache={args.cache};"
+         f"syncs_per_group={new['syncs_per_tick']:.2f}"),
         ("serving/legacy",
          old["wall_s"] / max(old["ticks"], 1) * 1e6,
          f"tok_s={old['tok_s']:.1f};syncs_per_tick={old['syncs_per_tick']:.2f}"),
         ("serving/speedup", 0.0, f"x={speedup:.2f}"),
     ]
+    rows += longctx_admission(target, t_params, draft, d_params,
+                              k=min(args.k, 3))
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -11,10 +11,12 @@ through the very same session) plus the vanilla autoregressive baseline.
 Shared ``DecodeSession`` contract (see ``core/session.py`` for details):
 
 * cache-layout invariant — ``cache.index`` counts cached tokens; the
-  pending last committed token is not yet cached and opens the next cycle;
-* rollback scheme — attention caches rewind their index, recurrent caches
-  recompute the committed prefix from the pre-cycle state under a token
-  mask;
+  pending last committed token is not yet cached and opens the next cycle
+  (true for the dense ring and the paged block-table layout alike);
+* rollback scheme — attention caches rewind their index (under paging the
+  slot keeps its admission-reserved blocks mid-flight; the host frees the
+  list at harvest), recurrent caches recompute the committed prefix from
+  the pre-cycle state under a token mask;
 * topology hook — chain vs tree drafts differ only in the strategy object
   that proposes, scores, and verifies candidates each cycle.
 """

@@ -20,13 +20,21 @@ the same cycle over the same carry.  This module owns that cycle once:
 
 Cache-layout invariant: ``cache.index`` counts tokens whose kv/state is
 stored; the *pending* last committed token is not yet in the cache and is
-the first input of the next cycle.
+the first input of the next cycle.  The target cache may be the dense
+per-slot ring or the paged block-table layout
+(``init_state(..., paged=PagedCacheConfig(...))``); the session is
+layout-agnostic — both satisfy the same invariant.
 
 Rollback scheme (shared by all topologies via :meth:`DecodeSession.rollback`):
 
 * attention-family targets whose score pass wrote draft kv into the cache
   roll back by **index rewind** — stale slots past ``base + 1 + n_accept``
-  are masked by position and overwritten later;
+  are masked by position and overwritten later.  Under the paged layout the
+  rewind is the device half of a *block-list truncate*: the slot keeps its
+  (worst-case, admission-reserved) blocks mid-flight with stale entries
+  position-masked inside them, and the host frees the whole list back to
+  the ``BlockPool`` when it harvests the finished request
+  (``paging.used_blocks`` computes the live prefix for finer truncation);
 * recurrent targets (ssm / hybrid) and virtual (non-writing) score passes
   **recompute**: re-apply ``[last_token, committed...]`` from the pre-cycle
   state with a token mask, so the cache only ever holds committed tokens.
@@ -220,9 +228,16 @@ class DecodeSession:
 
     # -- state construction ---------------------------------------------------
     def init_state(self, t_params, d_params, batch: int, max_len: int, *,
-                   key=None, encoder_frames=None) -> DecodeState:
+                   key=None, encoder_frames=None, paged=None) -> DecodeState:
         """Fresh all-idle carry (``finished`` everywhere); rows come alive
-        via :meth:`prefill`."""
+        via :meth:`prefill`.
+
+        ``paged`` (a :class:`repro.models.paging.PagedCacheConfig`) builds
+        the target cache over a shared block pool instead of dense per-slot
+        rings.  Paged slots start *unmapped*: admission must hand
+        :meth:`prefill` the freshly allocated ``block_rows`` before any KV
+        can persist.  The drafter keeps its own (small, dense) state either
+        way."""
         if key is None:
             key = jax.random.PRNGKey(0)
         return DecodeState(
@@ -230,7 +245,8 @@ class DecodeSession:
             lengths=jnp.zeros((batch,), jnp.int32),
             finished=jnp.ones((batch,), bool),
             t_cache=self.target.init_cache(t_params, batch, max_len,
-                                           encoder_frames=encoder_frames),
+                                           encoder_frames=encoder_frames,
+                                           paged=paged),
             d_state=self.drafter.init_state(d_params, batch, max_len),
             last_token=jnp.zeros((batch,), jnp.int32),
             key=key,
@@ -242,7 +258,8 @@ class DecodeSession:
     def prefill(self, t_params, d_params, state: DecodeState,
                 prompt: jnp.ndarray, prompt_len: jnp.ndarray,
                 slot_mask: Optional[jnp.ndarray] = None,
-                budget=None, temperature=None) -> DecodeState:
+                budget=None, temperature=None,
+                block_rows=None) -> DecodeState:
         """Admit prompts into the rows of ``slot_mask`` (None = all rows).
 
         Resets the admitted rows' caches, writes the prompt into the buffer,
@@ -256,6 +273,11 @@ class DecodeSession:
         verification temperature (None = the config default).  Both live in
         the device carry, so admission is the only time the host supplies
         per-request serving state.
+
+        ``block_rows`` (B, max_blocks) maps the admitted rows of a *paged*
+        target cache to their freshly allocated physical blocks before the
+        prompt KV is written; the scheduler allocates them from its
+        ``BlockPool`` and frees them again at harvest.
         """
         state = DecodeState(*state)
         b, s = prompt.shape
@@ -273,6 +295,12 @@ class DecodeSession:
         new_temp = jnp.where(slot_mask, temp_row, state.temperature)
 
         t_cache = self.target.reset_slots(state.t_cache, slot_mask)
+        if block_rows is not None:
+            # map the admitted rows' block tables BEFORE the prompt decode
+            # below — a paged slot left unmapped drops its writes into the
+            # trash block
+            t_cache = self.target.assign_blocks(t_cache, slot_mask,
+                                                block_rows)
         d_state = self.drafter.reset_slots(state.d_state, slot_mask)
 
         width = state.buf.shape[1]

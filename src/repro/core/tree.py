@@ -19,6 +19,9 @@ drafter passes).  Verification scores all nodes in ONE virtual target pass
   3. the session commits the chosen path via its shared recompute rollback
      (a masked decode from the pre-cycle cache — the same pass recurrent
      targets use), so the KV cache only ever contains committed tokens.
+     The commit decode is cache-layout agnostic: against a paged target
+     cache it scatters the path's KV into the slot's freshly admitted
+     blocks through the block table (``repro.models.paging``).
 
 Node layout: node 0 = root (the pending last token, depth 0); depth d >= 1
 holds ``branch`` nodes, the first being the chain node.  All exact/relax

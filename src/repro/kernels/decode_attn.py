@@ -1,14 +1,25 @@
-"""Flash-decode GQA attention kernel (single query step per sequence).
+"""Flash-decode GQA attention kernels (single query step per sequence).
 
 The verify pass is memory-bound: per new token the whole KV cache streams
-from HBM once.  This kernel tiles the cache length into VMEM blocks and
-keeps the online-softmax state (m, l, acc) in revisited output refs, so HBM
+from HBM once.  These kernels tile the cache length into VMEM blocks and
+keep the online-softmax state (m, l, acc) in revisited output refs, so HBM
 traffic is exactly one read of K and V plus O(H·D) output — the roofline
 minimum.
 
-Grid: (B, L / BL) with the length axis innermost/arbitrary.
+Two layouts share the same kernel body:
+
+* ``decode_attention_kernel`` — dense per-slot ring: grid (B, L / BL),
+  block j of row i is the contiguous slice ``k[i, j*BL:(j+1)*BL]``.
+* ``paged_decode_attention_kernel`` — block-table cache
+  (``repro.models.paging``): the table rides in as a **scalar-prefetch**
+  operand (``pltpu.PrefetchScalarGridSpec``), so the k/v BlockSpec index
+  map resolves ``table[i, j]`` *before* the kernel body runs and the DMA
+  engine fetches physical pool block ``table[i, j]`` directly from HBM —
+  the gather costs nothing over the dense layout.
+
 Block shapes: q (1, H, D); k/v (1, BL, Hkv, D).  D and BL are chosen
-lane-aligned (multiples of 128) by the wrapper.
+lane-aligned (multiples of 128) by the wrapper; for the paged kernel BL is
+the pool's ``block_size``, so pick a lane-aligned block size on real TPUs.
 """
 from __future__ import annotations
 
@@ -119,4 +130,63 @@ def decode_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         interpret=interpret,
         compiler_params=_compiler_params(dimension_semantics=("parallel", "arbitrary")),
     )(q, k, v, k_pos, q_pos)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention_kernel(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                  v_pool: jnp.ndarray, table: jnp.ndarray,
+                                  k_pos: jnp.ndarray, q_pos: jnp.ndarray, *,
+                                  window: int = 0,
+                                  interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D); k_pool/v_pool: (N, bs, Hkv, D); table: (B, MB) physical
+    block ids; k_pos: (B, MB*bs) logical positions; q_pos: (B,).
+
+    Returns (B, H, D) attention output (float32).  Semantically equal to
+    ``decode_attention_kernel`` over the gathered dense view
+    ``pool[table].reshape(B, MB*bs, ...)`` — but nothing is gathered: the
+    scalar-prefetched table drives the k/v block index map, so each grid
+    step DMAs one pool block straight from HBM.
+    """
+    b, h, d = q.shape
+    n, bs, hkv, _ = k_pool.shape
+    mb = table.shape[1]
+    g = h // hkv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,           # the block table
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d),
+                         lambda i, j, tbl: (tbl[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d),
+                         lambda i, j, tbl: (tbl[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs), lambda i, j, tbl: (i, j)),
+            pl.BlockSpec((1,), lambda i, j, tbl: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, h), lambda i, j, tbl: (i, 0)),
+            pl.BlockSpec((1, h), lambda i, j, tbl: (i, 0)),
+        ],
+    )
+
+    def kernel(tbl_ref, q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
+               o_ref, m_ref, l_ref):
+        _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref, m_ref,
+                l_ref, bl=bs, n_lblocks=mb, window=window, hkv=hkv, g=g, d=d)
+
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(table, q, k_pool, v_pool, k_pos, q_pos)
     return out

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.decode_attn import decode_attention_kernel
+from repro.kernels.decode_attn import (decode_attention_kernel,
+                                       paged_decode_attention_kernel)
 from repro.kernels.mars_verify import mars_verify_kernel
 from repro.kernels.ssd_chunk import ssd_chunk_kernel
 
@@ -41,6 +42,16 @@ def decode_attention(q, k, v, k_pos, q_pos, *, window: int = 0,
     return decode_attention_kernel(q, k, v, k_pos, q_pos, window=window,
                                    block_len=block_len,
                                    interpret=_interpret())
+
+
+def paged_decode_attention(q, k_pool, v_pool, table, k_pos, q_pos, *,
+                           window: int = 0):
+    """Flash-decode over a paged cache (``repro.models.paging`` layout):
+    the block table is scalar-prefetched so the kernel reads physical pool
+    blocks directly — no host- or device-side gather of a dense view."""
+    return paged_decode_attention_kernel(q, k_pool, v_pool, table, k_pos,
+                                         q_pos, window=window,
+                                         interpret=_interpret())
 
 
 def ssd_chunk(c, b, v, cum, scale, h0):

@@ -49,6 +49,15 @@ def main():
     ap.add_argument("--steps-per-sync", type=int, default=4,
                     help="max fused verify cycles per host poll when an "
                          "EOS token can preempt a slot early")
+    ap.add_argument("--cache", default="dense", choices=["dense", "paged"],
+                    help="KV layout: dense per-slot rings, or paged block "
+                         "tables over a shared pool (admission gated by "
+                         "pool headroom; see docs/SERVING.md)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: tokens per KV block")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged: physical blocks in the shared pool "
+                         "(0 = dense-equivalent capacity)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -90,7 +99,9 @@ def main():
                      temperature=args.temperature,
                      topology=args.topology, branch=args.branch),
         ServerConfig(slots=args.slots, max_len=256, max_prompt_len=32,
-                     steps_per_sync=args.steps_per_sync))
+                     steps_per_sync=args.steps_per_sync, cache=args.cache,
+                     block_size=args.block_size,
+                     pool_blocks=args.pool_blocks))
 
     # per-request sampling params ride the device carry: each request may
     # ask for its own temperature and token budget

@@ -1,6 +1,11 @@
 """Shared neural-net layers: norms, RoPE, GQA attention (blockwise online
 softmax, ring-buffer sliding-window KV cache), MLPs and capacity-based MoE.
 
+``attention_forward`` serves two KV-cache layouts behind one interface:
+the dense per-slot ring built here (``make_attention_cache``) and the paged
+block-table cache (``repro.models.paging``); both share the position-based
+masking rules, so the speculative engine's rollback contract is identical.
+
 Conventions
 -----------
 * Parameters are plain nested dicts of ``jnp.ndarray`` (no flax in env).
@@ -133,6 +138,41 @@ def _pad_to_multiple(x: jnp.ndarray, axis: int, multiple: int, value=0):
     return jnp.pad(x, pad, constant_values=value)
 
 
+def kv_valid_mask(k_pos: jnp.ndarray, q_pos: jnp.ndarray, *, causal: bool,
+                  window: int) -> jnp.ndarray:
+    """(B, C) stored KV positions + (B, T) query positions → (B, T, C)
+    attention validity.  Entries with stored position < 0 are invalid
+    everywhere; ``causal``/``window`` add the usual position cuts."""
+    valid = k_pos[:, None, :] >= 0
+    if causal:
+        valid = valid & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        valid = valid & (k_pos[:, None, :] > (q_pos[:, :, None] - window))
+    return valid
+
+
+def online_softmax_step(carry, qg, kci, vci, valid, scale):
+    """One online-softmax accumulation over a KV chunk — the single step
+    body shared by the dense ring scan (``blockwise_attention``) and the
+    paged block scan (``paging.paged_blockwise_attention``), so the two
+    layouts cannot drift numerically.
+
+    carry: (m, l, o) f32 partials (B,T,Hkv,G[,D]); qg (B,T,Hkv,G,D);
+    kci/vci (B,C,Hkv,D); valid (B,T,C)."""
+    m, l, o = carry
+    scores = jnp.einsum("btkgd,bckd->btkgc", qg, kci,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(valid[:, :, None, None, :], scores, _NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    probs = jnp.exp(scores - m_new[..., None])
+    l_new = l * alpha + jnp.sum(probs, axis=-1)
+    o_new = o * alpha[..., None] + jnp.einsum(
+        "btkgc,bckd->btkgd", probs.astype(vci.dtype), vci,
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, o_new
+
+
 def merge_attention_partials(*partials):
     """Merge (m, l, o) online-softmax partials from disjoint KV sets and
     normalise.  Shapes: m/l (B,T,Hkv,G), o (B,T,Hkv,G,D)."""
@@ -207,26 +247,9 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     o0 = jnp.zeros((b, t, hkv, g, d), jnp.float32)
 
     def step(carry, xs):
-        m, l, o = carry
         kci, vci, pci = xs
-        scores = jnp.einsum(
-            "btkgd,bckd->btkgc", qg, kci, preferred_element_type=jnp.float32
-        ) * scale
-        valid = pci[:, None, :] >= 0                      # (B, 1, C)
-        if causal:
-            valid &= pci[:, None, :] <= q_pos[:, :, None]  # (B, T, C)
-        if window > 0:
-            valid &= pci[:, None, :] > (q_pos[:, :, None] - window)
-        scores = jnp.where(valid[:, :, None, None, :], scores, _NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
-        alpha = jnp.exp(m - m_new)
-        probs = jnp.exp(scores - m_new[..., None])
-        l_new = l * alpha + jnp.sum(probs, axis=-1)
-        o_new = o * alpha[..., None] + jnp.einsum(
-            "btkgc,bckd->btkgd", probs.astype(vci.dtype), vci,
-            preferred_element_type=jnp.float32,
-        )
-        return (m_new, l_new, o_new), None
+        valid = kv_valid_mask(pci, q_pos, causal=causal, window=window)
+        return online_softmax_step(carry, qg, kci, vci, valid, scale), None
 
     (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, pc))
     if return_partial:
@@ -269,6 +292,19 @@ def causal_attention_unrolled(q, k, v, q_pos, k_pos, *, window: int = 0,
             )
         )
     return jnp.concatenate(outs, axis=1)[:, :t]
+
+
+def _chunked_query_attend(q, positions, attend, *, chunk: int):
+    """Scan query chunks through ``attend(q_chunk, pos_chunk)`` (dense or
+    paged cache attention) so long prefills keep a bounded score block."""
+    b, t, h, hd = q.shape
+    nq = -(-t // chunk)
+    qp = _pad_to_multiple(q, 1, chunk)
+    pp = _pad_to_multiple(positions, 1, chunk, value=_INVALID_POS)
+    qs = jnp.moveaxis(qp.reshape(b, nq, chunk, h, hd), 1, 0)
+    ps = jnp.moveaxis(pp.reshape(b, nq, chunk), 1, 0)
+    out = jax.lax.map(lambda xs: attend(xs[0], xs[1]), (qs, ps))
+    return jnp.moveaxis(out, 0, 1).reshape(b, nq * chunk, h, hd)[:, :t]
 
 
 # Extra ring slots used as a scratch target for masked-out tokens (keeps the
@@ -360,7 +396,13 @@ def attention_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
       prefix (position-masked) plus the tree nodes its mask row allows
       (ancestry).  Used by tree-draft verification; the engine commits the
       accepted path afterwards with a masked regular decode.
+
+    ``cache`` may be either layout: the dense ring
+    (``make_attention_cache``) or the paged block-table cache
+    (``paging.make_paged_attention_cache``).  Writes and reads dispatch on
+    the layout; the masking semantics are identical.
     """
+    from repro.models import paging as P
     b, t, d = x.shape
     hd = cfg.head_dim
     window = cfg.sliding_window if window is None else window
@@ -417,37 +459,46 @@ def attention_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
         # tree-internal attention is fully described by ``tree_mask``.
         root_pos = positions[:, :1]                     # node 0 == tree root
         cache_qpos = jnp.broadcast_to(root_pos - 1, positions.shape)
-        p1 = blockwise_attention(q, cache["k"], cache["v"], cache_qpos,
-                                 cache["pos"], window=window, causal=True,
-                                 chunk=chunk, return_partial=True)
+        if P.is_paged(cache):
+            p1 = P.paged_blockwise_attention(q, cache, cache_qpos,
+                                             window=window, causal=True,
+                                             chunk=chunk,
+                                             return_partial=True)
+        else:
+            p1 = blockwise_attention(q, cache["k"], cache["v"], cache_qpos,
+                                     cache["pos"], window=window, causal=True,
+                                     chunk=chunk, return_partial=True)
         p2 = dense_masked_attention_partial(q, k, v, tree_mask)
         out = merge_attention_partials(p1, p2)
         out = out.reshape(b, t, cfg.n_heads, hd).astype(q.dtype)
     else:
-        new_cache = _cache_write(cache, k, v, positions,
-                                 uniform=cfg.cache_uniform_slots)
-        ck = constrain(new_cache["k"], "batch", "kv_seq", None, None)
-        cv = constrain(new_cache["v"], "batch", "kv_seq", None, None)
-        cpos = new_cache["pos"]
-        if t > chunk:
-            # chunked prefill: scan query blocks over the (already written)
-            # cache so the score block stays (B, chunk, H, chunk)
-            nq = -(-t // chunk)
-            qp = _pad_to_multiple(q, 1, chunk)
-            pp = _pad_to_multiple(positions, 1, chunk, value=_INVALID_POS)
-            qs = jnp.moveaxis(qp.reshape(b, nq, chunk, cfg.n_heads, hd), 1, 0)
-            ps = jnp.moveaxis(pp.reshape(b, nq, chunk), 1, 0)
-            out = jax.lax.map(
-                lambda xs: blockwise_attention(
-                    xs[0], ck, cv, xs[1], cpos,
-                    window=window, causal=causal, chunk=chunk),
-                (qs, ps))
-            out = jnp.moveaxis(out, 0, 1).reshape(b, nq * chunk,
-                                                  cfg.n_heads, hd)[:, :t]
+        # write the new kv, then attend over the whole cache; prefills
+        # longer than ``chunk`` scan query blocks through the same attend
+        # so the score block stays (B, chunk, H, chunk)
+        if P.is_paged(cache):
+            # paged block-table cache: scatter through the table, gather
+            # one pool block per online-softmax step.  The uniform-slots
+            # fast path does not apply — the physical write location
+            # differs per slot by construction.
+            new_cache = P.paged_cache_write(cache, k, v, positions)
+
+            def attend(qc, pc):
+                return P.paged_blockwise_attention(
+                    qc, new_cache, pc, window=window, causal=causal,
+                    chunk=chunk)
         else:
-            out = blockwise_attention(q, ck, cv, positions, cpos,
-                                      window=window, causal=causal,
-                                      chunk=chunk)
+            new_cache = _cache_write(cache, k, v, positions,
+                                     uniform=cfg.cache_uniform_slots)
+            ck = constrain(new_cache["k"], "batch", "kv_seq", None, None)
+            cv = constrain(new_cache["v"], "batch", "kv_seq", None, None)
+            cpos = new_cache["pos"]
+
+            def attend(qc, pc):
+                return blockwise_attention(qc, ck, cv, pc, cpos,
+                                           window=window, causal=causal,
+                                           chunk=chunk)
+        out = (attend(q, positions) if t <= chunk
+               else _chunked_query_attend(q, positions, attend, chunk=chunk))
 
     out = constrain(out, "batch", None, "heads", None)
     out = out.reshape(b, t, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)

@@ -10,9 +10,23 @@ functions of (params, inputs) and therefore jit/pjit-friendly:
 
 Layer stacks carry a leading layer dim and run under ``jax.lax.scan`` so the
 compiled HLO is depth-independent (critical for the 95-layer deepseek-67b
-dry-run).  The KV / SSM caches are pytrees the speculative-decoding engine
-rolls back simply by rewinding its write index (chain drafts) or re-writing
-slots (tree drafts).
+dry-run).
+
+The KV / SSM caches are pytrees governed by one invariant —
+``cache["index"]`` counts committed tokens whose kv/state is stored — but
+the speculative engine's *rollback* differs by family and layout (see
+docs/ARCHITECTURE.md):
+
+* attention families with the dense ring cache rewind the write index;
+  stale entries past it are masked by stored position and overwritten later;
+* attention families with the **paged** block-table cache
+  (``init_cache(..., paged=...)``) do the same index rewind on device —
+  the slot keeps its admission-reserved blocks mid-flight — and the
+  block-list *truncate* is host-side: the scheduler returns the finished
+  slot's blocks to the pool at harvest;
+* recurrent families (ssm / hybrid) cannot rewind: the engine re-applies
+  the committed tokens from the pre-cycle state under a token mask, so
+  their state only ever reflects committed tokens.
 """
 from __future__ import annotations
 
@@ -305,21 +319,37 @@ class Model:
 
     # -- caches -------------------------------------------------------------------
     def init_cache(self, params, batch: int, max_len: int, *,
-                   encoder_frames: Optional[jnp.ndarray] = None) -> Params:
+                   encoder_frames: Optional[jnp.ndarray] = None,
+                   paged=None) -> Params:
+        """``paged`` (a :class:`repro.models.paging.PagedCacheConfig`) swaps
+        the dense per-slot KV ring for the shared block pool + per-slot
+        block tables.  Only attention KV pages: recurrent state (mamba /
+        xlstm) is O(1) per slot, and the whisper cross-KV is a fixed,
+        always-full encoder block — both stay dense.  Pure-ssm targets have
+        no KV to page, so ``paged`` is an error there."""
         cfg = self.cfg
         fam = cfg.family
+
+        def attn_cache(n_layers):
+            if paged is not None:
+                from repro.models.paging import make_paged_attention_cache
+                return make_paged_attention_cache(cfg, batch, max_len, paged,
+                                                  n_layers=n_layers)
+            return L.make_attention_cache(cfg, batch, max_len,
+                                          n_layers=n_layers)
+
+        if paged is not None and fam == "ssm":
+            raise ValueError("ssm targets have no attention KV cache to page")
         cache: Params = {"index": jnp.zeros((batch,), jnp.int32)}
         if fam in ("dense", "moe", "vlm"):
-            cache["layers"] = L.make_attention_cache(
-                cfg, batch, max_len, n_layers=cfg.n_layers)
+            cache["layers"] = attn_cache(cfg.n_layers)
         elif fam == "hybrid":
             every = cfg.hybrid_attn_every
             n_groups = cfg.n_layers // every
             mamba = [S.make_mamba2_cache(cfg, batch, n_layers=every)
                      for _ in range(n_groups)]
             cache["mamba"] = _stack(mamba)
-            cache["attn"] = L.make_attention_cache(
-                cfg, batch, max_len, n_layers=n_groups)
+            cache["attn"] = attn_cache(n_groups)
         elif fam == "ssm":
             every = cfg.slstm_every
             n_groups = cfg.n_layers // every
@@ -329,8 +359,7 @@ class Model:
             cache["slstm"] = _stack([
                 S.make_slstm_cache(cfg, batch) for _ in range(n_groups)])
         elif fam == "audio":
-            cache["layers"] = L.make_attention_cache(
-                cfg, batch, max_len, n_layers=cfg.n_layers)
+            cache["layers"] = attn_cache(cfg.n_layers)
             if encoder_frames is not None:
                 enc = self.encode(params, encoder_frames)
 
@@ -489,15 +518,22 @@ class Model:
         fam = self.cfg.family
         new = dict(cache)
         new["index"] = wipe(cache["index"], 0)
-        if fam in ("dense", "moe", "vlm", "audio"):
-            lay = dict(cache["layers"])
+
+        def wipe_attn(lay):
+            # invalidating stored positions is a full wipe for both layouts;
+            # a paged slot additionally unmaps its table rows (block 0 =
+            # trash) so writes before the host re-maps the slot are dropped
+            lay = dict(lay)
             lay["pos"] = wipe(lay["pos"], 1, _INVALID_POS)
-            new["layers"] = lay
+            if "table" in lay:
+                lay["table"] = wipe(lay["table"], 1, 0)
+            return lay
+
+        if fam in ("dense", "moe", "vlm", "audio"):
+            new["layers"] = wipe_attn(cache["layers"])
         if fam == "hybrid":
             new["mamba"] = {k: wipe(v, 2) for k, v in cache["mamba"].items()}
-            at = dict(cache["attn"])
-            at["pos"] = wipe(at["pos"], 1, _INVALID_POS)
-            new["attn"] = at
+            new["attn"] = wipe_attn(cache["attn"])
         if fam == "ssm":
             new["mlstm"] = {
                 "state": wipe(cache["mlstm"]["state"], 2),
@@ -506,6 +542,20 @@ class Model:
             sl = {k: wipe(v, 1) for k, v in cache["slstm"].items()}
             sl["m"] = wipe(cache["slstm"]["m"], 1, -10.0)
             new["slstm"] = sl
+        return new
+
+    def assign_blocks(self, cache: Params, slot_mask: jnp.ndarray,
+                      rows: jnp.ndarray) -> Params:
+        """Map the paged-cache table rows of slots in ``slot_mask`` (B,) to
+        the physical blocks in ``rows`` (B, max_blocks) — the device half of
+        admission (the host half is ``paging.BlockPool``).  No-op on dense
+        caches."""
+        from repro.models.paging import assign_block_rows, is_paged
+        key = "attn" if self.cfg.family == "hybrid" else "layers"
+        if key not in cache or not is_paged(cache[key]):
+            return cache
+        new = dict(cache)
+        new[key] = assign_block_rows(cache[key], slot_mask, rows)
         return new
 
     # convenience -------------------------------------------------------------

@@ -1,0 +1,325 @@
+"""Paged KV cache: block tables over a shared device block pool.
+
+The dense attention cache (``layers.make_attention_cache``) reserves a full
+``max_len`` ring per batch slot, so admission capacity is bounded by the
+*worst-case* request length.  This module replaces that per-slot ring with a
+vLLM-style paged layout:
+
+* a **block pool** — one shared device array of fixed-size KV blocks,
+  ``(n_layers, n_blocks, block_size, Hkv, D)``; physical block 0 is the
+  *trash block* (masked-out tokens land there, nothing ever reads it);
+* a **block table** — per slot, the list of physical blocks backing its
+  logical KV ring, ``(B, max_blocks)`` int32 (0 = unmapped → trash);
+* per-slot **logical positions** stay dense int32 exactly as in the ring
+  cache (``pos`` is ~0.1% of the K/V bytes — the capacity win is in K/V),
+  so every masking rule (causal, window, invalid) is unchanged.
+
+Logical address of token position ``p`` in slot ``b``::
+
+    logical_slot = p %  L          (L = max_blocks * block_size)
+    block        = logical_slot // block_size
+    offset       = logical_slot %  block_size
+    physical     = table[b, block]
+
+Device/host split
+-----------------
+The device side only ever *indexes through* the table: writes scatter into
+``pool[physical, offset]`` and attention gathers one block per online-softmax
+chunk.  Allocation and freeing are **host-side** (:class:`BlockPool`), done
+at the scheduler's sync points: admission reserves a request's *worst-case*
+block count (prompt + budget + speculative overhang,
+:meth:`PagedCacheConfig.request_blocks`) and maps the slot's table rows —
+refusing admission when the pool lacks headroom — and harvest returns the
+finished slot's whole list.  Mid-cycle rollback therefore stays an index
+rewind: the slot still owns its reserved blocks, stale entries are masked
+by stored position, and no allocation can ever be needed mid-flight.
+:func:`used_blocks` computes a slot's live block prefix for finer-grained
+truncation (e.g. reclaiming the unused tail of an EOS-terminated slot
+before harvest).
+
+``cfg.sliding_window`` targets keep the dense ring (the window already
+bounds their per-slot memory); requesting a paged cache for one is an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+# Reserved physical block: masked-out tokens write here, reads never see it
+# (their stored logical position stays invalid).
+TRASH_BLOCK = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Shape of the shared block pool.
+
+    ``n_blocks`` counts *physical* blocks including the reserved trash block,
+    so ``n_blocks - 1`` are allocatable.  Sizing guide: docs/SERVING.md.
+    """
+    block_size: int = 16
+    n_blocks: int = 64
+
+    def max_blocks(self, max_len: int) -> int:
+        """Table width: logical blocks needed for a ``max_len`` slot."""
+        return -(-max_len // self.block_size)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Physical blocks a request writing ``n_tokens`` KV entries needs."""
+        return -(-max(n_tokens, 1) // self.block_size)
+
+    def request_blocks(self, prompt_len: int, max_tokens: int,
+                       margin: int, max_len: int) -> int:
+        """Worst-case physical blocks one request reserves at admission:
+        prompt + its (buffer-clamped) budget + the topology's speculative
+        overhang ``margin`` (``buffer_margin``).  Reserving the worst case
+        up front is what lets mid-flight rollback stay allocation-free."""
+        tokens = min(
+            prompt_len + min(max_tokens, max_len - prompt_len) + margin,
+            self.max_blocks(max_len) * self.block_size)
+        return min(self.blocks_for(tokens), self.max_blocks(max_len))
+
+
+class BlockPool:
+    """Host-side free-list allocator over the physical blocks of a pool.
+
+    Lives in the scheduler; the device never sees it.  Block 0 (trash) is
+    never handed out.  ``alloc`` is all-or-nothing so a partially admitted
+    request can never strand blocks.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (trash + 1 usable)")
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(1, n_blocks))
+        self._free_set = set(self._free)      # O(1) double-free detection
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` blocks, or None (and take nothing) if short."""
+        if n > len(self._free):
+            return None
+        taken, self._free = self._free[:n], self._free[n:]
+        self._free_set.difference_update(taken)
+        return taken
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if not (0 < b < self.n_blocks):
+                raise ValueError(f"freeing invalid block {b}")
+            if b in self._free_set:
+                raise ValueError(f"double free of block {b}")
+        self._free.extend(int(b) for b in blocks)
+        self._free_set.update(int(b) for b in blocks)
+
+
+def used_blocks(n_tokens: int, block_size: int) -> int:
+    """Blocks a slot actually used for ``n_tokens`` cached entries.  The
+    serving scheduler frees finished slots' lists whole at harvest; this
+    helper supports finer-grained truncation (trailing table entries past
+    this count can be zeroed and their blocks returned early)."""
+    return -(-int(n_tokens) // block_size)
+
+
+# ---------------------------------------------------------------------------
+# Device-side cache construction / table maintenance
+# ---------------------------------------------------------------------------
+
+def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                               paged: PagedCacheConfig, *,
+                               n_layers: Optional[int] = None) -> Params:
+    """Paged counterpart of ``layers.make_attention_cache``.
+
+    Layout (leading ``n_layers`` dim on every leaf when given, so the layer
+    scan slices the pool, positions, and table uniformly)::
+
+        k_pool / v_pool : (n_layers, n_blocks, block_size, Hkv, D)
+        pos             : (n_layers, B, L + TRASH_SLOTS)   logical, per slot
+        table           : (n_layers, B, max_blocks)        physical block ids
+
+    ``table`` is logically layer-independent (the host writes the same rows
+    to every layer); it carries the layer dim only so the cache pytree scans.
+    All tables start at 0 == unmapped (trash): a slot must be mapped via
+    :func:`assign_block_rows` before its writes persist.
+    """
+    from repro.models.layers import TRASH_SLOTS, _INVALID_POS, dtype_of
+
+    if cfg.sliding_window:
+        raise ValueError(
+            "paged KV cache does not support sliding-window targets; the "
+            "dense ring already bounds their per-slot memory by the window")
+    bs = paged.block_size
+    mb = paged.max_blocks(max_len)
+    shape_pool = (paged.n_blocks, bs, cfg.n_kv_heads, cfg.head_dim)
+    shape_pos = (batch, mb * bs + TRASH_SLOTS)
+    shape_tbl = (batch, mb)
+    if n_layers is not None:
+        shape_pool = (n_layers,) + shape_pool
+        shape_pos = (n_layers,) + shape_pos
+        shape_tbl = (n_layers,) + shape_tbl
+    dt = dtype_of(cfg)
+    return {
+        "k_pool": jnp.zeros(shape_pool, dt),
+        "v_pool": jnp.zeros(shape_pool, dt),
+        "pos": jnp.full(shape_pos, _INVALID_POS, jnp.int32),
+        "table": jnp.zeros(shape_tbl, jnp.int32),
+    }
+
+
+def is_paged(cache: Optional[Params]) -> bool:
+    return cache is not None and "table" in cache
+
+
+def assign_block_rows(cache: Params, slot_mask: jnp.ndarray,
+                      rows: jnp.ndarray) -> Params:
+    """Point the table rows of slots in ``slot_mask`` (B,) at ``rows``
+    (B, max_blocks) — the device half of admission.  Rows of unmasked slots
+    are untouched; the layer dim (if any) receives the same rows."""
+    tbl = cache["table"]
+    rows = rows.astype(jnp.int32)
+    if tbl.ndim == 3:                      # (n_layers, B, max_blocks)
+        new = jnp.where(slot_mask[None, :, None], rows[None], tbl)
+    else:
+        new = jnp.where(slot_mask[:, None], rows, tbl)
+    return {**cache, "table": new}
+
+
+def full_tables(batch: int, max_blocks: int) -> jnp.ndarray:
+    """Dense-equivalent static assignment: slot ``b`` owns the contiguous
+    physical blocks ``[1 + b*max_blocks, 1 + (b+1)*max_blocks)``.  Needs a
+    pool of ``1 + batch * max_blocks`` blocks; used by offline sessions and
+    parity tests where dynamic allocation is beside the point."""
+    base = 1 + max_blocks * jnp.arange(batch, dtype=jnp.int32)[:, None]
+    return base + jnp.arange(max_blocks, dtype=jnp.int32)[None]
+
+
+# ---------------------------------------------------------------------------
+# Device-side write / attention paths (mirrors of layers._cache_write and
+# layers.blockwise_attention, indexing K/V through the block table)
+# ---------------------------------------------------------------------------
+
+def paged_cache_write(cache: Params, new_k, new_v, positions) -> Params:
+    """Write T new KV entries at per-batch logical ``positions`` (B, T).
+
+    Valid entries scatter into ``pool[table[b, p%L // bs], p%L % bs]``;
+    entries with position < 0 (masked tokens) go to the trash block and a
+    trash pos slot, exactly mirroring the dense ring's trash-slot contract.
+    Writes to slots whose table row is unmapped (0) are *dropped whole*
+    (K/V to trash, pos stays invalid) — an unmapped slot can neither be
+    corrupted nor fabricate readable entries.
+    """
+    from repro.models.layers import TRASH_SLOTS, _INVALID_POS
+
+    k_pool, v_pool, pos_arr, table = (cache["k_pool"], cache["v_pool"],
+                                      cache["pos"], cache["table"])
+    b, t = positions.shape
+    bs = k_pool.shape[-3]
+    mb = table.shape[-1]
+    l = mb * bs
+
+    logical = jnp.where(positions >= 0, positions % l, 0)
+    blk = logical // bs
+    b_idx = jnp.arange(b)[:, None]
+    valid = (positions >= 0) & (table[b_idx, blk] != TRASH_BLOCK)
+    phys = jnp.where(valid, table[b_idx, blk], TRASH_BLOCK)       # (B, T)
+    off = jnp.where(valid, logical % bs,
+                    jnp.arange(t, dtype=jnp.int32)[None] % bs)
+
+    # pos bookkeeping is identical to the dense ring (trash pos slots past L)
+    pslot = jnp.where(valid, logical,
+                      l + (jnp.arange(t, dtype=positions.dtype)
+                           % TRASH_SLOTS)[None])
+    stored = jnp.where(valid, positions, _INVALID_POS)
+    return {
+        "k_pool": k_pool.at[phys, off].set(new_k.astype(k_pool.dtype)),
+        "v_pool": v_pool.at[phys, off].set(new_v.astype(v_pool.dtype)),
+        "pos": pos_arr.at[b_idx, pslot].set(stored.astype(jnp.int32)),
+        "table": table,
+    }
+
+
+def paged_blockwise_attention(q: jnp.ndarray, cache: Params,
+                              q_pos: jnp.ndarray, *, window: int = 0,
+                              causal: bool = True, chunk: int = 1024,
+                              return_partial: bool = False):
+    """Online-softmax attention over a paged cache.
+
+    q: (B, T, H, D); q_pos: (B, T).  Semantically identical to
+    ``layers.blockwise_attention`` over the gathered dense view — both
+    scans share the same ``layers.online_softmax_step`` body, so the two
+    layouts cannot drift numerically — but here the gather happens inside
+    the scan: each step fetches ``chunk // block_size`` table entries
+    (matching the dense path's scan granularity, so small blocks don't
+    multiply sequential steps), and peak memory is the pool plus one
+    (B, chunk) window, never the full logical view.
+    """
+    from repro.models.layers import (_INVALID_POS, _NEG_INF, kv_valid_mask,
+                                     online_softmax_step)
+
+    k_pool, v_pool, pos_arr, table = (cache["k_pool"], cache["v_pool"],
+                                      cache["pos"], cache["table"])
+    b, t, h, d = q.shape
+    bs = k_pool.shape[-3]
+    hkv = k_pool.shape[-2]
+    mb = table.shape[-1]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, t, hkv, g, d)
+
+    # group table entries so one scan step covers ~chunk KV tokens; the
+    # tail pads with trash blocks (0) + invalid positions, masked like any
+    # unmapped entry
+    gb = max(1, min(chunk // bs, mb))
+    n_steps = -(-mb // gb)
+    pos_l = pos_arr[:, :mb * bs]
+    if n_steps * gb != mb:
+        pad = n_steps * gb - mb
+        table = jnp.pad(table, ((0, 0), (0, pad)))
+        pos_l = jnp.pad(pos_l, ((0, 0), (0, pad * bs)),
+                        constant_values=_INVALID_POS)
+    tbl_steps = jnp.moveaxis(table.reshape(b, n_steps, gb), 1, 0)
+    pos_steps = jnp.moveaxis(pos_l.reshape(b, n_steps, gb * bs), 1, 0)
+
+    m0 = jnp.full((b, t, hkv, g), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, t, hkv, g), jnp.float32)
+    o0 = jnp.zeros((b, t, hkv, g, d), jnp.float32)
+
+    def step(carry, xs):
+        tbl_j, pos_j = xs                       # (B, GB), (B, GB*bs)
+        kci = k_pool[tbl_j].reshape(b, gb * bs, hkv, d)
+        vci = v_pool[tbl_j].reshape(b, gb * bs, hkv, d)
+        valid = kv_valid_mask(pos_j, q_pos, causal=causal, window=window)
+        return online_softmax_step(carry, qg, kci, vci, valid, scale), None
+
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (tbl_steps, pos_steps))
+    if return_partial:
+        return m, l, o
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def gather_dense_view(cache: Params) -> Params:
+    """Materialise the dense {k, v, pos} view of one layer's paged cache —
+    (B, L, Hkv, D) — for oracles and the Pallas-kernel fallback path.  This
+    allocates the full logical view: debugging/testing only."""
+    k = cache["k_pool"][cache["table"]]                # (B, MB, bs, Hkv, D)
+    v = cache["v_pool"][cache["table"]]
+    b, mb, bs = k.shape[0], k.shape[1], k.shape[2]
+    l = mb * bs
+    return {
+        "k": k.reshape(b, l, *k.shape[3:]),
+        "v": v.reshape(b, l, *v.shape[3:]),
+        "pos": cache["pos"][:, :l],
+    }

@@ -34,8 +34,20 @@ Because the topology is a session-level strategy, the server serves chain
 AND tree drafts with the same scheduler: pass
 ``EngineConfig(topology="tree", branch=...)`` with an EAGLE-style drafter.
 
-Host-side logic (queueing, response assembly, detokenisation) is
-deliberately thin and never feeds back into the carry mid-flight.
+KV layout is a config choice (``ServerConfig.cache``): ``"dense"`` reserves
+a ``max_len`` ring per slot; ``"paged"`` backs slots with fixed-size blocks
+from one shared pool (``repro.models.paging``).  Under paging, admission is
+gated by **pool headroom** — the host :class:`~repro.models.paging.BlockPool`
+allocates each request's worst-case block count up front (so mid-cycle
+rollback never allocates), the admission prefill maps the slot's table rows,
+and harvest returns the finished slot's whole block list to the pool.
+Long-context configs therefore admit as many concurrent requests as their
+*declared* footprints (prompt + ``max_tokens`` + overhang) fit in the pool,
+rather than one per worst-case ``max_len`` reservation.
+
+Host-side logic (queueing, response assembly, detokenisation, block
+accounting) is deliberately thin and never feeds back into the carry
+mid-flight.
 """
 from __future__ import annotations
 
@@ -50,6 +62,7 @@ import numpy as np
 
 from repro.core.session import DecodeSession, DecodeState, EngineConfig
 from repro.models.model import Model
+from repro.models.paging import BlockPool, PagedCacheConfig
 
 
 @dataclasses.dataclass
@@ -89,6 +102,15 @@ class ServerConfig:
     # already knows — how many cycles must pass before ANY slot can finish,
     # and fuses exactly that many (zero wasted cycles, zero early polls).
     steps_per_sync: int = 4
+    # KV layout: "dense" reserves a full max_len ring per slot; "paged"
+    # backs every slot with blocks from one shared pool, so admission is
+    # gated by *pool headroom* (actual KV written) rather than worst-case
+    # per-slot reservation — long-context configs admit more concurrent
+    # requests at equal device memory.  Sizing guide: docs/SERVING.md.
+    cache: str = "dense"                # "dense" | "paged"
+    block_size: int = 16                # paged: tokens per KV block
+    pool_blocks: int = 0                # paged: physical blocks incl. trash;
+                                        # 0 = dense-equivalent capacity
 
 
 class SpecServer:
@@ -101,8 +123,25 @@ class SpecServer:
         self.ecfg = engine_cfg
 
         b = cfg.slots
+        if cfg.cache == "paged":
+            self.paged = PagedCacheConfig(
+                block_size=cfg.block_size,
+                n_blocks=(cfg.pool_blocks or
+                          1 + b * -(-cfg.max_len // cfg.block_size)))
+            self.max_blocks = self.paged.max_blocks(cfg.max_len)
+            self.pool = BlockPool(self.paged.n_blocks)
+            # physical blocks currently owned by each slot (host ledger;
+            # the device only ever sees them through the table rows)
+            self.slot_blocks: List[List[int]] = [[] for _ in range(b)]
+        elif cfg.cache == "dense":
+            self.paged = None
+            self.max_blocks = 1          # dummy block_rows width
+            self.pool = None
+            self.slot_blocks = [[] for _ in range(b)]
+        else:
+            raise ValueError(f"unknown cache layout {cfg.cache!r}")
         self.state = self.session.init_state(t_params, d_params, b,
-                                             cfg.max_len)
+                                             cfg.max_len, paged=self.paged)
 
         self.queue: deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * b
@@ -143,10 +182,12 @@ class SpecServer:
                                         (jnp.int32(0), tuple(state)))
             return DecodeState(*out)
 
-        def _admit_all(tp, dp, state, prompts, plens, smask, budgets, temps):
+        def _admit_all(tp, dp, state, prompts, plens, smask, budgets, temps,
+                       block_rows):
             return self.session.prefill(tp, dp, state, prompts, plens,
                                         slot_mask=smask, budget=budgets,
-                                        temperature=temps)
+                                        temperature=temps,
+                                        block_rows=block_rows)
 
         def _gather_rows(state, idx):
             return {"buf": state.buf[idx],
@@ -186,6 +227,13 @@ class SpecServer:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        if self.pool is not None:
+            # reject can-never-fit requests HERE, before they enter the
+            # queue: raising mid-admission would strand the requests
+            # admitted earlier in the same batched prefill
+            self._blocks_needed(min(len(req.prompt),
+                                    self.cfg.max_prompt_len),
+                                req.params.max_tokens)
         self.queue.append(req)
 
     def _admit(self):
@@ -219,12 +267,25 @@ class SpecServer:
         smask = np.zeros((b,), bool)
         budgets = np.zeros((b,), np.int32)
         temps = np.zeros((b,), np.float32)
+        rows = np.zeros((b, self.max_blocks), np.int32)
         now = time.time()
         for slot in free:
             if not self.queue:
                 break
-            req = self.queue.popleft()
+            req = self.queue[0]
             plen = min(len(req.prompt), s_len)
+            if self.pool is not None:
+                # paged admission is gated by POOL headroom, not slot count:
+                # a free slot with an empty pool stays idle until a harvest
+                # returns blocks (FIFO — later, smaller requests don't jump
+                # a starved head-of-queue request)
+                blocks = self.pool.alloc(
+                    self._blocks_needed(plen, req.params.max_tokens))
+                if blocks is None:
+                    break
+                self.slot_blocks[slot] = blocks
+                rows[slot, :len(blocks)] = blocks
+            self.queue.popleft()
             prompts[slot, :plen] = req.prompt[:plen]
             plens[slot] = plen
             smask[slot] = True
@@ -240,9 +301,27 @@ class SpecServer:
             # prefill resets the admitted rows' device stats to zero
             self._last_cycles[slot] = 0
             self._last_commits[slot] = 0
+        if not smask.any():
+            return                       # pool exhausted before any admit
         self.state = self._prefill(
             self.t_params, self.d_params, self.state, prompts, plens,
-            smask, budgets, temps)
+            smask, budgets, temps, rows)
+
+    def _blocks_needed(self, plen: int, max_tokens: int) -> int:
+        """Worst-case physical blocks for a request (see
+        :meth:`~repro.models.paging.PagedCacheConfig.request_blocks`): the
+        reservation covers prompt + budget + speculative overhang, so
+        mid-flight rollback never needs new blocks — the index rewind stays
+        within what admission reserved."""
+        need = self.paged.request_blocks(
+            plen, max_tokens, self.session.topology.buffer_margin,
+            self.cfg.max_len)
+        if need > self.pool.n_blocks - 1:
+            raise ValueError(
+                f"request needs {need} blocks but the pool only has "
+                f"{self.pool.n_blocks - 1}; raise ServerConfig.pool_blocks "
+                f"or block_size")
+        return need
 
     def _group_size(self) -> int:
         """Fused cycles until the next moment a slot is *expected* to
@@ -322,6 +401,12 @@ class SpecServer:
                 n_committed=int(rows["stats"]["commits"][j]),
                 latency_s=now - self.slot_t0[slot]))
             self.slot_req[slot] = None
+            if self.pool is not None and self.slot_blocks[slot]:
+                # block-list truncate at its terminal point: the finished
+                # slot's whole list returns to the pool (the table rows are
+                # unmapped by reset_slots at the next admission)
+                self.pool.free(self.slot_blocks[slot])
+                self.slot_blocks[slot] = []
 
     def run(self, *, max_ticks: int = 10_000) -> List[Response]:
         for _ in range(max_ticks):

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Docs reference checker: docs can't rot silently.
+
+Scans ``docs/*.md`` and ``README.md`` for
+
+* repository file paths (``src/repro/core/session.py``, ``docs/`` …) —
+  each must exist relative to the repo root;
+* dotted ``repro.*`` / ``benchmarks.*`` symbols
+  (``repro.core.session.DecodeSession.cycle`` …) — each must resolve: the
+  longest importable module prefix is imported and the remainder walked
+  with ``getattr``.
+
+Exit code 0 when every reference resolves, 1 otherwise (CI docs job).
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import glob
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# a path-ish token: contains '/', and either names a file with a known
+# extension or is an explicit directory reference ending in '/' (the
+# lookahead keeps prose like "top1/top2" or "dense/paged" out)
+PATH_RE = re.compile(
+    r"(?<![\w./-])((?:[\w.-]+/)+[\w.-]+\.(?:py|md|yml|yaml|txt)"
+    r"|(?:[\w.-]+/)+(?![\w.-]))"
+)
+SYMBOL_RE = re.compile(r"\b((?:repro|benchmarks)(?:\.[A-Za-z_]\w*)+)\b")
+
+
+def check_path(token: str) -> bool:
+    p = os.path.join(ROOT, token)
+    return os.path.isdir(p) if token.endswith("/") else os.path.isfile(p)
+
+
+def check_symbol(dotted: str) -> bool:
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    sys.path.insert(0, ROOT)               # benchmarks.* package
+    files = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    files.append(os.path.join(ROOT, "README.md"))
+
+    failures = []
+    n_paths = n_symbols = 0
+    for fname in files:
+        rel = os.path.relpath(fname, ROOT)
+        with open(fname) as f:
+            text = f.read()
+        for m in PATH_RE.finditer(text):
+            tok = m.group(1)
+            if "://" in text[max(0, m.start() - 8):m.start() + 4]:
+                continue                   # URL, not a repo path
+            n_paths += 1
+            if not check_path(tok):
+                failures.append(f"{rel}: missing path {tok!r}")
+        for m in SYMBOL_RE.finditer(text):
+            n_symbols += 1
+            if not check_symbol(m.group(1)):
+                failures.append(f"{rel}: unresolvable symbol {m.group(1)!r}")
+
+    print(f"checked {n_paths} path refs + {n_symbols} symbol refs "
+          f"across {len(files)} docs")
+    for f in failures:
+        print(f"FAIL  {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
