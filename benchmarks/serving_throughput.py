@@ -21,9 +21,20 @@ usage is short, with outputs bit-identical to offline
 ``DecodeSession.generate`` (greedy).  Reported as
 ``serving/longctx_admission_*`` CSV rows.
 
+``--mesh DATA,MODEL`` adds a mesh-sweep section: the same workload served by
+a single-device server vs the mesh-partitioned one (slots sharded over
+``data``, target tensor dims over ``model``), reporting tok/s scaling
+against the 1-device baseline.  The flag transparently forces enough XLA
+host-platform devices *before jax is imported*, so it works on plain CPU.
+
+Every run also writes a machine-readable ``BENCH_serving.json`` summary
+(tok/s, host syncs, admitted concurrency, mesh scaling) at the repo root —
+the perf trajectory baseline future PRs diff against.
+
     python -m benchmarks.serving_throughput            # trained tiny pair
     python -m benchmarks.serving_throughput --quick    # random weights (CI)
     python -m benchmarks.serving_throughput --quick --cache paged
+    python -m benchmarks.serving_throughput --quick --mesh 2,1
 
 Emits the same ``name,us_per_call,derived`` CSV rows as ``benchmarks/run.py``.
 """
@@ -31,16 +42,57 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
+import sys
 import time
 from collections import deque
+
+
+def _force_host_devices_for_mesh(argv):
+    """Read ``--mesh`` off argv and force enough XLA host-platform devices.
+    MUST run before the jax import below — the flag is consumed at backend
+    init and cannot be applied retroactively.  An already-present forcing
+    flag is raised (never lowered) to the mesh size."""
+    shape = None
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            shape = argv[i + 1]
+        elif a.startswith("--mesh="):
+            shape = a.split("=", 1)[1]
+    if not shape:
+        return
+    try:
+        n = 1
+        for x in shape.split(","):
+            n *= int(x)
+    except ValueError:
+        return                          # argparse will reject it properly
+    if n <= 1:
+        return
+    import re
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    if m is None:
+        flags += f" --xla_force_host_platform_device_count={n}"
+    elif int(m.group(1)) < n:
+        flags = (flags[:m.start(1)] + str(n) + flags[m.end(1):])
+    os.environ["XLA_FLAGS"] = flags.strip()
+
+
+_force_host_devices_for_mesh(sys.argv)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import ModelConfig
 from repro.core import EngineConfig, IndependentDrafter, make_generate_fn
 from repro.models import build_model
 from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                          "BENCH_serving.json")
 
 
 # ---------------------------------------------------------------------------
@@ -280,7 +332,7 @@ def longctx_admission(target, t_params, draft, d_params, *, k=3):
     print(f"  paged : {p_peak:3d} concurrent ({pool_blocks}-block pool, "
           f"{per_req} blocks/request)")
     print(f"  ratio : {ratio:.1f}x  (paged outputs == offline greedy)")
-    return [
+    rows = [
         ("serving/longctx_admission_dense", 0.0,
          f"concurrent={d_peak};kv_tokens={kv_tokens}"),
         ("serving/longctx_admission_paged", 0.0,
@@ -288,6 +340,83 @@ def longctx_admission(target, t_params, draft, d_params, *, k=3):
         ("serving/longctx_admission_ratio", 0.0,
          f"x={ratio:.1f};outputs=offline_match"),
     ]
+    summary = {"kv_tokens_per_layer": kv_tokens,
+               "dense_concurrent": int(d_peak),
+               "paged_concurrent": int(p_peak),
+               "admission_ratio": round(ratio, 2)}
+    return rows, summary
+
+
+# ---------------------------------------------------------------------------
+# Mesh sweep: tok/s scaling of the partitioned tick vs one device
+# ---------------------------------------------------------------------------
+
+# Dedicated sweep target: heavy enough that a tick group is compute-bound
+# (the quick pair's ticks are dispatch-bound, which hides any partitioning
+# win on CPU hosts where the 1-device baseline already multi-threads).
+SWEEP_TARGET_CFG = ModelConfig(name="sweep-target", family="dense",
+                               n_layers=6, d_model=512, n_heads=8,
+                               n_kv_heads=8, d_ff=1024, vocab_size=64,
+                               dtype="float32")
+
+
+def mesh_sweep(draft, d_params, mesh_shape, *, cache, k=4):
+    """Weak-scaling sweep: per-shard slot count fixed, the data axis
+    multiplies the admitted concurrency.  Baseline = the SAME workload on a
+    single-device server with one shard's slots; the mesh server runs
+    ``data`` shards of them concurrently.  Reports tok/s and the scaling
+    ratio (>1 means the data axis bought real throughput)."""
+    data, model = mesh_shape
+    target = build_model(SWEEP_TARGET_CFG)
+    t_params = target.init(jax.random.PRNGKey(0))
+    per_shard_slots, n_req, max_tokens, prompt_len = 4, 24, 8, 64
+    ecfg = EngineConfig(k=k, rule="mars", mode="sample", temperature=1.0,
+                        guard="margin")
+
+    from benchmarks import common as C
+    reqs = _requests(n_req, max_tokens, prompt_len, C.corpus())
+
+    def mk(mesh, slots):
+        return SpecServer(
+            target, IndependentDrafter(draft, k=k), t_params, d_params,
+            ecfg,
+            ServerConfig(slots=slots, max_len=prompt_len + max_tokens + k + 4,
+                         max_prompt_len=prompt_len, cache=cache, mesh=mesh))
+
+    servers = {"serving/mesh_1dev": mk(None, per_shard_slots),
+               f"serving/mesh_{data}x{model}": mk(mesh_shape,
+                                                  per_shard_slots * data)}
+    best = _measure(servers, reqs, max_tokens, repeats=4)
+    base = best["serving/mesh_1dev"]
+    part = best[f"serving/mesh_{data}x{model}"]
+    scaling = part["tok_s"] / base["tok_s"]
+
+    print(f"\nmesh sweep ({cache} cache, {per_shard_slots} slots/shard, "
+          f"target {SWEEP_TARGET_CFG.n_layers}L/d{SWEEP_TARGET_CFG.d_model}):")
+    print(f"  1 device   : {base['tok_s']:8.1f} tok/s "
+          f"({per_shard_slots} slots)")
+    print(f"  mesh {data}x{model}   : {part['tok_s']:8.1f} tok/s "
+          f"({per_shard_slots * data} slots, "
+          f"{part['syncs_per_tick']:.2f} syncs/group)")
+    print(f"  scaling    : {scaling:.2f}x from the data axis")
+    rows = [
+        ("serving/mesh_1dev", 0.0,
+         f"tok_s={base['tok_s']:.1f};slots={per_shard_slots}"),
+        (f"serving/mesh_{data}x{model}", 0.0,
+         f"tok_s={part['tok_s']:.1f};slots={per_shard_slots * data};"
+         f"cache={cache}"),
+        ("serving/mesh_scaling", 0.0, f"x={scaling:.2f}"),
+    ]
+    summary = {"shape": [data, model], "cache": cache,
+               "slots_per_shard": per_shard_slots,
+               "baseline_tok_s": round(base["tok_s"], 1),
+               "baseline_slots": per_shard_slots,
+               "mesh_tok_s": round(part["tok_s"], 1),
+               "mesh_slots": per_shard_slots * data,
+               "mesh_host_syncs": int(part["host_syncs"]),
+               "mesh_tick_groups": int(part["ticks"]),
+               "scaling": round(scaling, 2)}
+    return rows, summary
 
 
 def main():
@@ -305,7 +434,17 @@ def main():
     ap.add_argument("--cache", default="dense", choices=["dense", "paged"],
                     help="KV layout of the device-resident server (the "
                          "legacy baseline always runs dense)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="add a mesh-sweep section: tok/s of the "
+                         "(data, model)-partitioned server vs one device "
+                         "(host devices are forced automatically)")
     args = ap.parse_args()
+
+    mesh_shape = None
+    if args.mesh:
+        mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+        if len(mesh_shape) != 2 or min(mesh_shape) < 1:
+            raise SystemExit(f"--mesh expects DATA,MODEL, got {args.mesh!r}")
 
     from benchmarks import common as C
     if args.quick:
@@ -363,11 +502,41 @@ def main():
          f"tok_s={old['tok_s']:.1f};syncs_per_tick={old['syncs_per_tick']:.2f}"),
         ("serving/speedup", 0.0, f"x={speedup:.2f}"),
     ]
-    rows += longctx_admission(target, t_params, draft, d_params,
-                              k=min(args.k, 3))
+    lc_rows, lc_summary = longctx_admission(target, t_params, draft,
+                                            d_params, k=min(args.k, 3))
+    rows += lc_rows
+    mesh_summary = None
+    if mesh_shape is not None:
+        m_rows, mesh_summary = mesh_sweep(draft, d_params, mesh_shape,
+                                          cache=args.cache, k=args.k)
+        rows += m_rows
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    # machine-readable perf-trajectory baseline (committed at repo root so
+    # future PRs can diff tok/s, sync counts, and mesh scaling)
+    summary = {
+        "benchmark": "serving_throughput",
+        "workload": {"requests": n_req, "max_tokens": max_tokens,
+                     "prompt_len": args.prompt_len, "slots": args.slots,
+                     "k": args.k, "cache": args.cache,
+                     "quick": bool(args.quick)},
+        "device_resident": {"tok_s": round(new["tok_s"], 1),
+                            "host_syncs": int(new["host_syncs"]),
+                            "tick_groups": int(new["ticks"]),
+                            "syncs_per_group": round(new["syncs_per_tick"],
+                                                     3)},
+        "legacy": {"tok_s": round(old["tok_s"], 1),
+                   "syncs_per_tick": round(old["syncs_per_tick"], 2)},
+        "speedup_vs_legacy": round(speedup, 2),
+        "longctx_admission": lc_summary,
+        "mesh": mesh_summary,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+        f.write("\n")
+    print(f"\nwrote {os.path.relpath(BENCH_JSON)}")
     return speedup
 
 

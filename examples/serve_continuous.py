@@ -15,8 +15,17 @@ so the same scheduler serves chain drafts (independent small-LM drafter)
 AND tree drafts (EAGLE-style head + caterpillar tree) — the second pass
 below flips ``EngineConfig(topology="tree")`` and nothing else.
 
+``--cache`` and ``--mesh`` exercise the exact paths the production server
+uses: the paged block-pool KV layout, and the mesh-partitioned tick (slots
+sharded over the ``data`` axis, target tensor dims over ``model``).
+
     PYTHONPATH=src python examples/serve_continuous.py
+    PYTHONPATH=src python examples/serve_continuous.py --cache paged
+    # 2-way slot sharding needs >= 2 devices; on CPU force host devices
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    PYTHONPATH=src python examples/serve_continuous.py --mesh 2,1
 """
+import argparse
 import os
 import sys
 
@@ -36,8 +45,12 @@ def serve(server, n_req=12, max_tokens=48, label="", temperatures=(1.0,)):
         server.submit(Request(uid=i, prompt=prompt,
                               params=SamplingParams(max_tokens=max_tokens,
                                                     temperature=temp)))
+    mesh = server.cfg.mesh
+    where = (f"a {mesh[0]}x{mesh[1]} (data, model) mesh" if mesh
+             else "one device")
     print(f"serving {n_req} {label} requests on {server.cfg.slots} slots "
-          f"(temperatures {list(temperatures)}) ...")
+          f"({server.cfg.cache} KV cache, {where}, "
+          f"temperatures {list(temperatures)}) ...")
     responses = server.run()
     taus = []
     for r in sorted(responses, key=lambda r: r.uid):
@@ -52,7 +65,27 @@ def serve(server, n_req=12, max_tokens=48, label="", temperatures=(1.0,)):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache", default="dense", choices=["dense", "paged"],
+                    help="KV layout: dense per-slot rings, or paged block "
+                         "tables over a shared pool")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="partition the tick over a (data, model) mesh "
+                         "(needs data*model devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    mesh = None
+    if args.mesh:
+        try:
+            mesh = tuple(int(x) for x in args.mesh.split(","))
+            assert len(mesh) == 2 and min(mesh) >= 1
+        except (ValueError, AssertionError):
+            raise SystemExit(f"--mesh expects DATA,MODEL (got {args.mesh!r})")
+
     target, t_params, draft, d_params = C.get_pair()
+    scfg = ServerConfig(slots=args.slots, max_len=256, max_prompt_len=32,
+                        cache=args.cache, mesh=mesh)
 
     # chain topology: independent small-LM drafter, sampling verification,
     # a different per-request temperature riding each slot's carry
@@ -61,7 +94,7 @@ def main():
         t_params, d_params,
         EngineConfig(k=4, rule="mars", mode="sample", temperature=1.0,
                      guard="margin"),
-        ServerConfig(slots=4, max_len=256, max_prompt_len=32)),
+        scfg),
         label="chain", temperatures=(0.5, 1.0, 2.0))
 
     # tree topology: EAGLE-style head, caterpillar tree, greedy + MARS —
@@ -72,7 +105,7 @@ def main():
         t_params, e_params,
         EngineConfig(k=3, rule="mars", mode="greedy", temperature=0.0,
                      guard="margin", topology="tree", branch=2),
-        ServerConfig(slots=4, max_len=256, max_prompt_len=32)),
+        scfg),
         label="tree")
 
 

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from repro.core import verify as V
 from repro.core.drafter import Committed
 from repro.models.model import Model
+from repro.sharding import constrain
 
 STAT_KEYS = ("cycles", "commits", "accepts", "relaxed")
 
@@ -305,7 +306,8 @@ class DecodeSession:
 
         width = state.buf.shape[1]
         row = jnp.pad(prompt, ((0, 0), (0, width - s)))
-        buf = jnp.where(slot_mask[:, None], row, state.buf)
+        buf = constrain(jnp.where(slot_mask[:, None], row, state.buf),
+                        "batch", None)
         lengths = jnp.where(slot_mask, prompt_len, state.lengths)
         finished = jnp.where(slot_mask, False, state.finished)
         stats = {k: jnp.where(slot_mask, 0, v)
@@ -425,6 +427,12 @@ class DecodeSession:
         buf = state.buf.at[jnp.arange(b)[:, None], wslot].set(out.out_tokens)
         lengths = state.lengths + n_commit
         finished = finished | (lengths >= l_buf)
+        # under a serving mesh the slot-indexed carry stays partitioned on
+        # the data axis across cycles (no-op outside a rules context)
+        buf = constrain(buf, "batch", None)
+        lengths = constrain(lengths, "batch")
+        finished = constrain(finished, "batch")
+        budget = constrain(budget, "batch")
 
         # drafter sync sees the final (EOS-truncated, buffer-clamped)
         # n_commit, per the Committed contract

@@ -34,6 +34,8 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.sharding import constrain
+
 DEFAULT_THETA = 0.9
 
 
@@ -172,6 +174,12 @@ def _correction_token(target_logits_all, n_accept, *, mode, key, temperature,
     k = kp1 - 1
     sel = jnp.take_along_axis(
         target_logits_all, n_accept[:, None, None], axis=1)[:, 0]  # (B, V)
+    # the ONE point in verification that needs the full vocab row per slot:
+    # under a mesh the accept masks above run on vocab-sharded logits, but
+    # the categorical/argmax below samples across the whole vocabulary —
+    # annotate the selected row as vocab-unsharded so the all-gather happens
+    # here, on (B, V), and not on the (B, K+1, V) chunk (no-op off-mesh)
+    sel = constrain(sel, "batch", None)
     if mode == "greedy":
         return jnp.argmax(sel, axis=-1).astype(jnp.int32)
 

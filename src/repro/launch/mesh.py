@@ -3,6 +3,19 @@
 Function (not module-level constant) so importing never touches jax device
 state.  The dry-run forces 512 host-platform devices; the single-pod mesh
 uses the first 256 of them.
+
+``make_serving_mesh`` is the serving-scale counterpart: a small
+``(data, model)`` mesh sized to whatever devices exist, used by
+``repro.serving.SpecServer`` to partition the sync-free tick (slots across
+``data``, tensor parallelism across ``model``).  On CPU-only hosts the
+usual way to get ≥2 devices is forcing host-platform devices *before jax is
+imported*::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 python ...
+
+(``host_device_count_flag`` builds that string; tier-1 mesh tests and the
+serving benchmark's ``--mesh`` mode apply it via subprocess env / pre-import
+environ mutation respectively.)
 """
 from __future__ import annotations
 
@@ -10,6 +23,33 @@ import numpy as np
 
 import jax
 from jax.sharding import Mesh
+
+
+def host_device_count_flag(n: int) -> str:
+    """The XLA flag forcing ``n`` host-platform devices.  Must be in
+    ``XLA_FLAGS`` before jax is imported — it cannot be applied
+    retroactively, which is why the helpers here only *format* it."""
+    return f"--xla_force_host_platform_device_count={n}"
+
+
+def make_serving_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """A ``(data, model)`` mesh over the first ``data * model`` devices.
+
+    ``data`` shards batch slots (embarrassingly parallel — each shard owns
+    ``slots / data`` full requests), ``model`` shards the target/drafter
+    tensor dims (heads / ff / vocab where divisible).  Raises with the
+    host-device-forcing recipe when the process has too few devices."""
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got ({data}, {model})")
+    n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"serving mesh ({data}, {model}) needs {n} devices, have "
+            f"{len(devices)}; on CPU set XLA_FLAGS="
+            f"{host_device_count_flag(n)} before importing jax")
+    dev = np.asarray(devices[:n]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

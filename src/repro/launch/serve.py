@@ -8,6 +8,12 @@
     PYTHONPATH=src python -m repro.launch.serve \
         --arch granite-8b --smoke --topology tree --branch 2 --k 3
 
+    # mesh-partitioned tick: 2-way slot sharding x 2-way tensor parallelism
+    # (on CPU force host devices BEFORE jax imports)
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch granite-8b --smoke --mesh 2,2
+
 With ``--smoke`` the reduced config is instantiated with random weights
 (engine demo); otherwise checkpoints are loaded from --ckpt-dir (trained
 with repro.launch.train).  Both topologies run through the same shared
@@ -58,10 +64,36 @@ def main():
     ap.add_argument("--pool-blocks", type=int, default=0,
                     help="paged: physical blocks in the shared pool "
                          "(0 = dense-equivalent capacity)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="partition the serving tick over a (data, model) "
+                         "mesh: slots shard over data, target/drafter "
+                         "tensor dims over model (needs data*model "
+                         "devices; see docs/SERVING.md)")
     args = ap.parse_args()
+
+    mesh_shape = None
+    if args.mesh:
+        try:
+            mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+            assert len(mesh_shape) == 2 and min(mesh_shape) >= 1
+        except (ValueError, AssertionError):
+            raise SystemExit(f"--mesh expects DATA,MODEL (got {args.mesh!r})")
+        if args.slots % mesh_shape[0]:
+            raise SystemExit(
+                f"--slots {args.slots} must be divisible by the mesh data "
+                f"axis ({mesh_shape[0]}) so every shard owns whole slots")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, dtype="float32")
+    if args.cache == "paged":
+        # launcher-level fail-fast: name the arch and the sub-cache that
+        # cannot page instead of raising deep inside Model.init_cache
+        from repro.models.paging import paged_unsupported_reason
+        reason = paged_unsupported_reason(cfg)
+        if reason is not None:
+            raise SystemExit(
+                f"--cache paged is incompatible with --arch {args.arch}: "
+                f"{reason}; use --cache dense")
     target = build_model(cfg)
     t_params = target.init(jax.random.PRNGKey(0))
     if not args.smoke:
@@ -101,7 +133,7 @@ def main():
         ServerConfig(slots=args.slots, max_len=256, max_prompt_len=32,
                      steps_per_sync=args.steps_per_sync, cache=args.cache,
                      block_size=args.block_size,
-                     pool_blocks=args.pool_blocks))
+                     pool_blocks=args.pool_blocks, mesh=mesh_shape))
 
     # per-request sampling params ride the device carry: each request may
     # ask for its own temperature and token budget
@@ -111,8 +143,11 @@ def main():
             uid=i, prompt=rng.integers(3, cfg.vocab_size, 12).astype(np.int32),
             params=SamplingParams(max_tokens=args.max_tokens,
                                   temperature=args.temperature)))
+    mesh_note = (f", mesh={mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape
+                 else "")
     print(f"serving {args.requests} requests "
-          f"({args.topology}, {args.rule}, θ={args.theta}, K={args.k}) ...")
+          f"({args.topology}, {args.rule}, θ={args.theta}, K={args.k}, "
+          f"cache={args.cache}{mesh_note}) ...")
     for r in sorted(server.run(), key=lambda r: r.uid):
         print(f"  req {r.uid:2d}: {len(r.tokens):3d} tokens "
               f"tau={r.tau:4.2f} latency={r.latency_s:5.2f}s")

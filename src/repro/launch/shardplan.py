@@ -115,6 +115,7 @@ def _cache_spec_for_path(path: str, ndim: int, rules) -> P:
     b = rules.get("batch")
     kv = rules.get("kv_seq")
     sh = rules.get("ssm_heads")
+    kvh = rules.get("kv_heads")
 
     def pad(spec):
         return P(*([None] * (ndim - len(spec)) + list(spec)))
@@ -123,10 +124,20 @@ def _cache_spec_for_path(path: str, ndim: int, rules) -> P:
         return P(b)
     if "cross_k" in path or "cross_v" in path:
         return pad([b, None, None, None])
+    # paged layout: the pool is partitioned under BOTH serving axes —
+    # physical blocks across "data" (each data shard's slots reference only
+    # the block range its per-shard free list owns), KV heads across
+    # "model"; tables and logical positions are slot-indexed like the carry
+    if path.endswith("k_pool") or path.endswith("v_pool"):
+        return pad([rules.get("pool_blocks"), None, kvh, None])
+    if path.endswith("table"):
+        return pad([b, None])
     if path.endswith("/k") or path.endswith("/v"):
-        return pad([b, kv, None, None])
+        return pad([b, kv, kvh, None])
     if path.endswith("pos"):
         return pad([b, kv])
+    if path.endswith("feat"):                     # EAGLE/Medusa drafter state
+        return pad([b, None])
     if "mamba/conv" in path:
         return pad([b, None, sh])
     if "mamba/state" in path:
@@ -148,6 +159,73 @@ def cache_specs(cache_struct, rules):
         name = "/".join(str(getattr(k, "key", k)) for k in pth)
         specs.append(_cache_spec_for_path(name, leaf.ndim, rules))
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Serving carry partition specs (the sharded sync-free tick)
+# ---------------------------------------------------------------------------
+
+# DecodeState fields whose leading dim is the batch-slot dim.
+_SLOT_FIELDS = ("buf", "lengths", "finished", "last_token", "budget",
+                "temperature", "stats")
+
+
+def decode_state_specs(state, rules):
+    """PartitionSpec pytree for a :class:`repro.core.session.DecodeState`
+    carry under ``rules``: every slot-indexed field (token buffer, lengths,
+    finished flags, budgets, temperatures, stats) shards its leading dim on
+    the batch axes; the target cache and drafter state resolve per leaf via
+    :func:`cache_specs` path matching (incl. the paged pool); the PRNG key
+    is replicated.  Returns the same NamedTuple type with specs as leaves.
+    """
+    b = rules.get("batch")
+
+    def slot_spec(leaf):
+        return P(*([b] + [None] * (leaf.ndim - 1)))
+
+    out = {}
+    for name, sub in state._asdict().items():
+        if name in ("t_cache", "d_state"):
+            out[name] = cache_specs(sub, rules)
+        elif name in _SLOT_FIELDS:
+            out[name] = jax.tree.map(slot_spec, sub)
+        else:                                    # PRNG key and friends
+            out[name] = jax.tree.map(lambda _: P(), sub)
+    return type(state)(**out)
+
+
+def tree_shardings(tree, specs, mesh):
+    """Zip a value pytree with a same-structure PartitionSpec pytree into
+    NamedShardings, sanitising each spec per-dim against the leaf shape —
+    non-dividing mappings are dropped so the result is valid for
+    ``device_put``/``in_shardings``/``out_shardings`` (which reject uneven
+    shardings) even when e.g. a drafter's KV-head count does not divide the
+    model axis."""
+    from repro.sharding.rules import sanitize_spec
+
+    flat_t, treedef = jax.tree_util.tree_flatten(tree)
+    flat_s = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert len(flat_t) == len(flat_s), "specs tree does not mirror values"
+    out = [NamedSharding(mesh, sanitize_spec(sp, leaf.shape, mesh))
+           for leaf, sp in zip(flat_t, flat_s)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decode_state_shardings(state, mesh, rules):
+    """NamedSharding pytree for the serving carry (see
+    :func:`decode_state_specs` / :func:`tree_shardings`)."""
+    return tree_shardings(state, decode_state_specs(state, rules), mesh)
+
+
+def param_shardings(params, mesh, rules):
+    """NamedSharding pytree for a param tree under ``rules`` (path-matched
+    via :func:`repro.sharding.param_specs`, shape-sanitised)."""
+    from repro.sharding import axis_rules, param_specs
+
+    with axis_rules(rules):
+        specs = param_specs(params, mesh=mesh)
+    return tree_shardings(params, specs, mesh)
 
 
 def build_case(arch: str, shape_name: str, *, multi_pod: bool,

@@ -481,16 +481,28 @@ def attention_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
             # fast path does not apply — the physical write location
             # differs per slot by construction.
             new_cache = P.paged_cache_write(cache, k, v, positions)
+            # under a serving mesh the pool is partitioned on blocks (data)
+            # × kv heads (model); per-shard block allocation keeps the
+            # table gathers below shard-local
+            att_cache = {
+                **new_cache,
+                "k_pool": constrain(new_cache["k_pool"],
+                                    "pool_blocks", None, "kv_heads", None),
+                "v_pool": constrain(new_cache["v_pool"],
+                                    "pool_blocks", None, "kv_heads", None),
+            }
 
             def attend(qc, pc):
                 return P.paged_blockwise_attention(
-                    qc, new_cache, pc, window=window, causal=causal,
+                    qc, att_cache, pc, window=window, causal=causal,
                     chunk=chunk)
         else:
             new_cache = _cache_write(cache, k, v, positions,
                                      uniform=cfg.cache_uniform_slots)
-            ck = constrain(new_cache["k"], "batch", "kv_seq", None, None)
-            cv = constrain(new_cache["v"], "batch", "kv_seq", None, None)
+            ck = constrain(new_cache["k"], "batch", "kv_seq", "kv_heads",
+                           None)
+            cv = constrain(new_cache["v"], "batch", "kv_seq", "kv_heads",
+                           None)
             cpos = new_cache["pos"]
 
             def attend(qc, pc):

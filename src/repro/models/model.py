@@ -338,8 +338,13 @@ class Model:
             return L.make_attention_cache(cfg, batch, max_len,
                                           n_layers=n_layers)
 
-        if paged is not None and fam == "ssm":
-            raise ValueError("ssm targets have no attention KV cache to page")
+        if paged is not None:
+            from repro.models.paging import paged_unsupported_reason
+            reason = paged_unsupported_reason(cfg)
+            if reason is not None:
+                raise ValueError(
+                    f"paged KV cache does not support {cfg.name!r}: "
+                    f"{reason}")
         cache: Params = {"index": jnp.zeros((batch,), jnp.int32)}
         if fam in ("dense", "moe", "vlm"):
             cache["layers"] = attn_cache(cfg.n_layers)

@@ -116,13 +116,102 @@ class BlockPool:
         return taken
 
     def free(self, blocks: Sequence[int]) -> None:
+        seen = set()
         for b in blocks:
             if not (0 < b < self.n_blocks):
                 raise ValueError(f"freeing invalid block {b}")
-            if b in self._free_set:
+            if b in self._free_set or b in seen:
                 raise ValueError(f"double free of block {b}")
+            seen.add(b)
         self._free.extend(int(b) for b in blocks)
         self._free_set.update(int(b) for b in blocks)
+
+
+class ShardedBlockPool:
+    """Per-data-shard free lists over one global physical-block id space —
+    the host half of the *partitioned* pool on a serving mesh.
+
+    The device pool array shards its block dim over ``data`` in contiguous
+    ranges (shard ``s`` owns physical ids ``[s*per, (s+1)*per)``), so a slot
+    served by data shard ``s`` must only ever reference blocks from that
+    range or its gathers would cross shards.  This allocator enforces that
+    *by construction*: ``alloc(n, shard)`` only hands out ids from the
+    shard's own range.  The first block of every range is reserved (block 0
+    is the global trash block; the other shards' first blocks are held back
+    for symmetry, so every shard allocates from exactly ``per - 1`` blocks
+    and capacity reasoning is shard-independent).
+    """
+
+    def __init__(self, n_blocks: int, n_shards: int):
+        if n_shards < 1:
+            raise ValueError("need >= 1 shard")
+        if n_blocks % n_shards:
+            raise ValueError(
+                f"pool of {n_blocks} blocks does not divide over "
+                f"{n_shards} data shards")
+        self.n_blocks = n_blocks
+        self.n_shards = n_shards
+        self.per_shard = n_blocks // n_shards
+        if self.per_shard < 2:
+            raise ValueError("each shard needs >= 2 blocks "
+                             "(reserved + 1 usable)")
+        self._free: List[List[int]] = [
+            list(range(s * self.per_shard + 1, (s + 1) * self.per_shard))
+            for s in range(n_shards)]
+        self._free_sets = [set(f) for f in self._free]
+
+    @property
+    def shard_capacity(self) -> int:
+        """Allocatable blocks per shard (uniform across shards)."""
+        return self.per_shard - 1
+
+    def available(self, shard: int) -> int:
+        return len(self._free[shard])
+
+    def alloc(self, n: int, shard: int) -> Optional[List[int]]:
+        """Take ``n`` blocks from ``shard``'s range, or None (and take
+        nothing) if that shard is short — other shards' headroom cannot
+        help, their blocks live on other devices."""
+        free = self._free[shard]
+        if n > len(free):
+            return None
+        taken, self._free[shard] = free[:n], free[n:]
+        self._free_sets[shard].difference_update(taken)
+        return taken
+
+    def free(self, blocks: Sequence[int]) -> None:
+        """Return blocks to their owning shards (inferred from the id)."""
+        seen = set()
+        for b in blocks:
+            b = int(b)
+            s, off = divmod(b, self.per_shard)
+            if not (0 <= s < self.n_shards) or off == 0:
+                raise ValueError(f"freeing invalid/reserved block {b}")
+            if b in self._free_sets[s] or b in seen:
+                raise ValueError(f"double free of block {b}")
+            seen.add(b)
+        for b in blocks:
+            b = int(b)
+            s = b // self.per_shard
+            self._free[s].append(b)
+            self._free_sets[s].add(b)
+
+
+def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why ``cfg`` cannot take a paged KV cache, or None when it can.
+
+    The serving layer (``ServerConfig(cache="paged")`` validation) and the
+    launchers call this *before* any cache is built so the user gets one
+    actionable error naming the architecture and the offending sub-cache,
+    instead of a raise from deep inside ``Model.init_cache``."""
+    if cfg.family == "ssm":
+        return ("its recurrent state (mlstm/slstm sub-caches) is O(1) per "
+                "slot — there is no attention KV to page")
+    if cfg.sliding_window:
+        return (f"its sliding-window attention sub-cache (window="
+                f"{cfg.sliding_window}) already bounds per-slot memory "
+                "with the dense ring")
+    return None
 
 
 def used_blocks(n_tokens: int, block_size: int) -> int:
@@ -156,10 +245,10 @@ def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
     """
     from repro.models.layers import TRASH_SLOTS, _INVALID_POS, dtype_of
 
-    if cfg.sliding_window:
+    reason = paged_unsupported_reason(cfg)
+    if reason is not None:
         raise ValueError(
-            "paged KV cache does not support sliding-window targets; the "
-            "dense ring already bounds their per-slot memory by the window")
+            f"paged KV cache does not support {cfg.name!r}: {reason}")
     bs = paged.block_size
     mb = paged.max_blocks(max_len)
     shape_pool = (paged.n_blocks, bs, cfg.n_kv_heads, cfg.head_dim)

@@ -48,21 +48,47 @@ rather than one per worst-case ``max_len`` reservation.
 Host-side logic (queueing, response assembly, detokenisation, block
 accounting) is deliberately thin and never feeds back into the carry
 mid-flight.
+
+Mesh partitioning (``ServerConfig.mesh``)
+-----------------------------------------
+The whole tick group is ONE jitted program over the carry, so scaling it is
+a *partitioning* problem, not a scheduling one: ``mesh=(data, model)``
+builds a :func:`repro.launch.mesh.make_serving_mesh` and runs the same
+three entry points SPMD over it.  Slot-indexed carry fields (``buf``,
+``lengths``, ``budget``, ``temperature``, ``finished``, block tables) shard
+their leading dim on ``data`` — each data shard owns ``slots/data`` whole
+requests and the cycles for different shards run concurrently; target and
+drafter params (heads / ff / vocab, where divisible) shard on ``model``
+per ``repro.sharding.serving_rules``; the paged ``k_pool``/``v_pool`` is
+partitioned under both (physical blocks on ``data``, KV heads on
+``model``).  Admission stays host-driven but becomes sharding-aware: the
+host picks global slot ids exactly as before (the slot-masked prefill
+admits each shard's rows locally), and the paged free list becomes a
+:class:`~repro.models.paging.ShardedBlockPool` so every slot's block ids
+stay inside the pool range of the data shard that owns the slot.  The
+device-resident contract is mesh-invariant: ``step()`` still performs zero
+device→host transfers, and greedy outputs are token-identical to the
+single-device path (data sharding only re-partitions slot-parallel work;
+see ``tests/test_mesh_serving.py``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.session import DecodeSession, DecodeState, EngineConfig
 from repro.models.model import Model
-from repro.models.paging import BlockPool, PagedCacheConfig
+from repro.models.paging import (BlockPool, PagedCacheConfig,
+                                 ShardedBlockPool, paged_unsupported_reason)
+from repro.sharding import axis_rules, serving_rules
 
 
 @dataclasses.dataclass
@@ -111,6 +137,11 @@ class ServerConfig:
     block_size: int = 16                # paged: tokens per KV block
     pool_blocks: int = 0                # paged: physical blocks incl. trash;
                                         # 0 = dense-equivalent capacity
+    # (data, model) serving-mesh shape; None/(1,1) = single device.  Slots
+    # shard over "data" (slots % data == 0 required), target/drafter tensor
+    # dims over "model"; the paged pool is partitioned under both (rounded
+    # up to a data-divisible block count).  Sizing guide: docs/SERVING.md.
+    mesh: Optional[Tuple[int, int]] = None
 
 
 class SpecServer:
@@ -123,25 +154,70 @@ class SpecServer:
         self.ecfg = engine_cfg
 
         b = cfg.slots
+        if cfg.cache not in ("dense", "paged"):
+            raise ValueError(f"unknown cache layout {cfg.cache!r}")
         if cfg.cache == "paged":
-            self.paged = PagedCacheConfig(
-                block_size=cfg.block_size,
-                n_blocks=(cfg.pool_blocks or
-                          1 + b * -(-cfg.max_len // cfg.block_size)))
+            # fail fast, BEFORE any device state is built: name the arch
+            # and the sub-cache that cannot page (the deep init_cache raise
+            # would otherwise surface mid-admission)
+            reason = paged_unsupported_reason(target.cfg)
+            if reason is not None:
+                raise ValueError(
+                    f"ServerConfig(cache='paged') is incompatible with "
+                    f"arch {target.cfg.name!r}: {reason}; use "
+                    f"cache='dense'")
+
+        # -- serving mesh (tentpole): partition the tick over (data, model)
+        mesh_shape = tuple(cfg.mesh) if cfg.mesh else (1, 1)
+        self.mesh = None
+        self.data_shards = 1
+        self.rules = None
+        if mesh_shape != (1, 1):
+            if b % mesh_shape[0]:
+                raise ValueError(
+                    f"slots={b} must be divisible by the data axis "
+                    f"({mesh_shape[0]}) so every shard owns whole slots")
+            from repro.launch.mesh import make_serving_mesh
+            self.mesh = make_serving_mesh(*mesh_shape)
+            self.data_shards = mesh_shape[0]
+            self.rules = serving_rules()
+        self._slots_per_shard = b // self.data_shards
+
+        if cfg.cache == "paged":
+            n_blocks = (cfg.pool_blocks or
+                        1 + b * -(-cfg.max_len // cfg.block_size))
+            # the pool's block dim shards on "data": round to divisible
+            n_blocks = -(-n_blocks // self.data_shards) * self.data_shards
+            self.paged = PagedCacheConfig(block_size=cfg.block_size,
+                                          n_blocks=n_blocks)
             self.max_blocks = self.paged.max_blocks(cfg.max_len)
-            self.pool = BlockPool(self.paged.n_blocks)
             # physical blocks currently owned by each slot (host ledger;
-            # the device only ever sees them through the table rows)
+            # the device only ever sees them through the table rows).  On a
+            # mesh the free list is per-data-shard so a slot's block ids
+            # never leave the pool partition of the shard that owns it.
+            self.pool = (ShardedBlockPool(n_blocks, self.data_shards)
+                         if self.data_shards > 1 else BlockPool(n_blocks))
             self.slot_blocks: List[List[int]] = [[] for _ in range(b)]
-        elif cfg.cache == "dense":
+        else:
             self.paged = None
             self.max_blocks = 1          # dummy block_rows width
             self.pool = None
             self.slot_blocks = [[] for _ in range(b)]
-        else:
-            raise ValueError(f"unknown cache layout {cfg.cache!r}")
         self.state = self.session.init_state(t_params, d_params, b,
                                              cfg.max_len, paged=self.paged)
+        if self.mesh is not None:
+            from repro.launch.shardplan import (decode_state_shardings,
+                                                param_shardings)
+            self._state_shardings = decode_state_shardings(
+                self.state, self.mesh, self.rules)
+            self._t_shardings = param_shardings(t_params, self.mesh,
+                                                self.rules)
+            self._d_shardings = param_shardings(d_params, self.mesh,
+                                                self.rules)
+            # params placed once; every dispatch reuses the committed copies
+            self.t_params = jax.device_put(t_params, self._t_shardings)
+            self.d_params = jax.device_put(d_params, self._d_shardings)
+            self.state = jax.device_put(self.state, self._state_shardings)
 
         self.queue: deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * b
@@ -165,6 +241,13 @@ class SpecServer:
         self._last_cycles = np.zeros((b,), np.int64)
         self._last_commits = np.zeros((b,), np.int64)
 
+        def _rules_ctx():
+            # trace-time: activates `constrain` annotations throughout the
+            # session/model/verify stack when a mesh is set, else a no-op
+            if self.mesh is None:
+                return contextlib.nullcontext()
+            return axis_rules(self.rules, mesh=self.mesh)
+
         def _fused_cycles(tp, dp, state, steps):
             # dynamic trip count: group size varies tick to tick without
             # recompilation, and the loop exits early on-device once every
@@ -178,16 +261,18 @@ class SpecServer:
                 return i + 1, tuple(self.session.cycle(tp, dp,
                                                        DecodeState(*st)))
 
-            _, out = jax.lax.while_loop(cond, body,
-                                        (jnp.int32(0), tuple(state)))
+            with _rules_ctx():
+                _, out = jax.lax.while_loop(cond, body,
+                                            (jnp.int32(0), tuple(state)))
             return DecodeState(*out)
 
         def _admit_all(tp, dp, state, prompts, plens, smask, budgets, temps,
                        block_rows):
-            return self.session.prefill(tp, dp, state, prompts, plens,
-                                        slot_mask=smask, budget=budgets,
-                                        temperature=temps,
-                                        block_rows=block_rows)
+            with _rules_ctx():
+                return self.session.prefill(tp, dp, state, prompts, plens,
+                                            slot_mask=smask, budget=budgets,
+                                            temperature=temps,
+                                            block_rows=block_rows)
 
         def _gather_rows(state, idx):
             return {"buf": state.buf[idx],
@@ -195,10 +280,34 @@ class SpecServer:
                     "stats": {k: v[idx] for k, v in state.stats.items()}}
 
         # the carry is donated: the jitted program reuses its buffers
-        # in place of allocating a fresh carry every dispatch
-        self._cycle = jax.jit(_fused_cycles, donate_argnums=(2,))
-        self._prefill = jax.jit(_admit_all, donate_argnums=(2,))
-        self._gather = jax.jit(_gather_rows)
+        # in place of allocating a fresh carry every dispatch.  On a mesh
+        # the entry points carry explicit NamedShardings: the donated carry
+        # keeps one stable sharding tree across dispatches, host-built
+        # admission arrays (prompts, masks, budgets) land pre-split on
+        # "data", and harvest gathers to a replicated (host-readable) tree.
+        if self.mesh is None:
+            self._cycle = jax.jit(_fused_cycles, donate_argnums=(2,))
+            self._prefill = jax.jit(_admit_all, donate_argnums=(2,))
+            self._gather = jax.jit(_gather_rows)
+        else:
+            repl = NamedSharding(self.mesh, P())
+            row = NamedSharding(self.mesh, P("data"))
+            mat = NamedSharding(self.mesh, P("data", None))
+            self._cycle = jax.jit(
+                _fused_cycles, donate_argnums=(2,),
+                in_shardings=(self._t_shardings, self._d_shardings,
+                              self._state_shardings, repl),
+                out_shardings=self._state_shardings)
+            self._prefill = jax.jit(
+                _admit_all, donate_argnums=(2,),
+                in_shardings=(self._t_shardings, self._d_shardings,
+                              self._state_shardings, mat, row, row, row,
+                              row, mat),
+                out_shardings=self._state_shardings)
+            self._gather = jax.jit(
+                _gather_rows,
+                in_shardings=(self._state_shardings, repl),
+                out_shardings=repl)
 
     # -- host snapshots of the carry (debug/inspection views).  The carry
     # is donated on every dispatch, so these return fresh host copies — a
@@ -278,10 +387,15 @@ class SpecServer:
                 # paged admission is gated by POOL headroom, not slot count:
                 # a free slot with an empty pool stays idle until a harvest
                 # returns blocks (FIFO — later, smaller requests don't jump
-                # a starved head-of-queue request)
-                blocks = self.pool.alloc(
-                    self._blocks_needed(plen, req.params.max_tokens))
+                # a starved head-of-queue request).  On a mesh the headroom
+                # is per data shard: blocks come from the partition of the
+                # shard owning THIS slot, and when that shard is short the
+                # same head request retries on free slots of other shards.
+                blocks = self._pool_alloc(
+                    self._blocks_needed(plen, req.params.max_tokens), slot)
                 if blocks is None:
+                    if self.data_shards > 1:
+                        continue
                     break
                 self.slot_blocks[slot] = blocks
                 rows[slot, :len(blocks)] = blocks
@@ -307,6 +421,14 @@ class SpecServer:
             self.t_params, self.d_params, self.state, prompts, plens,
             smask, budgets, temps, rows)
 
+    def _pool_alloc(self, n: int, slot: int):
+        """Allocate ``n`` blocks for ``slot`` — from the data shard that
+        owns the slot when the pool is sharded (carry rows are partitioned
+        contiguously, so the owning shard is ``slot // slots_per_shard``)."""
+        if self.data_shards > 1:
+            return self.pool.alloc(n, slot // self._slots_per_shard)
+        return self.pool.alloc(n)
+
     def _blocks_needed(self, plen: int, max_tokens: int) -> int:
         """Worst-case physical blocks for a request (see
         :meth:`~repro.models.paging.PagedCacheConfig.request_blocks`): the
@@ -316,11 +438,16 @@ class SpecServer:
         need = self.paged.request_blocks(
             plen, max_tokens, self.session.topology.buffer_margin,
             self.cfg.max_len)
-        if need > self.pool.n_blocks - 1:
+        cap = (self.pool.shard_capacity
+               if isinstance(self.pool, ShardedBlockPool)
+               else self.pool.n_blocks - 1)
+        if need > cap:
+            where = (f"each data shard's pool partition only has {cap}"
+                     if self.data_shards > 1
+                     else f"the pool only has {cap}")
             raise ValueError(
-                f"request needs {need} blocks but the pool only has "
-                f"{self.pool.n_blocks - 1}; raise ServerConfig.pool_blocks "
-                f"or block_size")
+                f"request needs {need} blocks but {where}; raise "
+                f"ServerConfig.pool_blocks or block_size")
         return need
 
     def _group_size(self) -> int:

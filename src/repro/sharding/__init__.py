@@ -2,8 +2,11 @@ from repro.sharding.rules import (
     AxisRules,
     axis_rules,
     constrain,
+    current_mesh,
     current_rules,
     param_specs,
+    sanitize_spec,
+    serving_rules,
     batch_axes,
 )
 
@@ -11,7 +14,10 @@ __all__ = [
     "AxisRules",
     "axis_rules",
     "constrain",
+    "current_mesh",
     "current_rules",
     "param_specs",
+    "sanitize_spec",
+    "serving_rules",
     "batch_axes",
 ]

@@ -17,21 +17,34 @@ Logical axes used across the codebase:
   vocab      vocabulary                      -> "model"
   embed      d_model residual dim            -> None
   ssm_heads  mamba2/xlstm head dim           -> "model"
+  pool_blocks paged-KV physical block dim    -> "data" (serving mesh)
+
+Mesh-aware mode: ``axis_rules(rules, mesh=mesh)`` additionally records the
+mesh, which lets ``constrain`` (and the spec builders) *sanitise* specs —
+any mapping whose mesh-axis product does not divide the tensor dim is
+dropped for that dim instead of erroring (GSPMD silently replicates uneven
+``with_sharding_constraint`` specs wholesale; ``device_put`` rejects them).
+That is what lets one serving rule set cover targets AND tiny drafters
+whose head/vocab counts do not divide the model axis.
 """
 from __future__ import annotations
 
 import contextlib
 import contextvars
+import math
 import re
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisRules = Dict[str, Union[str, Tuple[str, ...], None]]
 
 _RULES: contextvars.ContextVar[Optional[AxisRules]] = contextvars.ContextVar(
     "repro_axis_rules", default=None
+)
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_axis_mesh", default=None
 )
 
 
@@ -39,13 +52,37 @@ def current_rules() -> Optional[AxisRules]:
     return _RULES.get()
 
 
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
 @contextlib.contextmanager
-def axis_rules(rules: AxisRules):
+def axis_rules(rules: AxisRules, mesh: Optional[Mesh] = None):
     token = _RULES.set(rules)
+    m_token = _MESH.set(mesh)
     try:
         yield
     finally:
         _RULES.reset(token)
+        _MESH.reset(m_token)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    """Mesh-device product of one spec entry (axis name or tuple)."""
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return int(math.prod(mesh.shape[n] for n in names))
+
+
+def sanitize_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Drop per-dim mappings that do not divide the dim (see module doc)."""
+    out = []
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, entry in zip(shape, entries):
+        ok = entry is not None and dim % _axis_size(mesh, entry) == 0
+        out.append(entry if ok else None)
+    return P(*out)
 
 
 def single_pod_rules(*, shard_kv_seq: bool = False) -> AxisRules:
@@ -71,6 +108,30 @@ def multi_pod_rules(*, shard_kv_seq: bool = False) -> AxisRules:
     return rules
 
 
+def serving_rules() -> AxisRules:
+    """Rules for the mesh-partitioned serving tick (``launch.mesh
+    .make_serving_mesh``): slot-indexed carry state on ``data``, tensor
+    parallelism for the target/drafter on ``model``, and the paged KV pool
+    partitioned under both (physical blocks on ``data``, KV heads on
+    ``model``).  ``kv_seq`` stays unsharded — a slot's KV ring lives whole
+    on the data shard that owns the slot."""
+    return {
+        "batch": "data",
+        "seq": None,
+        "kv_seq": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "vocab": "model",
+        "embed": None,
+        "fsdp": None,
+        "fsdp_head": None,
+        "ssm_heads": "model",
+        "pool_blocks": "data",
+    }
+
+
 def resolve(*logical: Optional[str]) -> P:
     rules = current_rules()
     if rules is None:
@@ -79,11 +140,23 @@ def resolve(*logical: Optional[str]) -> P:
 
 
 def constrain(x, *logical: Optional[str]):
-    """Annotate ``x`` with the mesh axes the active rules map to."""
+    """Annotate ``x`` with the mesh axes the active rules map to.
+
+    Under a mesh-carrying rules context (``axis_rules(rules, mesh=...)``)
+    the spec is sanitised per-dim against the tensor shape and applied as a
+    :class:`NamedSharding` (usable inside ``jit`` without an ambient mesh);
+    otherwise the bare :class:`PartitionSpec` path is kept for the ambient
+    ``with Mesh:`` callers (dry-run / train)."""
     rules = current_rules()
     if rules is None:
         return x
     spec = resolve(*logical)
+    mesh = current_mesh()
+    if mesh is not None:
+        spec = sanitize_spec(spec, x.shape, mesh)
+        if all(s is None for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
     if all(s is None for s in spec):
         return x
     return jax.lax.with_sharding_constraint(x, spec)
@@ -151,13 +224,22 @@ def _spec_for_path(path: str, ndim: int) -> P:
     return P()
 
 
-def param_specs(params) -> "jax.tree_util.PyTreeDef":
-    """Build a PartitionSpec pytree mirroring ``params`` by path matching."""
+def param_specs(params, *, mesh: Optional[Mesh] = None,
+                ) -> "jax.tree_util.PyTreeDef":
+    """Build a PartitionSpec pytree mirroring ``params`` by path matching.
+
+    With ``mesh`` the specs are additionally sanitised per-dim against the
+    leaf shapes (non-dividing mappings dropped) so the result is directly
+    usable for ``device_put``/``in_shardings``, which reject uneven
+    shardings."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     specs = []
     for path, leaf in flat:
         name = "/".join(
             getattr(k, "key", getattr(k, "name", str(k))) for k in path
         )
-        specs.append(_spec_for_path(name, leaf.ndim))
+        spec = _spec_for_path(name, leaf.ndim)
+        if mesh is not None:
+            spec = sanitize_spec(spec, leaf.shape, mesh)
+        specs.append(spec)
     return jax.tree_util.tree_unflatten(treedef, specs)

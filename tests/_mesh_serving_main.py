@@ -1,0 +1,116 @@
+"""Subprocess payload for the multi-device serving parity test.
+
+Run by ``tests/test_mesh_serving.py`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in the environment
+(host-platform devices must be forced before jax is imported, which is why
+this lives in its own process instead of a fixture).
+
+Asserts, for dense AND paged caches on real ≥2-device meshes:
+
+* the mesh-partitioned ``SpecServer`` produces token-identical greedy
+  output to single-device offline ``DecodeSession.generate`` per request;
+* ``step()`` performs zero device→host transfers under the mesh (the
+  PR 2 sync-free contract is mesh-invariant) — guarded by patching
+  ``jax.device_get``, checking the server's transfer counter, and running
+  the tick under ``jax.transfer_guard_device_to_host("disallow")``.
+
+Prints ``MESH-PARITY-OK`` on success; any assertion kills the process.
+"""
+import os
+
+assert "xla_force_host_platform_device_count" in os.environ.get(
+    "XLA_FLAGS", ""), "run via tests/test_mesh_serving.py (forces devices)"
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.core import EngineConfig, IndependentDrafter
+from repro.core.session import DecodeSession
+from repro.models import build_model
+from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
+
+
+def main():
+    assert len(jax.devices()) >= 8, jax.devices()
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
+                        n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=cfg.vocab_size, dtype="float32")
+    drf = build_model(d_cfg)
+    t_params = tgt.init(jax.random.PRNGKey(1))
+    d_params = drf.init(jax.random.PRNGKey(2))
+    k = 3
+    ecfg = EngineConfig(k=k, rule="mars", mode="greedy", temperature=0.0)
+
+    rng = np.random.default_rng(17)
+    reqs = []
+    for i in range(6):
+        plen = int(rng.integers(4, 13))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(3, cfg.vocab_size, plen).astype(np.int32),
+            params=SamplingParams(max_tokens=[3, 7, 13][i % 3],
+                                  temperature=0.0)))
+
+    # single-device offline reference, fixed prompt width (fewer compiles)
+    session = DecodeSession(tgt, IndependentDrafter(drf, k=k,
+                                                    temperature=0.0), ecfg)
+    offline = {}
+    for req in reqs:
+        plen, mt = len(req.prompt), req.params.max_tokens
+        padded = np.zeros((12,), np.int32)
+        padded[:plen] = req.prompt
+        out = session.generate(t_params, d_params, jnp.asarray(padded)[None],
+                               jnp.asarray([plen], jnp.int32), mt,
+                               jax.random.PRNGKey(0))
+        offline[req.uid] = np.asarray(out["tokens"])[0, plen:plen + mt]
+
+    real_device_get = jax.device_get
+
+    def forbidden(*a, **kw):
+        raise AssertionError("device→host transfer inside step() on mesh")
+
+    for mesh, cache in [((2, 1), "dense"), ((2, 1), "paged"),
+                        ((2, 2), "paged"), ((4, 2), "dense")]:
+        server = SpecServer(
+            tgt, IndependentDrafter(drf, k=k, temperature=0.0),
+            t_params, d_params, ecfg,
+            ServerConfig(slots=4, max_len=96, max_prompt_len=12,
+                         steps_per_sync=3, cache=cache, mesh=mesh))
+        for r in reqs:
+            server.submit(dataclasses.replace(r))
+        for _ in range(10_000):
+            if not server.queue and all(r is None for r in server.slot_req):
+                break
+            server._admit()
+            syncs_before = server.host_syncs
+            jax.device_get = forbidden
+            try:
+                with jax.transfer_guard_device_to_host("disallow"):
+                    server.step()
+            finally:
+                jax.device_get = real_device_get
+            assert server.host_syncs == syncs_before, (mesh, cache)
+            server.sync()
+        resps = {r.uid: r for r in server.run()}
+        assert sorted(resps) == list(range(len(reqs))), (mesh, cache)
+        for req in reqs:
+            got = np.asarray(resps[req.uid].tokens)
+            np.testing.assert_array_equal(
+                got, offline[req.uid],
+                err_msg=f"mesh={mesh} cache={cache} req {req.uid}: "
+                        f"sharded != offline")
+        print(f"  mesh={mesh} cache={cache}: token-identical, "
+              f"0 in-tick syncs ({server.host_syncs} at sync points)")
+
+    print("MESH-PARITY-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Sharded serving-mesh tests.
+
+The multi-device half runs ``tests/_mesh_serving_main.py`` in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — host-platform
+devices must be forced before jax initialises, so the main test process
+(pinned to the single real CPU device, see ``tests/conftest.py``) cannot
+host the mesh itself.  The in-process half covers the host-side pieces that
+need no devices: the per-shard block pool, spec construction, and the
+fail-fast config validation.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke
+from repro.core import EngineConfig
+from repro.models import build_model
+from repro.models.paging import ShardedBlockPool, paged_unsupported_reason
+from repro.serving import ServerConfig, SpecServer
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Per-shard block pool (host side of the partitioned pool)
+# ---------------------------------------------------------------------------
+
+def test_sharded_pool_allocates_within_shard_ranges():
+    pool = ShardedBlockPool(16, n_shards=2)          # shard ranges [0,8) [8,16)
+    assert pool.shard_capacity == 7                  # first block reserved
+    a = pool.alloc(3, shard=0)
+    b = pool.alloc(3, shard=1)
+    assert all(1 <= blk < 8 for blk in a)            # block 0 = trash
+    assert all(9 <= blk < 16 for blk in b)           # block 8 reserved
+    assert pool.available(0) == 4 and pool.available(1) == 4
+    pool.free(a)
+    assert pool.available(0) == 7
+
+
+def test_sharded_pool_exhaustion_is_per_shard():
+    pool = ShardedBlockPool(8, n_shards=2)           # 3 usable per shard
+    assert pool.alloc(4, shard=0) is None            # too big for one shard
+    assert pool.alloc(3, shard=0) is not None
+    assert pool.alloc(1, shard=0) is None            # shard 0 empty...
+    assert pool.alloc(3, shard=1) is not None        # ...shard 1 unaffected
+
+
+def test_sharded_pool_rejects_bad_frees():
+    pool = ShardedBlockPool(8, n_shards=2)
+    with pytest.raises(ValueError, match="invalid/reserved"):
+        pool.free([0])                               # trash block
+    with pytest.raises(ValueError, match="invalid/reserved"):
+        pool.free([4])                               # shard 1's reserved block
+    blocks = pool.alloc(2, shard=0)
+    pool.free(blocks)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(blocks[:1])
+    with pytest.raises(ValueError):
+        ShardedBlockPool(9, n_shards=2)              # not divisible
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast config validation (no deep init_cache raise)
+# ---------------------------------------------------------------------------
+
+def test_paged_server_fails_fast_on_ssm_arch():
+    cfg = dataclasses.replace(get_smoke("xlstm-1.3b"), dtype="float32")
+    target = build_model(cfg)
+    with pytest.raises(ValueError) as e:
+        SpecServer(target, None, None, None, EngineConfig(k=2),
+                   ServerConfig(slots=2, cache="paged"))
+    msg = str(e.value)
+    assert cfg.name in msg and "mlstm/slstm" in msg and "dense" in msg
+
+
+def test_paged_server_fails_fast_on_sliding_window():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32",
+                              sliding_window=8)
+    target = build_model(cfg)
+    with pytest.raises(ValueError) as e:
+        SpecServer(target, None, None, None, EngineConfig(k=2),
+                   ServerConfig(slots=2, cache="paged"))
+    assert "sliding-window" in str(e.value) and cfg.name in str(e.value)
+
+
+def test_mesh_slots_divisibility_checked_first():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    target = build_model(cfg)
+    # raised before any mesh/device work, so it runs on the 1-device suite
+    with pytest.raises(ValueError, match="divisible by the data axis"):
+        SpecServer(target, None, None, None, EngineConfig(k=2),
+                   ServerConfig(slots=3, mesh=(2, 1)))
+
+
+def test_serving_mesh_needs_devices():
+    from repro.launch.mesh import make_serving_mesh
+    if len(jax.devices()) >= 2:
+        pytest.skip("test assumes the single-device suite process")
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_serving_mesh(2, 1)
+
+
+# ---------------------------------------------------------------------------
+# Carry / pool partition specs (pure data, no mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_decode_state_specs_cover_carry_and_paged_pool():
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.session import DecodeSession
+    from repro.core import IndependentDrafter
+    from repro.configs.base import ModelConfig
+    from repro.launch.shardplan import decode_state_specs
+    from repro.models.paging import PagedCacheConfig
+    from repro.sharding import serving_rules
+
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
+                        n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=cfg.vocab_size, dtype="float32")
+    drf = build_model(d_cfg)
+    session = DecodeSession(tgt, IndependentDrafter(drf, k=2),
+                            EngineConfig(k=2))
+    t_params = tgt.init(jax.random.PRNGKey(0))
+    d_params = drf.init(jax.random.PRNGKey(1))
+    state = session.init_state(t_params, d_params, 4, 64,
+                               paged=PagedCacheConfig(8, 33))
+    specs = decode_state_specs(state, serving_rules())
+    assert specs.buf == P("data", None)
+    assert specs.finished == P("data")
+    assert specs.budget == P("data")
+    assert specs.key == P()
+    lay = specs.t_cache["layers"]
+    assert lay["k_pool"] == P(None, "data", None, "model", None)
+    assert lay["table"] == P(None, "data", None)
+    # drafter cache rows are slot-indexed too
+    assert specs.d_state["cache"]["index"] == P("data")
+
+
+# ---------------------------------------------------------------------------
+# Multi-device parity (subprocess: forced 8 host devices)
+# ---------------------------------------------------------------------------
+
+def test_sharded_server_matches_offline_subprocess():
+    """Dense AND paged serving on real ≥2-device meshes must be
+    token-identical to the single-device offline path, with zero in-tick
+    device→host transfers (see tests/_mesh_serving_main.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), env.get("PYTHONPATH", "")]).rstrip(
+        os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests",
+                                      "_mesh_serving_main.py")],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert proc.returncode == 0, (
+        f"mesh parity subprocess failed\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr}")
+    assert "MESH-PARITY-OK" in proc.stdout, proc.stdout
