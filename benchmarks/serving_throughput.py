@@ -348,6 +348,158 @@ def longctx_admission(target, t_params, draft, d_params, *, k=3):
 
 
 # ---------------------------------------------------------------------------
+# Prefix reuse: shared-system-prompt and multi-turn serving through the
+# refcounted block-sharing prefix cache
+# ---------------------------------------------------------------------------
+
+def prefix_reuse(target, t_params, draft, d_params, *, quick, k=3):
+    """Three measurements of ``prefix_cache="on"`` against ``"off"`` on the
+    same paged pool:
+
+    * **prefill FLOPs** — N requests share one long system prompt; with the
+      cache on, only the first pays the cold prefill (per data shard) and
+      every follower decodes its own suffix only.  Two counters: useful
+      per-request positions decoded (``prefill_tokens`` — the KV work
+      skipped) and batched-window positions (``prefill_window_tokens`` —
+      the dispatched program's compute incl. masked rows; a cold admit
+      sharing a pass with cached ones forces the full window on everyone,
+      so this ratio is the honest lower bound on realised savings).
+      Greedy outputs are asserted byte-identical to ``off``.
+    * **admission concurrency at equal pool bytes** — shared blocks are
+      counted once in pool headroom, so a pool sized for ~2 cold requests
+      admits the whole shared-prefix batch concurrently.
+    * **multi-turn** — each turn resends the conversation so far; the hit
+      rate climbs as the cache absorbs the history.
+
+    Returns CSV rows + the BENCH_serving.json summary dict."""
+    sys_len = 64 if quick else 512
+    n_req, suffix_len, max_tokens, bs, slots = 16, 8, 8, 16, 8
+    plen = sys_len + suffix_len
+    max_len = plen + max_tokens + k + 4
+    ecfg = EngineConfig(k=k, rule="strict", mode="greedy", temperature=0.0)
+
+    def mk(prefix, pool_blocks=0):
+        return SpecServer(
+            target, IndependentDrafter(draft, k=k, temperature=0.0),
+            t_params, d_params, ecfg,
+            ServerConfig(slots=slots, max_len=max_len, max_prompt_len=plen,
+                         cache="paged", block_size=bs,
+                         pool_blocks=pool_blocks, prefix_cache=prefix))
+
+    from benchmarks import common as C
+    cor = C.corpus()
+    system = np.asarray(cor.sample_batch(1, sys_len, seed=11)[0], np.int32)
+    reqs = []
+    for i in range(n_req):
+        tail = np.asarray(cor.sample_batch(1, suffix_len,
+                                           seed=300 + i)[0], np.int32)
+        reqs.append(Request(uid=i, prompt=np.concatenate([system, tail]),
+                            params=SamplingParams(max_tokens=max_tokens,
+                                                  temperature=0.0)))
+
+    # -- prefill FLOPs + output parity: pass 1 (cold index) gives the
+    # FLOPs counters and the parity assertion; pass 2 (warm compile cache
+    # AND warm prefix index) gives steady-state tok/s
+    print(f"\nprefix reuse ({n_req} requests, {sys_len}-token shared "
+          f"system prompt, block {bs}):")
+    outs, flops, win, toks_s = {}, {}, {}, {}
+    hit = None
+    for mode in ("off", "on"):
+        server = mk(mode)
+        for r in reqs:
+            server.submit(dataclasses.replace(r))
+        resps = server.run()
+        outs[mode] = {r.uid: np.asarray(r.tokens) for r in resps}
+        flops[mode] = server.prefill_tokens
+        win[mode] = server.prefill_window_tokens
+        if mode == "on":
+            # cold-index baseline, BEFORE the warm pass inflates it
+            hit = server.prefix.summary()
+        for r in reqs:
+            server.submit(dataclasses.replace(r))
+        t0 = time.time()
+        warm = server.run()
+        wall = time.time() - t0
+        toks_s[mode] = sum(len(r.tokens) for r in warm) / wall
+        print(f"  prefix {mode:3s}: {toks_s[mode]:8.1f} tok/s steady-state, "
+              f"{flops[mode]} cold useful prefill positions "
+              f"({win[mode]} batched-window positions)")
+    del server          # free pool buffers before the sections below
+    for uid in outs["off"]:
+        np.testing.assert_array_equal(
+            outs["on"][uid], outs["off"][uid],
+            err_msg=f"prefix-cache req {uid} diverged from cold cache")
+    flops_ratio = flops["on"] / max(flops["off"], 1)
+    window_ratio = win["on"] / max(win["off"], 1)
+
+    # -- admission concurrency at equal pool bytes: pool holds ~2 cold
+    # requests' worth of blocks
+    from repro.models.paging import PagedCacheConfig
+    per_req = PagedCacheConfig(bs, 8).request_blocks(
+        plen, max_tokens, k + 2, max_len)
+    pool_blocks = 2 * per_req + 2
+    off_resps, off_peak = _run_tracking_concurrency(
+        mk("off", pool_blocks), [dataclasses.replace(r) for r in reqs])
+    on_resps, on_peak = _run_tracking_concurrency(
+        mk("on", pool_blocks), [dataclasses.replace(r) for r in reqs])
+    assert len(off_resps) == len(on_resps) == n_req
+    conc_ratio = on_peak / max(off_peak, 1)
+
+    # -- multi-turn: each turn resends prompt + response + a new user turn
+    mt = mk("on")
+    convo = np.asarray(cor.sample_batch(1, 16, seed=99)[0], np.int32)
+    n_turns = 4
+    for t in range(n_turns):
+        mt.submit(Request(uid=t, prompt=convo.copy(),
+                          params=SamplingParams(max_tokens=max_tokens,
+                                                temperature=0.0)))
+        resp = mt.run()[0]
+        user = np.asarray(cor.sample_batch(1, 8, seed=500 + t)[0], np.int32)
+        convo = np.concatenate([convo, np.asarray(resp.tokens, np.int32),
+                                user])
+        if len(convo) > plen - 1:
+            break
+    mt_hit = mt.prefix.summary()
+
+    print(f"  prefill positions: on {flops['on']} vs off {flops['off']} "
+          f"= {flops_ratio:.2f}x useful (hit rate {hit['hit_rate']:.0%}); "
+          f"batched-window {window_ratio:.2f}x")
+    print(f"  concurrency at a {pool_blocks}-block pool: "
+          f"on {on_peak} vs off {off_peak} = {conc_ratio:.1f}x")
+    print(f"  multi-turn: reuse rate {mt_hit['reuse_rate']:.0%} over "
+          f"{mt_hit['lookups']} turns, {mt_hit['cow_clones']} COW clones")
+    rows = [
+        ("serving/prefix_tok_s", 0.0,
+         f"on={toks_s['on']:.1f};off={toks_s['off']:.1f}"),
+        ("serving/prefix_flops", 0.0,
+         f"on={flops['on']};off={flops['off']};ratio={flops_ratio:.3f};"
+         f"window_ratio={window_ratio:.3f}"),
+        ("serving/prefix_hit_rate", 0.0,
+         f"hit={hit['hit_rate']:.3f};reuse={hit['reuse_rate']:.3f}"),
+        ("serving/prefix_concurrency", 0.0,
+         f"on={on_peak};off={off_peak};x={conc_ratio:.1f}"),
+        ("serving/prefix_multiturn", 0.0,
+         f"reuse={mt_hit['reuse_rate']:.3f};cow={mt_hit['cow_clones']}"),
+    ]
+    summary = {
+        "system_prompt_tokens": sys_len, "requests": n_req,
+        "tok_s_on": round(toks_s["on"], 1),
+        "tok_s_off": round(toks_s["off"], 1),
+        "prefill_positions_on": int(flops["on"]),
+        "prefill_positions_off": int(flops["off"]),
+        "prefill_ratio": round(flops_ratio, 3),
+        "prefill_window_ratio": round(window_ratio, 3),
+        "hit_rate": hit["hit_rate"], "reuse_rate": hit["reuse_rate"],
+        "blocks_shared": hit["blocks_shared"],
+        "cow_clones": hit["cow_clones"],
+        "concurrency_on": int(on_peak), "concurrency_off": int(off_peak),
+        "concurrency_ratio": round(conc_ratio, 2),
+        "multiturn_reuse_rate": mt_hit["reuse_rate"],
+    }
+    return rows, summary
+
+
+# ---------------------------------------------------------------------------
 # Mesh sweep: tok/s scaling of the partitioned tick vs one device
 # ---------------------------------------------------------------------------
 
@@ -434,6 +586,11 @@ def main():
     ap.add_argument("--cache", default="dense", choices=["dense", "paged"],
                     help="KV layout of the device-resident server (the "
                          "legacy baseline always runs dense)")
+    ap.add_argument("--prefix-cache", default="off", choices=["off", "on"],
+                    help="paged only: refcounted prefix-block sharing; "
+                         "adds a prefix-reuse section (shared system "
+                         "prompt, equal-pool admission, multi-turn) to the "
+                         "report and BENCH_serving.json")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="add a mesh-sweep section: tok/s of the "
                          "(data, model)-partitioned server vs one device "
@@ -457,13 +614,15 @@ def main():
         target, t_params, draft, d_params = C.get_pair()
         n_req, max_tokens = args.requests, args.max_tokens
 
+    if args.prefix_cache == "on" and args.cache != "paged":
+        raise SystemExit("--prefix-cache on requires --cache paged")
     ecfg = EngineConfig(k=args.k, rule="mars", mode="sample",
                         temperature=1.0, guard="margin")
     scfg = ServerConfig(slots=args.slots,
                         max_len=args.prompt_len + max_tokens + args.k + 4,
                         max_prompt_len=args.prompt_len,
                         steps_per_sync=args.steps_per_sync,
-                        cache=args.cache)
+                        cache=args.cache, prefix_cache=args.prefix_cache)
     reqs = _requests(n_req, max_tokens, args.prompt_len, C.corpus())
 
     def new_server():
@@ -505,6 +664,12 @@ def main():
     lc_rows, lc_summary = longctx_admission(target, t_params, draft,
                                             d_params, k=min(args.k, 3))
     rows += lc_rows
+    prefix_summary = None
+    if args.prefix_cache == "on":
+        p_rows, prefix_summary = prefix_reuse(target, t_params, draft,
+                                              d_params, quick=args.quick,
+                                              k=min(args.k, 3))
+        rows += p_rows
     mesh_summary = None
     if mesh_shape is not None:
         m_rows, mesh_summary = mesh_sweep(draft, d_params, mesh_shape,
@@ -531,6 +696,7 @@ def main():
                    "syncs_per_tick": round(old["syncs_per_tick"], 2)},
         "speedup_vs_legacy": round(speedup, 2),
         "longctx_admission": lc_summary,
+        "prefix": prefix_summary,
         "mesh": mesh_summary,
     }
     with open(BENCH_JSON, "w") as f:

@@ -32,9 +32,14 @@ Rollback scheme (shared by all topologies via :meth:`DecodeSession.rollback`):
   are masked by position and overwritten later.  Under the paged layout the
   rewind is the device half of a *block-list truncate*: the slot keeps its
   (worst-case, admission-reserved) blocks mid-flight with stale entries
-  position-masked inside them, and the host frees the whole list back to
-  the ``BlockPool`` when it harvests the finished request
-  (``paging.used_blocks`` computes the live prefix for finer truncation);
+  position-masked inside them, and the host drops the whole list's
+  references back to the ``BlockPool`` when it harvests the finished
+  request (``paging.used_blocks`` computes the live prefix for finer
+  truncation).  With the serving prefix cache a slot's leading blocks may
+  be *shared* (refcounted, mapped read-only at ``prefill(start_pos=)``);
+  every write — speculative drafts included — lands at positions ≥ the
+  cached-prefix start, so the rewind range lies in private blocks only
+  and sharing never constrains rollback;
 * recurrent targets (ssm / hybrid) and virtual (non-writing) score passes
   **recompute**: re-apply ``[last_token, committed...]`` from the pre-cycle
   state with a token mask, so the cache only ever holds committed tokens.
@@ -229,7 +234,8 @@ class DecodeSession:
 
     # -- state construction ---------------------------------------------------
     def init_state(self, t_params, d_params, batch: int, max_len: int, *,
-                   key=None, encoder_frames=None, paged=None) -> DecodeState:
+                   key=None, encoder_frames=None, paged=None,
+                   paged_shards: int = 1) -> DecodeState:
         """Fresh all-idle carry (``finished`` everywhere); rows come alive
         via :meth:`prefill`.
 
@@ -237,8 +243,9 @@ class DecodeSession:
         the target cache over a shared block pool instead of dense per-slot
         rings.  Paged slots start *unmapped*: admission must hand
         :meth:`prefill` the freshly allocated ``block_rows`` before any KV
-        can persist.  The drafter keeps its own (small, dense) state either
-        way."""
+        can persist.  ``paged_shards`` routes each slot's masked writes to
+        a shard-local trash block on a serving mesh.  The drafter keeps its
+        own (small, dense) state either way."""
         if key is None:
             key = jax.random.PRNGKey(0)
         return DecodeState(
@@ -247,7 +254,8 @@ class DecodeSession:
             finished=jnp.ones((batch,), bool),
             t_cache=self.target.init_cache(t_params, batch, max_len,
                                            encoder_frames=encoder_frames,
-                                           paged=paged),
+                                           paged=paged,
+                                           paged_shards=paged_shards),
             d_state=self.drafter.init_state(d_params, batch, max_len),
             last_token=jnp.zeros((batch,), jnp.int32),
             key=key,
@@ -260,7 +268,9 @@ class DecodeSession:
                 prompt: jnp.ndarray, prompt_len: jnp.ndarray,
                 slot_mask: Optional[jnp.ndarray] = None,
                 budget=None, temperature=None,
-                block_rows=None) -> DecodeState:
+                block_rows=None, start_pos=None,
+                cow_src=None, cow_dst=None,
+                decode_tokens=None, decode_off=None) -> DecodeState:
         """Admit prompts into the rows of ``slot_mask`` (None = all rows).
 
         Resets the admitted rows' caches, writes the prompt into the buffer,
@@ -279,6 +289,23 @@ class DecodeSession:
         target cache to their freshly allocated physical blocks before the
         prompt KV is written; the scheduler allocates them from its
         ``BlockPool`` and frees them again at harvest.
+
+        Cached-prefix admission (serving prefix cache, paged caches only):
+        ``start_pos`` (B,) says the first ``start_pos[b]`` prompt tokens of
+        each admitted row already have KV in the pool — their blocks ride
+        in read-only through ``block_rows`` — so the prompt decode is
+        *partial*: it runs from the divergence point only, with the cached
+        positions seeded valid and ``index`` pre-set to ``start_pos``.
+        ``cow_src``/``cow_dst`` (B,) clone a partially matching shared tail
+        block into the slot's private block *before* any write lands
+        (copy-on-write); slots with nothing to clone pass their trash id
+        for both.  ``decode_tokens`` (B, W) + ``decode_off`` (scalar)
+        restrict the prompt decode to the host-sliced window
+        ``prompt[:, off:off+W]`` — the un-cached tail across all admitted
+        rows, which is where the prefill FLOPs are actually saved (the jit
+        re-specialises per window width, so callers bucket W); the caller
+        guarantees ``off + W == S`` and ``off <= min(start_pos)`` over
+        admitted rows.
         """
         state = DecodeState(*state)
         b, s = prompt.shape
@@ -302,6 +329,14 @@ class DecodeSession:
             # trash block
             t_cache = self.target.assign_blocks(t_cache, slot_mask,
                                                 block_rows)
+        if cow_src is not None:
+            t_cache = self.target.clone_blocks(
+                t_cache, jnp.asarray(cow_src, jnp.int32),
+                jnp.asarray(cow_dst, jnp.int32))
+        start = None
+        if start_pos is not None:
+            start = jnp.asarray(start_pos, jnp.int32)
+            t_cache = self.target.seed_prefix(t_cache, slot_mask, start)
         d_state = self.drafter.reset_slots(state.d_state, slot_mask)
 
         width = state.buf.shape[1]
@@ -313,15 +348,28 @@ class DecodeSession:
         stats = {k: jnp.where(slot_mask, 0, v)
                  for k, v in state.stats.items()}
 
-        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if decode_tokens is None:
+            off = jnp.int32(0)
+            tok_win, w = prompt, s
+        else:
+            off = jnp.asarray(decode_off, jnp.int32)
+            tok_win = decode_tokens
+            w = tok_win.shape[1]
+        pos = off + jnp.broadcast_to(
+            jnp.arange(w, dtype=jnp.int32)[None], (b, w))
         pmask = slot_mask[:, None] & (pos < (prompt_len - 1)[:, None])
-        out = self.target.decode(t_params, prompt, pos, t_cache,
+        if start is not None:
+            # cached prefix: decode only from each row's divergence point
+            pmask = pmask & (pos >= start[:, None])
+        out = self.target.decode(t_params, tok_win, pos, t_cache,
                                  token_mask=pmask,
                                  with_features=self.drafter.wants_features)
         if self.drafter.wants_features:
             _, t_cache, pfeats = out
             # ground the drafter feature on the last *cached* prompt token
-            idx = jnp.clip(prompt_len - 2, 0, s - 1)[:, None, None]
+            # (window-relative; the scheduler never lets a cached prefix
+            # swallow it for feature-carrying drafters)
+            idx = jnp.clip(prompt_len - 2 - off, 0, w - 1)[:, None, None]
             feat0 = jnp.take_along_axis(
                 pfeats, jnp.broadcast_to(idx, (b, 1, pfeats.shape[-1])),
                 1)[:, 0]

@@ -15,7 +15,10 @@ Two layouts share the same kernel body:
   operand (``pltpu.PrefetchScalarGridSpec``), so the k/v BlockSpec index
   map resolves ``table[i, j]`` *before* the kernel body runs and the DMA
   engine fetches physical pool block ``table[i, j]`` directly from HBM —
-  the gather costs nothing over the dense layout.
+  the gather costs nothing over the dense layout.  Tables may alias the
+  same physical block across batch rows (shared prefix blocks under the
+  serving prefix cache): the kernel only ever reads through the table, so
+  aliasing is free — two rows DMA the same block independently.
 
 Block shapes: q (1, H, D); k/v (1, BL, Hkv, D).  D and BL are chosen
 lane-aligned (multiples of 128) by the wrapper; for the paged kernel BL is

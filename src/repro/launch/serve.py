@@ -64,6 +64,14 @@ def main():
     ap.add_argument("--pool-blocks", type=int, default=0,
                     help="paged: physical blocks in the shared pool "
                          "(0 = dense-equivalent capacity)")
+    ap.add_argument("--prefix-cache", default="off", choices=["off", "on"],
+                    help="paged only: share published KV blocks between "
+                         "requests with common token prefixes (refcounted "
+                         "read-only mapping + copy-on-write; admission "
+                         "prefills from the divergence point only)")
+    ap.add_argument("--min-match-blocks", type=int, default=1,
+                    help="prefix cache: smallest cached run (in blocks) "
+                         "worth mapping shared")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="partition the serving tick over a (data, model) "
                          "mesh: slots shard over data, target/drafter "
@@ -85,6 +93,9 @@ def main():
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, dtype="float32")
+    if args.prefix_cache == "on" and args.cache != "paged":
+        raise SystemExit("--prefix-cache on requires --cache paged "
+                         "(prefix reuse shares physical KV blocks)")
     if args.cache == "paged":
         # launcher-level fail-fast: name the arch and the sub-cache that
         # cannot page instead of raising deep inside Model.init_cache
@@ -133,7 +144,9 @@ def main():
         ServerConfig(slots=args.slots, max_len=256, max_prompt_len=32,
                      steps_per_sync=args.steps_per_sync, cache=args.cache,
                      block_size=args.block_size,
-                     pool_blocks=args.pool_blocks, mesh=mesh_shape))
+                     pool_blocks=args.pool_blocks, mesh=mesh_shape,
+                     prefix_cache=args.prefix_cache,
+                     min_match_blocks=args.min_match_blocks))
 
     # per-request sampling params ride the device carry: each request may
     # ask for its own temperature and token budget
@@ -153,6 +166,12 @@ def main():
               f"tau={r.tau:4.2f} latency={r.latency_s:5.2f}s")
     print(f"host syncs: {server.host_syncs} across {server.step_calls} "
           f"fused tick groups (tick loop itself is sync-free)")
+    if server.prefix is not None:
+        s = server.prefix.summary()
+        print(f"prefix cache: hit rate {s['hit_rate']:.0%}, "
+              f"{s['tokens_reused']}/{s['tokens_total']} prompt tokens "
+              f"reused, {s['blocks_shared']} shared block mappings, "
+              f"{s['cow_clones']} COW clones")
 
 
 if __name__ == "__main__":

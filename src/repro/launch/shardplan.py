@@ -132,6 +132,8 @@ def _cache_spec_for_path(path: str, ndim: int, rules) -> P:
         return pad([rules.get("pool_blocks"), None, kvh, None])
     if path.endswith("table"):
         return pad([b, None])
+    if path.endswith("trash"):            # per-slot trash block id
+        return pad([b])
     if path.endswith("/k") or path.endswith("/v"):
         return pad([b, kv, kvh, None])
     if path.endswith("pos"):

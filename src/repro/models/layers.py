@@ -5,6 +5,11 @@ softmax, ring-buffer sliding-window KV cache), MLPs and capacity-based MoE.
 the dense per-slot ring built here (``make_attention_cache``) and the paged
 block-table cache (``repro.models.paging``); both share the position-based
 masking rules, so the speculative engine's rollback contract is identical.
+Under the serving prefix cache a paged slot's table may mix *shared*
+(read-only, refcounted) and private blocks: reads gather through the table
+either way, while writes — which only ever target positions ≥ the slot's
+cached-prefix start — land in private blocks by construction, with masked
+tokens routed to the slot's shard-local trash block.
 
 Conventions
 -----------
@@ -479,7 +484,10 @@ def attention_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
             # paged block-table cache: scatter through the table, gather
             # one pool block per online-softmax step.  The uniform-slots
             # fast path does not apply — the physical write location
-            # differs per slot by construction.
+            # differs per slot by construction.  Tables may alias shared
+            # prefix blocks across slots (prefix cache); the gather is
+            # oblivious to sharing and the write path never receives a
+            # position inside a shared block.
             new_cache = P.paged_cache_write(cache, k, v, positions)
             # under a serving mesh the pool is partitioned on blocks (data)
             # × kv heads (model); per-shard block allocation keeps the

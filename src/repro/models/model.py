@@ -22,8 +22,10 @@ docs/ARCHITECTURE.md):
 * attention families with the **paged** block-table cache
   (``init_cache(..., paged=...)``) do the same index rewind on device —
   the slot keeps its admission-reserved blocks mid-flight — and the
-  block-list *truncate* is host-side: the scheduler returns the finished
-  slot's blocks to the pool at harvest;
+  block-list *truncate* is host-side: the scheduler drops the finished
+  slot's block references at harvest (under the serving prefix cache the
+  leading blocks may be shared/refcounted: the rewind range always lies in
+  the slot's private blocks, so sharing never constrains rollback);
 * recurrent families (ssm / hybrid) cannot rewind: the engine re-applies
   the committed tokens from the pre-cycle state under a token mask, so
   their state only ever reflects committed tokens.
@@ -320,13 +322,15 @@ class Model:
     # -- caches -------------------------------------------------------------------
     def init_cache(self, params, batch: int, max_len: int, *,
                    encoder_frames: Optional[jnp.ndarray] = None,
-                   paged=None) -> Params:
+                   paged=None, paged_shards: int = 1) -> Params:
         """``paged`` (a :class:`repro.models.paging.PagedCacheConfig`) swaps
         the dense per-slot KV ring for the shared block pool + per-slot
         block tables.  Only attention KV pages: recurrent state (mamba /
         xlstm) is O(1) per slot, and the whisper cross-KV is a fixed,
         always-full encoder block — both stay dense.  Pure-ssm targets have
-        no KV to page, so ``paged`` is an error there."""
+        no KV to page, so ``paged`` is an error there.  ``paged_shards``
+        (the serving mesh's data-axis size) gives each slot a shard-local
+        trash block so masked paged writes never cross shards."""
         cfg = self.cfg
         fam = cfg.family
 
@@ -334,7 +338,8 @@ class Model:
             if paged is not None:
                 from repro.models.paging import make_paged_attention_cache
                 return make_paged_attention_cache(cfg, batch, max_len, paged,
-                                                  n_layers=n_layers)
+                                                  n_layers=n_layers,
+                                                  data_shards=paged_shards)
             return L.make_attention_cache(cfg, batch, max_len,
                                           n_layers=n_layers)
 
@@ -526,12 +531,21 @@ class Model:
 
         def wipe_attn(lay):
             # invalidating stored positions is a full wipe for both layouts;
-            # a paged slot additionally unmaps its table rows (block 0 =
-            # trash) so writes before the host re-maps the slot are dropped
+            # a paged slot additionally unmaps its table rows (the slot's
+            # trash block — shard-local on a mesh) so writes before the
+            # host re-maps the slot are dropped.  Pool CONTENT is never
+            # wiped: published prefix blocks outlive the slots that wrote
+            # them.
             lay = dict(lay)
             lay["pos"] = wipe(lay["pos"], 1, _INVALID_POS)
             if "table" in lay:
-                lay["table"] = wipe(lay["table"], 1, 0)
+                trash = lay.get("trash")
+                if trash is None:      # hand-built caches (pre-trash schema)
+                    trash = jnp.zeros(lay["table"].shape[:-1], jnp.int32)
+                m = slot_mask.reshape((1,) * (lay["table"].ndim - 2)
+                                      + (-1, 1))
+                lay["table"] = jnp.where(m, trash[..., :, None],
+                                         lay["table"])
             return lay
 
         if fam in ("dense", "moe", "vlm", "audio"):
@@ -561,6 +575,37 @@ class Model:
             return cache
         new = dict(cache)
         new[key] = assign_block_rows(cache[key], slot_mask, rows)
+        return new
+
+    def clone_blocks(self, cache: Params, src: jnp.ndarray,
+                     dst: jnp.ndarray) -> Params:
+        """Copy pool rows of physical blocks ``src`` (B,) into ``dst`` (B,)
+        across every paged attention layer — the device half of
+        copy-on-write (see :func:`repro.models.paging.cow_clone_blocks`).
+        No-op on dense caches."""
+        from repro.models.paging import cow_clone_blocks, is_paged
+        key = "attn" if self.cfg.family == "hybrid" else "layers"
+        if key not in cache or not is_paged(cache[key]):
+            return cache
+        new = dict(cache)
+        new[key] = cow_clone_blocks(cache[key], src, dst)
+        return new
+
+    def seed_prefix(self, cache: Params, slot_mask: jnp.ndarray,
+                    start: jnp.ndarray) -> Params:
+        """Mark positions ``[0, start[b])`` of the admitted slots as cached
+        (stored pos valid, ``index = start``) — the device half of mapping
+        an already-written shared KV prefix into a fresh slot so the
+        admission prefill can start from the divergence point.  No-op on
+        dense caches (``start`` must then be all zero)."""
+        from repro.models.paging import is_paged, seed_prefix_positions
+        key = "attn" if self.cfg.family == "hybrid" else "layers"
+        if key not in cache or not is_paged(cache[key]):
+            return cache
+        new = dict(cache)
+        new[key] = seed_prefix_positions(cache[key], slot_mask, start)
+        new["index"] = jnp.where(slot_mask, start.astype(jnp.int32),
+                                 cache["index"])
         return new
 
     # convenience -------------------------------------------------------------

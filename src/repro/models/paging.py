@@ -37,6 +37,31 @@ by stored position, and no allocation can ever be needed mid-flight.
 truncation (e.g. reclaiming the unused tail of an EOS-terminated slot
 before harvest).
 
+Block sharing (prefix cache)
+----------------------------
+Blocks are **refcounted**: every live mapping of a physical block into some
+slot's table holds one reference (``alloc`` creates the first, ``acquire``
+adds more when the serving prefix cache maps an already-written block
+read-only into a new slot).  ``free`` drops a reference; a block whose count
+hits zero either returns to the free list or — when a registered
+``retain_cb`` says its content is published in the prefix index — parks in
+a **reclaimable LRU** from which future allocations evict
+(``evict_cb`` notifies the index).  ``available`` counts free + reclaimable,
+so cached content never blocks admission.  The write-side invariant the
+serving layer maintains on top: *a block with refcount > 1 — or refcount 1
+held by another slot — is never written*; a slot that must write into a
+shared tail block copies it first (:func:`cow_clone_blocks`, the device
+half of copy-on-write) and swaps its table entry before the write lands.
+
+Per-shard trash blocks
+----------------------
+On a serving mesh the pool's block dim shards over ``data``; a masked or
+unmapped write routed to the *global* block 0 would scatter cross-shard.
+The cache therefore carries a per-slot ``trash`` block id
+(:func:`slot_trash_blocks`: the reserved first block of the slot's own pool
+partition — block 0 on one device), and ``paged_cache_write`` routes masked
+writes there.  A table entry equal to the slot's trash id means *unmapped*.
+
 ``cfg.sliding_window`` targets keep the dense ring (the window already
 bounds their per-slot memory); requesting a paged cache for one is an error.
 """
@@ -44,7 +69,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -89,11 +115,21 @@ class PagedCacheConfig:
 
 
 class BlockPool:
-    """Host-side free-list allocator over the physical blocks of a pool.
+    """Host-side refcounting free-list allocator over the physical blocks
+    of a pool.
 
     Lives in the scheduler; the device never sees it.  Block 0 (trash) is
     never handed out.  ``alloc`` is all-or-nothing so a partially admitted
     request can never strand blocks.
+
+    Every live table mapping of a block holds one reference: ``alloc``
+    creates the first, ``acquire`` adds one per extra slot sharing the
+    block (prefix cache), ``free`` drops one.  A block reaching refcount 0
+    consults ``retain_cb`` (set by the prefix cache): published blocks park
+    in a reclaimable **LRU** — still counted by ``available`` — and are
+    evicted (oldest first, ``evict_cb`` notified) when the free list runs
+    short; unpublished blocks return to the free list immediately, exactly
+    the pre-prefix-cache behaviour.
     """
 
     def __init__(self, n_blocks: int):
@@ -102,29 +138,87 @@ class BlockPool:
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(1, n_blocks))
         self._free_set = set(self._free)      # O(1) double-free detection
+        self._ref: Dict[int, int] = {}        # block -> live references
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        self.retain_cb: Optional[Callable[[int], bool]] = None
+        self.evict_cb: Optional[Callable[[int], None]] = None
 
     @property
     def available(self) -> int:
-        return len(self._free)
+        """Allocation headroom: free blocks plus reclaimable cached ones."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(int(block), 0)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Take ``n`` blocks, or None (and take nothing) if short."""
-        if n > len(self._free):
+        """Take ``n`` blocks, or None (and take nothing) if short.  Free
+        blocks are preferred; the shortfall evicts reclaimable cached
+        blocks LRU-first (their index entries are dropped via
+        ``evict_cb``)."""
+        if n > self.available:
             return None
         taken, self._free = self._free[:n], self._free[n:]
         self._free_set.difference_update(taken)
+        while len(taken) < n:
+            taken.append(self._evict_lru())
+        for b in taken:
+            self._ref[b] = 1
         return taken
 
-    def free(self, blocks: Sequence[int]) -> None:
-        seen = set()
+    def _evict_lru(self) -> int:
+        b, _ = self._cached.popitem(last=False)
+        if self.evict_cb is not None:
+            self.evict_cb(b)
+        return b
+
+    def evict_all_cached(self) -> int:
+        """Reclaim every refcount-0 cached block (tests / pressure relief).
+        Returns the number evicted; the blocks land on the free list."""
+        n = 0
+        while self._cached:
+            self._free.append(self._evict_lru())
+            n += 1
+        self._free_set.update(self._free)
+        return n
+
+    def acquire(self, blocks: Sequence[int]) -> None:
+        """Add one reference per block — the prefix cache maps cached
+        blocks read-only into a new slot's table.  A refcount-0 cached
+        block leaves the reclaimable LRU (it can no longer be evicted)."""
         for b in blocks:
+            b = int(b)
+            if b in self._free_set:
+                raise ValueError(f"acquiring free (unwritten) block {b}")
+            self._cached.pop(b, None)
+            self._ref[b] = self._ref.get(b, 0) + 1
+
+    def free(self, blocks: Sequence[int]) -> None:
+        """Drop one reference per block (a slot's table unmapped it)."""
+        seen: Dict[int, int] = {}
+        for b in blocks:
+            b = int(b)
             if not (0 < b < self.n_blocks):
                 raise ValueError(f"freeing invalid block {b}")
-            if b in self._free_set or b in seen:
+            if b in self._free_set or b in self._cached:
                 raise ValueError(f"double free of block {b}")
-            seen.add(b)
-        self._free.extend(int(b) for b in blocks)
-        self._free_set.update(int(b) for b in blocks)
+            if self._ref.get(b, 0) - seen.get(b, 0) < 1:
+                raise ValueError(f"double free of block {b}")
+            seen[b] = seen.get(b, 0) + 1
+        for b in blocks:
+            b = int(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                if self.retain_cb is not None and self.retain_cb(b):
+                    self._cached[b] = None          # most-recently used
+                else:
+                    self._free.append(b)
+                    self._free_set.add(b)
 
 
 class ShardedBlockPool:
@@ -155,46 +249,82 @@ class ShardedBlockPool:
         if self.per_shard < 2:
             raise ValueError("each shard needs >= 2 blocks "
                              "(reserved + 1 usable)")
-        self._free: List[List[int]] = [
-            list(range(s * self.per_shard + 1, (s + 1) * self.per_shard))
-            for s in range(n_shards)]
-        self._free_sets = [set(f) for f in self._free]
+        # one BlockPool per shard over LOCAL ids [0, per_shard): its
+        # never-handed-out block 0 IS the shard's reserved first block, so
+        # the whole refcount / retain-LRU / eviction lifecycle lives in
+        # BlockPool once.  Global id = shard * per_shard + local id.
+        self._pools = [BlockPool(self.per_shard) for _ in range(n_shards)]
+        for s, p in enumerate(self._pools):
+            base = s * self.per_shard
+            p.retain_cb = (lambda base: lambda b:
+                           self.retain_cb is not None
+                           and self.retain_cb(base + b))(base)
+            p.evict_cb = (lambda base: lambda b:
+                          self.evict_cb(base + b)
+                          if self.evict_cb is not None else None)(base)
+        self.retain_cb: Optional[Callable[[int], bool]] = None
+        self.evict_cb: Optional[Callable[[int], None]] = None
 
     @property
     def shard_capacity(self) -> int:
         """Allocatable blocks per shard (uniform across shards)."""
         return self.per_shard - 1
 
+    def shard_of(self, block: int) -> int:
+        return int(block) // self.per_shard
+
     def available(self, shard: int) -> int:
-        return len(self._free[shard])
+        """Shard headroom: free blocks plus reclaimable cached ones."""
+        return self._pools[shard].available
+
+    def n_cached(self, shard: int) -> int:
+        return self._pools[shard].n_cached
+
+    def refcount(self, block: int) -> int:
+        s, off = divmod(int(block), self.per_shard)
+        return self._pools[s].refcount(off)
 
     def alloc(self, n: int, shard: int) -> Optional[List[int]]:
         """Take ``n`` blocks from ``shard``'s range, or None (and take
         nothing) if that shard is short — other shards' headroom cannot
-        help, their blocks live on other devices."""
-        free = self._free[shard]
-        if n > len(free):
+        help, their blocks live on other devices.  Shortfalls evict the
+        shard's own reclaimable cached blocks LRU-first."""
+        taken = self._pools[shard].alloc(n)
+        if taken is None:
             return None
-        taken, self._free[shard] = free[:n], free[n:]
-        self._free_sets[shard].difference_update(taken)
-        return taken
+        base = shard * self.per_shard
+        return [base + b for b in taken]
+
+    def evict_all_cached(self) -> int:
+        return sum(p.evict_all_cached() for p in self._pools)
+
+    def _by_shard(self, blocks: Sequence[int],
+                  what: str) -> Dict[int, List[int]]:
+        """Group global ids into per-shard local ids, validating ranges
+        (a reserved first block — local id 0 — is never a valid operand)."""
+        out: Dict[int, List[int]] = {}
+        for b in blocks:
+            s, off = divmod(int(b), self.per_shard)
+            if not (0 <= s < self.n_shards) or off == 0:
+                raise ValueError(f"{what} invalid/reserved block {b}")
+            out.setdefault(s, []).append(off)
+        return out
+
+    def acquire(self, blocks: Sequence[int]) -> None:
+        """Add one reference per block (see :meth:`BlockPool.acquire`)."""
+        for s, local in self._by_shard(blocks, "acquiring").items():
+            self._pools[s].acquire(local)
 
     def free(self, blocks: Sequence[int]) -> None:
-        """Return blocks to their owning shards (inferred from the id)."""
-        seen = set()
-        for b in blocks:
-            b = int(b)
-            s, off = divmod(b, self.per_shard)
-            if not (0 <= s < self.n_shards) or off == 0:
-                raise ValueError(f"freeing invalid/reserved block {b}")
-            if b in self._free_sets[s] or b in seen:
-                raise ValueError(f"double free of block {b}")
-            seen.add(b)
-        for b in blocks:
-            b = int(b)
-            s = b // self.per_shard
-            self._free[s].append(b)
-            self._free_sets[s].add(b)
+        """Drop one reference per block; blocks return to their owning
+        shard (inferred from the id) at refcount 0 — to the shard's free
+        list, or to its reclaimable LRU when ``retain_cb`` keeps them.
+        Validation is per shard: an invalid mix fails before any shard is
+        touched, a double free within one shard fails with that shard's
+        blocks untouched."""
+        grouped = self._by_shard(blocks, "freeing")
+        for s, local in grouped.items():
+            self._pools[s].free(local)
 
 
 def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
@@ -226,9 +356,29 @@ def used_blocks(n_tokens: int, block_size: int) -> int:
 # Device-side cache construction / table maintenance
 # ---------------------------------------------------------------------------
 
+def slot_trash_blocks(batch: int, n_blocks: int,
+                      data_shards: int = 1) -> jnp.ndarray:
+    """(B,) physical trash block per slot: the reserved first block of the
+    pool partition owned by the slot's data shard, so masked/unmapped paged
+    writes scatter shard-locally (block 0 — the global trash — on one
+    device).  Slots map to shards contiguously, mirroring the carry's
+    ``data``-axis partitioning."""
+    if batch % data_shards:
+        raise ValueError(f"batch {batch} must divide over {data_shards} "
+                         "data shards")
+    if n_blocks % data_shards:
+        raise ValueError(f"pool of {n_blocks} blocks must divide over "
+                         f"{data_shards} data shards")
+    per_slot = batch // data_shards
+    per_shard = n_blocks // data_shards
+    shard = jnp.arange(batch, dtype=jnp.int32) // per_slot
+    return shard * per_shard
+
+
 def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                                paged: PagedCacheConfig, *,
-                               n_layers: Optional[int] = None) -> Params:
+                               n_layers: Optional[int] = None,
+                               data_shards: int = 1) -> Params:
     """Paged counterpart of ``layers.make_attention_cache``.
 
     Layout (leading ``n_layers`` dim on every leaf when given, so the layer
@@ -237,11 +387,14 @@ def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
         k_pool / v_pool : (n_layers, n_blocks, block_size, Hkv, D)
         pos             : (n_layers, B, L + TRASH_SLOTS)   logical, per slot
         table           : (n_layers, B, max_blocks)        physical block ids
+        trash           : (n_layers, B)                    per-slot trash id
 
-    ``table`` is logically layer-independent (the host writes the same rows
-    to every layer); it carries the layer dim only so the cache pytree scans.
-    All tables start at 0 == unmapped (trash): a slot must be mapped via
-    :func:`assign_block_rows` before its writes persist.
+    ``table`` and ``trash`` are logically layer-independent (the host writes
+    the same rows to every layer); they carry the layer dim only so the
+    cache pytree scans.  Tables start at the slot's trash id == unmapped: a
+    slot must be mapped via :func:`assign_block_rows` before its writes
+    persist.  ``data_shards`` > 1 gives every slot the reserved first block
+    of its own pool partition as trash (shard-local masked writes).
     """
     from repro.models.layers import TRASH_SLOTS, _INVALID_POS, dtype_of
 
@@ -251,19 +404,22 @@ def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
             f"paged KV cache does not support {cfg.name!r}: {reason}")
     bs = paged.block_size
     mb = paged.max_blocks(max_len)
+    trash = slot_trash_blocks(batch, paged.n_blocks, data_shards)
     shape_pool = (paged.n_blocks, bs, cfg.n_kv_heads, cfg.head_dim)
     shape_pos = (batch, mb * bs + TRASH_SLOTS)
-    shape_tbl = (batch, mb)
+    table = jnp.broadcast_to(trash[:, None], (batch, mb))
     if n_layers is not None:
         shape_pool = (n_layers,) + shape_pool
         shape_pos = (n_layers,) + shape_pos
-        shape_tbl = (n_layers,) + shape_tbl
+        table = jnp.broadcast_to(table[None], (n_layers, batch, mb))
+        trash = jnp.broadcast_to(trash[None], (n_layers, batch))
     dt = dtype_of(cfg)
     return {
         "k_pool": jnp.zeros(shape_pool, dt),
         "v_pool": jnp.zeros(shape_pool, dt),
         "pos": jnp.full(shape_pos, _INVALID_POS, jnp.int32),
-        "table": jnp.zeros(shape_tbl, jnp.int32),
+        "table": jnp.array(table, jnp.int32),
+        "trash": jnp.array(trash, jnp.int32),
     }
 
 
@@ -285,6 +441,48 @@ def assign_block_rows(cache: Params, slot_mask: jnp.ndarray,
     return {**cache, "table": new}
 
 
+def cow_clone_blocks(cache: Params, src: jnp.ndarray,
+                     dst: jnp.ndarray) -> Params:
+    """Copy-on-write block clone: for every slot ``b``, copy the pool rows
+    of physical block ``src[b]`` into ``dst[b]`` (all layers, K and V) —
+    the jitted device half of COW.  The host points a slot that must write
+    into a *shared* tail block at a freshly allocated private ``dst``,
+    clones the shared rows here, and the admission prefill's writes then
+    land in the private copy; the shared ``src`` (refcount > 1) is never
+    mutated.  Slots with nothing to clone pass ``src == dst == trash``:
+    the copy degenerates to trash → trash.  On a serving mesh both ids come
+    from the slot's own pool partition, so the clone stays shard-local."""
+    k_pool, v_pool = cache["k_pool"], cache["v_pool"]
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    if k_pool.ndim == 5:                   # (n_layers, N, bs, Hkv, D)
+        new_k = k_pool.at[:, dst].set(k_pool[:, src])
+        new_v = v_pool.at[:, dst].set(v_pool[:, src])
+    else:
+        new_k = k_pool.at[dst].set(k_pool[src])
+        new_v = v_pool.at[dst].set(v_pool[src])
+    return {**cache, "k_pool": new_k, "v_pool": new_v}
+
+
+def seed_prefix_positions(cache: Params, slot_mask: jnp.ndarray,
+                          start: jnp.ndarray) -> Params:
+    """Mark logical positions ``[0, start[b])`` of the admitted slots'
+    ``pos`` rows valid (stored pos == logical pos) — the device half of
+    mapping an already-written cached prefix into a fresh slot.  A shared
+    prefix runs contiguously from position 0, so its stored positions are
+    reconstructed locally instead of being copied from the publishing slot.
+    Positions past ``start`` stay as reset left them (invalid)."""
+    pos = cache["pos"]
+    width = pos.shape[-1]
+    ar = jnp.arange(width, dtype=jnp.int32)
+    mask = slot_mask[:, None] & (ar[None, :] < start[:, None])    # (B, W)
+    if pos.ndim == 3:                      # (n_layers, B, W)
+        new = jnp.where(mask[None], ar[None, None], pos)
+    else:
+        new = jnp.where(mask, ar[None], pos)
+    return {**cache, "pos": new}
+
+
 def full_tables(batch: int, max_blocks: int) -> jnp.ndarray:
     """Dense-equivalent static assignment: slot ``b`` owns the contiguous
     physical blocks ``[1 + b*max_blocks, 1 + (b+1)*max_blocks)``.  Needs a
@@ -303,11 +501,12 @@ def paged_cache_write(cache: Params, new_k, new_v, positions) -> Params:
     """Write T new KV entries at per-batch logical ``positions`` (B, T).
 
     Valid entries scatter into ``pool[table[b, p%L // bs], p%L % bs]``;
-    entries with position < 0 (masked tokens) go to the trash block and a
-    trash pos slot, exactly mirroring the dense ring's trash-slot contract.
-    Writes to slots whose table row is unmapped (0) are *dropped whole*
-    (K/V to trash, pos stays invalid) — an unmapped slot can neither be
-    corrupted nor fabricate readable entries.
+    entries with position < 0 (masked tokens) go to the slot's trash block
+    (``cache["trash"]`` — shard-local on a serving mesh, block 0 otherwise)
+    and a trash pos slot, exactly mirroring the dense ring's trash-slot
+    contract.  Writes to slots whose table row is unmapped (== the slot's
+    trash id) are *dropped whole* (K/V to trash, pos stays invalid) — an
+    unmapped slot can neither be corrupted nor fabricate readable entries.
     """
     from repro.models.layers import TRASH_SLOTS, _INVALID_POS
 
@@ -318,11 +517,14 @@ def paged_cache_write(cache: Params, new_k, new_v, positions) -> Params:
     mb = table.shape[-1]
     l = mb * bs
 
+    trash = cache.get("trash")
+    if trash is None:                       # hand-built test caches
+        trash = jnp.full((b,), TRASH_BLOCK, jnp.int32)
     logical = jnp.where(positions >= 0, positions % l, 0)
     blk = logical // bs
     b_idx = jnp.arange(b)[:, None]
-    valid = (positions >= 0) & (table[b_idx, blk] != TRASH_BLOCK)
-    phys = jnp.where(valid, table[b_idx, blk], TRASH_BLOCK)       # (B, T)
+    valid = (positions >= 0) & (table[b_idx, blk] != trash[:, None])
+    phys = jnp.where(valid, table[b_idx, blk], trash[:, None])    # (B, T)
     off = jnp.where(valid, logical % bs,
                     jnp.arange(t, dtype=jnp.int32)[None] % bs)
 
@@ -332,6 +534,7 @@ def paged_cache_write(cache: Params, new_k, new_v, positions) -> Params:
                            % TRASH_SLOTS)[None])
     stored = jnp.where(valid, positions, _INVALID_POS)
     return {
+        **cache,
         "k_pool": k_pool.at[phys, off].set(new_k.astype(k_pool.dtype)),
         "v_pool": v_pool.at[phys, off].set(new_v.astype(v_pool.dtype)),
         "pos": pos_arr.at[b_idx, pslot].set(stored.astype(jnp.int32)),

@@ -1,3 +1,4 @@
+from repro.serving.prefix_cache import PrefixCache, PrefixMatch, PrefixStats
 from repro.serving.scheduler import (
     Request,
     Response,
@@ -7,4 +8,4 @@ from repro.serving.scheduler import (
 )
 
 __all__ = ["Request", "Response", "SamplingParams", "SpecServer",
-           "ServerConfig"]
+           "ServerConfig", "PrefixCache", "PrefixMatch", "PrefixStats"]

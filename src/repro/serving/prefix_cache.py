@@ -1,0 +1,282 @@
+"""Prefix cache over the paged block pool: refcounted KV block sharing.
+
+Heavy-traffic serving workloads repeat KV work constantly — shared system
+prompts, multi-turn chats that resend the whole conversation, best-of-N
+sampling over one prompt.  Under the paged layout (``repro.models.paging``)
+that work lives in *content-addressable* units: a full KV block holds the
+keys/values of exactly ``block_size`` consecutive tokens, and two requests
+whose token prefixes agree block-for-block can share the physical blocks.
+This module is the host-side index that makes the sharing safe:
+
+* **Hash-chained keys** — block ``j`` of a sequence is keyed by
+  ``H(key(j-1), tokens[j*bs:(j+1)*bs])``, so a key identifies the *entire
+  prefix* up to and including the block, not just its own tokens.  The
+  index maps keys to physical block ids; matching a prompt is a walk down
+  the chain (a radix-tree descent with hashed edges).
+* **Per-block token store** — published blocks remember their tokens, which
+  buys *partial tail matches*: when a prompt diverges mid-block, the best
+  partially matching child block is mapped anyway and **copy-on-write**
+  cloned (``paging.cow_clone_blocks``) before the divergent suffix is
+  written, so even the matched head of a divergent block is reused.
+* **Refcounts live in the pool** (``BlockPool``/``ShardedBlockPool``): one
+  reference per table mapping.  ``match`` hands back blocks the scheduler
+  ``acquire``s; harvest ``free``s them; a published block whose count hits
+  zero parks in the pool's reclaimable LRU — ``available`` still counts it,
+  and allocation pressure evicts it oldest-first through the pool's
+  ``evict_cb``, which drops the index entry here.
+
+Write-safety invariant (checked by ``tests/test_prefix_cache.py``): a
+published or shared block is **never written through a slot's table** — the
+scheduler maps shared blocks strictly below each admitted slot's
+``start_pos`` (everything the slot writes, speculative drafts and rollbacks
+included, lands at positions ≥ ``start_pos``, i.e. in private blocks), and
+a partially-shared tail block is cloned before the first write.  Rollback
+therefore remains an index rewind that only ever touches private blocks.
+
+Sharding: on a serving mesh the pool's block dim partitions over ``data``
+and a slot may only reference blocks of its own shard, so the index is
+per-shard — each data shard grows its own copy of hot prefixes (cold
+prefills per shard, not per request).
+
+Everything here is host-side bookkeeping at admission/harvest sync points;
+nothing in this file touches device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_ROOT = b"prefix-root"
+
+
+def _chain_key(parent: bytes, tokens: np.ndarray) -> bytes:
+    """Key of the block holding ``tokens`` whose prefix chain is
+    ``parent``: sha1 over the parent digest + the token bytes (stable,
+    collision-negligible, O(block_size) per block)."""
+    h = hashlib.sha1(parent)
+    h.update(np.ascontiguousarray(tokens, dtype=np.int32).tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Longest cached prefix of one prompt (see :meth:`PrefixCache.match`).
+
+    ``blocks``: physical ids of fully matched blocks, chain order.
+    ``cow``: ``(src_block, n_rows)`` when a partially matching tail block
+    is worth cloning — the first ``n_rows`` rows of ``src_block`` match the
+    prompt — else None.  ``tokens``: total matched tokens
+    (``len(blocks) * block_size + n_rows``)."""
+    blocks: List[int]
+    cow: Optional[Tuple[int, int]]
+    tokens: int
+
+    @property
+    def hit(self) -> bool:
+        return self.tokens > 0
+
+
+@dataclasses.dataclass
+class PrefixStats:
+    lookups: int = 0
+    hits: int = 0                  # lookups that matched >= 1 block
+    tokens_total: int = 0          # prompt tokens across lookups
+    tokens_reused: int = 0         # matched tokens (KV work skipped)
+    blocks_shared: int = 0         # full-block mappings handed out
+    cow_clones: int = 0            # partial tail blocks cloned
+    published_blocks: int = 0      # blocks entered into the index
+    evictions: int = 0             # index entries reclaimed by the pool
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+    @property
+    def reuse_rate(self) -> float:
+        return self.tokens_reused / max(self.tokens_total, 1)
+
+
+class _Entry:
+    __slots__ = ("key", "parent", "shard", "tokens")
+
+    def __init__(self, key, parent, shard, tokens):
+        self.key = key
+        self.parent = parent
+        self.shard = shard
+        self.tokens = tokens
+
+
+class PrefixCache:
+    """Host-side radix/hash index over published full KV blocks.
+
+    Registers itself as the pool's ``retain_cb``/``evict_cb``: published
+    blocks survive their last reference in the pool's reclaimable LRU and
+    leave the index only when allocation pressure evicts them.
+    """
+
+    def __init__(self, pool, block_size: int, *, n_shards: int = 1,
+                 min_match_blocks: int = 1):
+        if min_match_blocks < 1:
+            raise ValueError("min_match_blocks must be >= 1")
+        self.pool = pool
+        self.block_size = block_size
+        self.n_shards = n_shards
+        self.min_match_blocks = min_match_blocks
+        # per-shard chain-key -> physical block
+        self._index: List[Dict[bytes, int]] = [{} for _ in range(n_shards)]
+        # per-shard parent-key -> child blocks (partial tail candidates)
+        self._children: List[Dict[bytes, List[int]]] = [
+            {} for _ in range(n_shards)]
+        self._entries: Dict[int, _Entry] = {}      # physical block -> entry
+        self.stats = PrefixStats()
+        pool.retain_cb = self._retain
+        pool.evict_cb = self._evicted
+
+    # -- pool callbacks -----------------------------------------------------
+    def _retain(self, block: int) -> bool:
+        return block in self._entries
+
+    def _evicted(self, block: int) -> None:
+        e = self._entries.pop(block, None)
+        if e is None:
+            return
+        self._index[e.shard].pop(e.key, None)
+        kids = self._children[e.shard].get(e.parent)
+        if kids is not None:
+            try:
+                kids.remove(block)
+            except ValueError:
+                pass
+            if not kids:
+                del self._children[e.shard][e.parent]
+        # descendants become unreachable (their parent key is gone); they
+        # stay parked in the pool's LRU and age out under pressure
+        self.stats.evictions += 1
+
+    # -- admission ----------------------------------------------------------
+    def match(self, tokens: np.ndarray, usable: int,
+              shard: int = 0) -> PrefixMatch:
+        """Longest cached prefix of ``tokens[:usable]`` on ``shard``.
+
+        Walks fully matching blocks down the hash chain, then tries one
+        partial tail match among the last node's children (most matching
+        rows wins).  A match shorter than ``min_match_blocks`` blocks is
+        reported as a miss — mapping one nearly-empty shared block is not
+        worth the table bookkeeping.  Matched full blocks have their LRU
+        recency refreshed only when the scheduler ``acquire``s them.
+
+        Pure lookup: no statistics are recorded here.  The scheduler may
+        match the same request several times before it actually admits
+        (sibling deferral, pool-short retries), so the stats commit via
+        :meth:`record_admission` exactly once, when the mapping is real.
+        """
+        bs = self.block_size
+        tokens = np.asarray(tokens)
+        usable = min(usable, len(tokens))
+
+        blocks: List[int] = []
+        parent = _ROOT
+        j = 0
+        while (j + 1) * bs <= usable:
+            key = _chain_key(parent, tokens[j * bs:(j + 1) * bs])
+            blk = self._index[shard].get(key)
+            if blk is None:
+                break
+            blocks.append(blk)
+            parent = key
+            j += 1
+
+        cow = None
+        rem = min(usable - j * bs, bs)     # one tail block at most
+        if rem > 0:
+            seg = np.asarray(tokens[j * bs:j * bs + rem], np.int32)
+            best, best_rows = None, 0
+            for child in self._children[shard].get(parent, ()):
+                eq = np.equal(self._entries[child].tokens[:rem], seg)
+                n = rem if eq.all() else int(eq.argmin())
+                if n > best_rows:
+                    best, best_rows = child, n
+            if best is not None:
+                cow = (best, best_rows)
+
+        matched = len(blocks) * bs + (cow[1] if cow else 0)
+        n_match_blocks = len(blocks) + (1 if cow else 0)
+        if matched == 0 or n_match_blocks < self.min_match_blocks:
+            return PrefixMatch([], None, 0)
+        return PrefixMatch(blocks, cow, matched)
+
+    def record_admission(self, match: PrefixMatch, usable: int) -> None:
+        """Commit one admission's worth of statistics — called by the
+        scheduler exactly once per request actually admitted, so deferred
+        and pool-short attempts never inflate hit/reuse metrics."""
+        self.stats.lookups += 1
+        self.stats.tokens_total += int(usable)
+        if not match.hit:
+            return
+        self.stats.hits += 1
+        self.stats.tokens_reused += match.tokens
+        self.stats.blocks_shared += len(match.blocks)
+        if match.cow is not None:
+            self.stats.cow_clones += 1
+
+    # -- publication --------------------------------------------------------
+    def publish(self, tokens: np.ndarray, table_blocks: List[int],
+                shard: int = 0) -> int:
+        """Enter the full blocks of ``tokens`` (the *cached-correct* token
+        prefix: committed history minus the pending token) into the index,
+        mapped to the publishing slot's physical blocks ``table_blocks``
+        (logical order).  Chain nodes already indexed — the shared blocks
+        this very slot rode in on, or a concurrent duplicate — are skipped:
+        the slot's physical block for that node simply returns to the free
+        list when released.  Returns the number of newly published blocks.
+
+        Called twice per request: at admission for the prompt's full blocks
+        (they are committed by definition the moment the admission prefill
+        is dispatched — which is what lets same-prefix followers one tick
+        later share them), and at harvest for the generated history.
+        """
+        bs = self.block_size
+        tokens = np.asarray(tokens)
+        n_full = min(len(tokens) // bs, len(table_blocks))
+        parent = _ROOT
+        published = 0
+        for j in range(n_full):
+            btoks = np.asarray(tokens[j * bs:(j + 1) * bs], np.int32)
+            key = _chain_key(parent, btoks)
+            if key not in self._index[shard]:
+                phys = int(table_blocks[j])
+                if phys in self._entries:
+                    # already published under another chain (can't happen
+                    # for distinct keys of the same physical block)
+                    parent = key
+                    continue
+                self._index[shard][key] = phys
+                self._children[shard].setdefault(parent, []).append(phys)
+                self._entries[phys] = _Entry(key, parent, shard, btoks)
+                published += 1
+            parent = key
+        self.stats.published_blocks += published
+        return published
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def n_indexed(self) -> int:
+        return len(self._entries)
+
+    def summary(self) -> Dict[str, float]:
+        s = self.stats
+        return {
+            "lookups": s.lookups, "hits": s.hits,
+            "hit_rate": round(s.hit_rate, 3),
+            "tokens_total": s.tokens_total,
+            "tokens_reused": s.tokens_reused,
+            "reuse_rate": round(s.reuse_rate, 3),
+            "blocks_shared": s.blocks_shared,
+            "cow_clones": s.cow_clones,
+            "published_blocks": s.published_blocks,
+            "evictions": s.evictions,
+            "indexed_blocks": self.n_indexed,
+        }

@@ -45,6 +45,25 @@ Long-context configs therefore admit as many concurrent requests as their
 *declared* footprints (prompt + ``max_tokens`` + overhang) fit in the pool,
 rather than one per worst-case ``max_len`` reservation.
 
+Prefix cache (``ServerConfig.prefix_cache="on"``, paged only)
+-------------------------------------------------------------
+Admission additionally runs a longest-prefix match of the tokenized prompt
+against the host :class:`~repro.serving.prefix_cache.PrefixCache`: fully
+matching KV blocks are mapped **read-only** into the new slot's table (one
+pool refcount each — shared blocks are counted once in headroom, which is
+where the extra admitted concurrency comes from), a partially matching
+tail block is copy-on-write cloned inside the admission program, and the
+prefill runs *from the divergence point only*
+(``DecodeSession.prefill(start_pos=...)``), over a token window sliced to
+the un-cached tail.  The prompt's full blocks are published right after
+the admission dispatch (they hold committed content by definition), the
+generated history's at harvest; a same-prefix follower request observed in
+the same admission pass is deferred one tick so it can ride the freshly
+published blocks instead of paying a duplicate cold prefill.  Because
+every slot's writes land at positions ≥ its ``start_pos``, shared blocks
+are never written — speculative rollback remains an index rewind into
+private blocks only.
+
 Host-side logic (queueing, response assembly, detokenisation, block
 accounting) is deliberately thin and never feeds back into the carry
 mid-flight.
@@ -87,7 +106,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.session import DecodeSession, DecodeState, EngineConfig
 from repro.models.model import Model
 from repro.models.paging import (BlockPool, PagedCacheConfig,
-                                 ShardedBlockPool, paged_unsupported_reason)
+                                 ShardedBlockPool, paged_unsupported_reason,
+                                 slot_trash_blocks)
+from repro.serving.prefix_cache import PrefixCache
 from repro.sharding import axis_rules, serving_rules
 
 
@@ -142,6 +163,16 @@ class ServerConfig:
     # dims over "model"; the paged pool is partitioned under both (rounded
     # up to a data-divisible block count).  Sizing guide: docs/SERVING.md.
     mesh: Optional[Tuple[int, int]] = None
+    # Prefix cache (paged only): "on" shares published KV blocks between
+    # requests with common token prefixes — admission maps them read-only,
+    # prefills from the divergence point, and copy-on-write clones a
+    # partially matching tail block.  Blocks then outlive requests: freed
+    # published blocks park in a reclaimable LRU until allocation pressure
+    # evicts them.  Sizing guide: docs/SERVING.md.
+    prefix_cache: str = "off"           # "off" | "on"
+    # Smallest cached run (in blocks) worth mapping shared — tiny matches
+    # cost table bookkeeping + a COW clone for near-zero prefill savings.
+    min_match_blocks: int = 1
 
 
 class SpecServer:
@@ -156,6 +187,9 @@ class SpecServer:
         b = cfg.slots
         if cfg.cache not in ("dense", "paged"):
             raise ValueError(f"unknown cache layout {cfg.cache!r}")
+        if cfg.prefix_cache not in ("off", "on"):
+            raise ValueError(f"unknown prefix_cache mode "
+                             f"{cfg.prefix_cache!r} (off|on)")
         if cfg.cache == "paged":
             # fail fast, BEFORE any device state is built: name the arch
             # and the sub-cache that cannot page (the deep init_cache raise
@@ -166,6 +200,17 @@ class SpecServer:
                     f"ServerConfig(cache='paged') is incompatible with "
                     f"arch {target.cfg.name!r}: {reason}; use "
                     f"cache='dense'")
+        if cfg.prefix_cache == "on":
+            if cfg.cache != "paged":
+                raise ValueError(
+                    "ServerConfig(prefix_cache='on') requires "
+                    "cache='paged': prefix reuse shares physical KV "
+                    "blocks, which dense per-slot rings do not have")
+            if target.is_recurrent:
+                raise ValueError(
+                    f"prefix_cache='on' is incompatible with arch "
+                    f"{target.cfg.name!r}: its recurrent state cannot be "
+                    "reconstructed from shared KV blocks")
 
         # -- serving mesh (tentpole): partition the tick over (data, model)
         mesh_shape = tuple(cfg.mesh) if cfg.mesh else (1, 1)
@@ -198,13 +243,37 @@ class SpecServer:
             self.pool = (ShardedBlockPool(n_blocks, self.data_shards)
                          if self.data_shards > 1 else BlockPool(n_blocks))
             self.slot_blocks: List[List[int]] = [[] for _ in range(b)]
+            # per-slot trash block: the reserved first block of the slot's
+            # own pool partition (block 0 on one device), so masked and
+            # unmapped writes scatter shard-locally
+            self.trash_ids = np.asarray(
+                slot_trash_blocks(b, n_blocks, self.data_shards))
+            self.prefix = (PrefixCache(self.pool, cfg.block_size,
+                                       n_shards=self.data_shards,
+                                       min_match_blocks=cfg.min_match_blocks)
+                           if cfg.prefix_cache == "on" else None)
         else:
             self.paged = None
             self.max_blocks = 1          # dummy block_rows width
             self.pool = None
             self.slot_blocks = [[] for _ in range(b)]
+            self.trash_ids = np.zeros((b,), np.int32)
+            self.prefix = None
+        # host ledger of each slot's cached-prefix start (tokens whose KV
+        # rode in shared) plus two prefill-cost counters the benchmark
+        # reports: ``prefill_tokens`` sums per-request USEFUL positions
+        # decoded (the KV work skipped by cached prefixes — the roofline
+        # metric), ``prefill_window_tokens`` sums slots x window-width per
+        # admission dispatch (the batched program's actual compute,
+        # including masked rows — a cold admit sharing a pass with cached
+        # ones forces the full window on everyone, so the two diverge on
+        # mixed batches)
+        self.slot_start = np.zeros((b,), np.int64)
+        self.prefill_tokens = 0
+        self.prefill_window_tokens = 0
         self.state = self.session.init_state(t_params, d_params, b,
-                                             cfg.max_len, paged=self.paged)
+                                             cfg.max_len, paged=self.paged,
+                                             paged_shards=self.data_shards)
         if self.mesh is not None:
             from repro.launch.shardplan import (decode_state_shardings,
                                                 param_shardings)
@@ -266,13 +335,24 @@ class SpecServer:
                                             (jnp.int32(0), tuple(state)))
             return DecodeState(*out)
 
+        use_prefix = self.prefix is not None
+
         def _admit_all(tp, dp, state, prompts, plens, smask, budgets, temps,
-                       block_rows):
+                       block_rows, starts, cow_src, cow_dst, win_tokens,
+                       win_off):
+            kw = {}
+            if use_prefix:
+                # cached-prefix admission: map shared blocks read-only,
+                # COW-clone the partially matching tail, decode only the
+                # un-cached window
+                kw = dict(start_pos=starts, cow_src=cow_src,
+                          cow_dst=cow_dst, decode_tokens=win_tokens,
+                          decode_off=win_off)
             with _rules_ctx():
                 return self.session.prefill(tp, dp, state, prompts, plens,
                                             slot_mask=smask, budget=budgets,
                                             temperature=temps,
-                                            block_rows=block_rows)
+                                            block_rows=block_rows, **kw)
 
         def _gather_rows(state, idx):
             return {"buf": state.buf[idx],
@@ -302,7 +382,7 @@ class SpecServer:
                 _admit_all, donate_argnums=(2,),
                 in_shardings=(self._t_shardings, self._d_shardings,
                               self._state_shardings, mat, row, row, row,
-                              row, mat),
+                              row, mat, row, row, row, mat, repl),
                 out_shardings=self._state_shardings)
             self._gather = jax.jit(
                 _gather_rows,
@@ -345,6 +425,37 @@ class SpecServer:
                                 req.params.max_tokens)
         self.queue.append(req)
 
+    def _usable_prefix(self, plen: int) -> int:
+        """Prompt tokens whose KV may ride in from the prefix cache: the
+        final prompt token always stays pending (never cached), and
+        feature-carrying drafters additionally need the second-to-last
+        token decoded live to ground their feature."""
+        keep = 2 if self.session.drafter.wants_features else 1
+        return max(plen - keep, 0)
+
+    def _defer_for_sibling(self, ptoks, usable: int, matched: int,
+                           pending) -> bool:
+        """Cached-prefix admission, same-pass case: a cold sibling admitted
+        earlier in THIS pass publishes its prompt blocks right after the
+        dispatch, so a request sharing that prefix is worth holding ONE
+        tick — it then rides the published blocks instead of paying a
+        duplicate cold prefill.  Only a common prefix that beats both the
+        ``min_match_blocks`` floor and what the index already offers
+        defers."""
+        bs = self.cfg.block_size
+        thresh = self.cfg.min_match_blocks * bs
+        for sib_toks, sib_plen in pending:
+            # the sibling publishes its prompt's full blocks only
+            lim = min(usable, ((sib_plen - 1) // bs) * bs, len(sib_toks))
+            if lim <= 0:
+                continue
+            eq = np.equal(ptoks[:lim], sib_toks[:lim])
+            common = lim if eq.all() else int(eq.argmin())
+            common = (common // bs) * bs
+            if common >= thresh and common > matched:
+                return True
+        return False
+
     def _admit(self):
         """Admit queued requests into refillable slots with ONE slot-masked
         prefill call (no per-request dispatch, no host reads: refillable
@@ -356,7 +467,14 @@ class SpecServer:
         clustered finishes then share a single prefill pass — but never
         longer: when the remaining slots still owe more than a group's
         worth of tokens, the free slots admit immediately rather than idle
-        behind a long-running neighbour."""
+        behind a long-running neighbour.
+
+        With the prefix cache on, each candidate prompt is first matched
+        against the published-block index: fully matching blocks map
+        read-only (``acquire``), a partially matching tail block is COW
+        cloned into the first private block, and the slot's prefill starts
+        at the divergence point.  The prompt's own full blocks are
+        published immediately after the dispatch."""
         b = self.cfg.slots
         free = [s for s in range(b)
                 if self._finished_host[s] and self.slot_req[s] is None]
@@ -376,13 +494,21 @@ class SpecServer:
         smask = np.zeros((b,), bool)
         budgets = np.zeros((b,), np.int32)
         temps = np.zeros((b,), np.float32)
-        rows = np.zeros((b, self.max_blocks), np.int32)
+        # unmapped table rows point at the slot's (shard-local) trash block
+        rows = np.tile(self.trash_ids.astype(np.int32)[:, None],
+                       (1, self.max_blocks))
+        starts = np.zeros((b,), np.int32)
+        cow_src = self.trash_ids.astype(np.int32).copy()
+        cow_dst = self.trash_ids.astype(np.int32).copy()
+        pending: dict = {}             # shard -> [(ptoks, plen)] cold this pass
+        admitted = []                  # (slot, ptoks, plen, shard)
         now = time.time()
         for slot in free:
             if not self.queue:
                 break
             req = self.queue[0]
             plen = min(len(req.prompt), s_len)
+            shard = slot // self._slots_per_shard
             if self.pool is not None:
                 # paged admission is gated by POOL headroom, not slot count:
                 # a free slot with an empty pool stays idle until a harvest
@@ -391,14 +517,45 @@ class SpecServer:
                 # is per data shard: blocks come from the partition of the
                 # shard owning THIS slot, and when that shard is short the
                 # same head request retries on free slots of other shards.
-                blocks = self._pool_alloc(
-                    self._blocks_needed(plen, req.params.max_tokens), slot)
+                need = self._blocks_needed(plen, req.params.max_tokens)
+                shared: List[int] = []
+                match = None
+                if self.prefix is not None:
+                    ptoks = np.asarray(req.prompt[:plen], np.int32)
+                    usable = self._usable_prefix(plen)
+                    match = self.prefix.match(ptoks, usable, shard)
+                    if self._defer_for_sibling(
+                            ptoks, usable, match.tokens,
+                            pending.get(shard, [])):
+                        break          # FIFO: hold the queue one tick
+                    shared = list(match.blocks)
+                    if shared:
+                        # shared blocks are counted ONCE in pool headroom:
+                        # they are referenced, not allocated
+                        self.pool.acquire(shared)
+                blocks = self._pool_alloc(need - len(shared), slot)
                 if blocks is None:
+                    if shared:
+                        self.pool.free(shared)
                     if self.data_shards > 1:
                         continue
                     break
-                self.slot_blocks[slot] = blocks
-                rows[slot, :len(blocks)] = blocks
+                table = shared + blocks
+                self.slot_blocks[slot] = table
+                rows[slot, :len(table)] = table
+                if match is not None and match.hit:
+                    starts[slot] = match.tokens
+                    if match.cow is not None:
+                        # first write into the shared tail block must not
+                        # land: clone it into the slot's first private
+                        # block before the prefill writes (COW)
+                        assert blocks, "COW needs a private block"
+                        cow_src[slot] = match.cow[0]
+                        cow_dst[slot] = blocks[0]
+                if self.prefix is not None:
+                    self.prefix.record_admission(match, usable)
+                    pending.setdefault(shard, []).append((ptoks, plen))
+                    admitted.append((slot, ptoks, plen, shard))
             self.queue.popleft()
             prompts[slot, :plen] = req.prompt[:plen]
             plens[slot] = plen
@@ -412,14 +569,36 @@ class SpecServer:
                 req.params.max_tokens,
                 self.cfg.max_len - plen)       # buffer-room bound
             self._finished_host[slot] = False
+            self.slot_start[slot] = int(starts[slot])
+            self.prefill_tokens += max(plen - 1 - int(starts[slot]), 0)
             # prefill resets the admitted rows' device stats to zero
             self._last_cycles[slot] = 0
             self._last_commits[slot] = 0
         if not smask.any():
             return                       # pool exhausted before any admit
+        # decode window: the un-cached tail across all admitted rows,
+        # width-bucketed (multiples of 32) to bound jit specialisations
+        if self.prefix is not None:
+            min_start = min(int(starts[s]) for s in range(b) if smask[s])
+            w = min(s_len, max(-(-(s_len - min_start) // 32) * 32, 1))
+            off = s_len - w
+            win = np.ascontiguousarray(prompts[:, off:])
+        else:
+            # the traced program ignores the window when the prefix cache
+            # is off — ship a (B, 1) dummy instead of a prompt duplicate
+            off, w = 0, s_len
+            win = np.zeros((b, 1), np.int32)
+        self.prefill_window_tokens += b * w
         self.state = self._prefill(
             self.t_params, self.d_params, self.state, prompts, plens,
-            smask, budgets, temps, rows)
+            smask, budgets, temps, rows, starts, cow_src, cow_dst,
+            win, np.int32(off))
+        # publish the admitted prompts' full blocks NOW: a prompt is
+        # committed content by definition, and device dispatches execute in
+        # submission order — the next pass's partial prefills may read them
+        for slot, ptoks, plen, shard in admitted:
+            self.prefix.publish(ptoks[:plen - 1], self.slot_blocks[slot],
+                                shard)
 
     def _pool_alloc(self, n: int, slot: int):
         """Allocate ``n`` blocks for ``slot`` — from the data shard that
@@ -529,9 +708,22 @@ class SpecServer:
                 latency_s=now - self.slot_t0[slot]))
             self.slot_req[slot] = None
             if self.pool is not None and self.slot_blocks[slot]:
+                if self.prefix is not None:
+                    # publish the generated history's full blocks before
+                    # releasing: positions < length-1 hold exactly the
+                    # committed chain's KV (the pending token and any
+                    # rejected-draft stale rows lie beyond), so only those
+                    # full blocks are content-addressable
+                    length = int(rows["lengths"][j])
+                    committed = np.asarray(
+                        rows["buf"][j, :max(length - 1, 0)], np.int32)
+                    self.prefix.publish(committed, self.slot_blocks[slot],
+                                        slot // self._slots_per_shard)
                 # block-list truncate at its terminal point: the finished
-                # slot's whole list returns to the pool (the table rows are
-                # unmapped by reset_slots at the next admission)
+                # slot drops its references — unpublished blocks return to
+                # the pool, published ones park in the reclaimable LRU
+                # (the table rows are unmapped by reset_slots at the next
+                # admission)
                 self.pool.free(self.slot_blocks[slot])
                 self.slot_blocks[slot] = []
 

@@ -5,14 +5,19 @@ Run by ``tests/test_mesh_serving.py`` with
 (host-platform devices must be forced before jax is imported, which is why
 this lives in its own process instead of a fixture).
 
-Asserts, for dense AND paged caches on real ≥2-device meshes:
+Asserts, for dense AND paged caches (prefix cache off and on) on real
+≥2-device meshes:
 
 * the mesh-partitioned ``SpecServer`` produces token-identical greedy
   output to single-device offline ``DecodeSession.generate`` per request;
 * ``step()`` performs zero device→host transfers under the mesh (the
   PR 2 sync-free contract is mesh-invariant) — guarded by patching
   ``jax.device_get``, checking the server's transfer counter, and running
-  the tick under ``jax.transfer_guard_device_to_host("disallow")``.
+  the tick under ``jax.transfer_guard_device_to_host("disallow")``;
+* paged block traffic stays shard-local: every block a slot's table maps —
+  shared prefix blocks included — and the slot's trash block (the target
+  of masked/unmapped writes) lie inside the pool partition of the data
+  shard that owns the slot, so no paged gather or scatter crosses shards.
 
 Prints ``MESH-PARITY-OK`` on success; any assertion kills the process.
 """
@@ -57,38 +62,70 @@ def main():
             prompt=rng.integers(3, cfg.vocab_size, plen).astype(np.int32),
             params=SamplingParams(max_tokens=[3, 7, 13][i % 3],
                                   temperature=0.0)))
+    # prefix-cache case: 6 requests sharing one 8-token system prefix, so
+    # later admissions map published blocks of earlier ones (per shard)
+    shared = rng.integers(3, cfg.vocab_size, 8).astype(np.int32)
+    shared_reqs = []
+    for i in range(6):
+        tail = rng.integers(3, cfg.vocab_size, 4).astype(np.int32)
+        shared_reqs.append(Request(
+            uid=i, prompt=np.concatenate([shared, tail]),
+            params=SamplingParams(max_tokens=[3, 7, 13][i % 3],
+                                  temperature=0.0)))
 
     # single-device offline reference, fixed prompt width (fewer compiles)
     session = DecodeSession(tgt, IndependentDrafter(drf, k=k,
                                                     temperature=0.0), ecfg)
-    offline = {}
-    for req in reqs:
-        plen, mt = len(req.prompt), req.params.max_tokens
-        padded = np.zeros((12,), np.int32)
-        padded[:plen] = req.prompt
-        out = session.generate(t_params, d_params, jnp.asarray(padded)[None],
-                               jnp.asarray([plen], jnp.int32), mt,
-                               jax.random.PRNGKey(0))
-        offline[req.uid] = np.asarray(out["tokens"])[0, plen:plen + mt]
+
+    def offline_ref(case_reqs):
+        out = {}
+        for req in case_reqs:
+            plen, mt = len(req.prompt), req.params.max_tokens
+            padded = np.zeros((12,), np.int32)
+            padded[:plen] = req.prompt
+            o = session.generate(t_params, d_params,
+                                 jnp.asarray(padded)[None],
+                                 jnp.asarray([plen], jnp.int32), mt,
+                                 jax.random.PRNGKey(0))
+            out[req.uid] = np.asarray(o["tokens"])[0, plen:plen + mt]
+        return out
+
+    offline = offline_ref(reqs)
+    offline_shared = offline_ref(shared_reqs)
 
     real_device_get = jax.device_get
 
     def forbidden(*a, **kw):
         raise AssertionError("device→host transfer inside step() on mesh")
 
-    for mesh, cache in [((2, 1), "dense"), ((2, 1), "paged"),
-                        ((2, 2), "paged"), ((4, 2), "dense")]:
+    cases = [((2, 1), "dense", "off", reqs, offline),
+             ((2, 1), "paged", "off", reqs, offline),
+             ((2, 2), "paged", "off", reqs, offline),
+             ((2, 2), "paged", "on", shared_reqs, offline_shared),
+             ((4, 2), "dense", "off", reqs, offline)]
+    for mesh, cache, prefix, case_reqs, ref in cases:
         server = SpecServer(
             tgt, IndependentDrafter(drf, k=k, temperature=0.0),
             t_params, d_params, ecfg,
             ServerConfig(slots=4, max_len=96, max_prompt_len=12,
-                         steps_per_sync=3, cache=cache, mesh=mesh))
-        for r in reqs:
+                         steps_per_sync=3, cache=cache, mesh=mesh,
+                         prefix_cache=prefix, block_size=4))
+        for r in case_reqs:
             server.submit(dataclasses.replace(r))
         for _ in range(10_000):
             if not server.queue and all(r is None for r in server.slot_req):
                 break
             server._admit()
+            if server.pool is not None:
+                # no cross-shard paged traffic: every mapped block (shared
+                # prefix blocks included) and every trash target lives in
+                # the owning shard's pool partition
+                per = server.pool.per_shard
+                for s, blks in enumerate(server.slot_blocks):
+                    sh = s // server._slots_per_shard
+                    assert server.trash_ids[s] == sh * per, (mesh, cache, s)
+                    assert all(sh * per <= blk < (sh + 1) * per
+                               for blk in blks), (mesh, cache, s, blks)
             syncs_before = server.host_syncs
             jax.device_get = forbidden
             try:
@@ -99,15 +136,22 @@ def main():
             assert server.host_syncs == syncs_before, (mesh, cache)
             server.sync()
         resps = {r.uid: r for r in server.run()}
-        assert sorted(resps) == list(range(len(reqs))), (mesh, cache)
-        for req in reqs:
+        assert sorted(resps) == list(range(len(case_reqs))), (mesh, cache)
+        for req in case_reqs:
             got = np.asarray(resps[req.uid].tokens)
             np.testing.assert_array_equal(
-                got, offline[req.uid],
-                err_msg=f"mesh={mesh} cache={cache} req {req.uid}: "
-                        f"sharded != offline")
-        print(f"  mesh={mesh} cache={cache}: token-identical, "
-              f"0 in-tick syncs ({server.host_syncs} at sync points)")
+                got, ref[req.uid],
+                err_msg=f"mesh={mesh} cache={cache} prefix={prefix} req "
+                        f"{req.uid}: sharded != offline")
+        note = ""
+        if prefix == "on":
+            s = server.prefix.summary()
+            assert s["hits"] >= 1, s     # shared blocks actually rode in
+            note = (f", prefix hit rate {s['hit_rate']:.0%} "
+                    f"({s['blocks_shared']} shared mappings)")
+        print(f"  mesh={mesh} cache={cache} prefix={prefix}: "
+              f"token-identical, 0 in-tick syncs "
+              f"({server.host_syncs} at sync points){note}")
 
     print("MESH-PARITY-OK")
 

@@ -1,0 +1,350 @@
+"""Prefix cache over the paged pool: refcounted block sharing, COW, and
+cached-prefix admission.
+
+The lifecycle under test (docs/ARCHITECTURE.md "Prefix cache"): blocks now
+outlive the requests that wrote them — published full blocks are mapped
+read-only into later slots, a partially matching tail block is
+copy-on-write cloned before the first write, and speculative rollback never
+touches a shared block.  Every sharing path must be byte-identical to the
+cold cache, and the pool must drain leak-free.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.core import EngineConfig, IndependentDrafter, make_generate_fn
+from repro.models import build_model
+from repro.models.paging import BlockPool, ShardedBlockPool
+from repro.serving import (PrefixCache, Request, SamplingParams,
+                           ServerConfig, SpecServer)
+
+BS = 8                                   # block size used throughout
+
+
+# ---------------------------------------------------------------------------
+# Pool refcounts + reclaimable LRU (host side, no devices)
+# ---------------------------------------------------------------------------
+
+def test_pool_refcount_share_and_release():
+    pool = BlockPool(9)
+    a = pool.alloc(3)
+    pool.acquire(a)                       # a second slot maps them
+    assert all(pool.refcount(b) == 2 for b in a)
+    pool.free(a)                          # first slot done
+    assert pool.available == 5            # still referenced: not reusable
+    pool.free(a)                          # second slot done
+    assert pool.available == 8
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(a[:1])
+
+
+def test_pool_retained_blocks_are_reclaimable_lru():
+    pool = BlockPool(9)
+    retained, evicted = set(), []
+    pool.retain_cb = lambda b: b in retained
+    pool.evict_cb = evicted.append
+    a = pool.alloc(4)
+    retained.update(a[:2])
+    pool.free(a)
+    # 2 blocks parked in the LRU, 2 went straight back to the free list
+    assert pool.n_cached == 2 and pool.available == 8
+    got = pool.alloc(8)                   # forces eviction of both
+    assert sorted(got) == list(range(1, 9))
+    assert sorted(evicted) == sorted(a[:2])
+    pool.free(got)
+    assert pool.available == 8
+
+
+def test_sharded_pool_refcount_and_lru_stay_shard_local():
+    pool = ShardedBlockPool(16, n_shards=2)
+    retained = set()
+    pool.retain_cb = lambda b: b in retained
+    a = pool.alloc(3, shard=0)
+    b = pool.alloc(3, shard=1)
+    retained.update(a + b)
+    pool.free(a + b)
+    assert pool.n_cached(0) == 3 and pool.n_cached(1) == 3
+    assert pool.available(0) == 7
+    got = pool.alloc(7, shard=0)          # evicts shard 0's cached only
+    assert all(blk < 8 for blk in got)
+    assert pool.n_cached(1) == 3          # shard 1 untouched
+    pool.free(got)
+    pool.evict_all_cached()
+    assert pool.available(0) == pool.available(1) == 7
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache index (host side)
+# ---------------------------------------------------------------------------
+
+def _published_cache(pool=None, toks=None, blocks=(5, 6, 7)):
+    pool = pool or BlockPool(32)
+    pc = PrefixCache(pool, BS)
+    toks = np.arange(100, 100 + 3 * BS, dtype=np.int32) if toks is None else toks
+    taken = pool.alloc(len(blocks))
+    pc.publish(toks, taken)
+    pool.free(taken)                      # published -> parked in LRU
+    return pc, pool, toks, taken
+
+
+def test_match_walks_full_blocks_and_partial_tail():
+    pc, pool, toks, taken = _published_cache()
+    # full match of all 3 blocks
+    m = pc.match(np.concatenate([toks, [7, 7]]), usable=3 * BS)
+    assert m.blocks == taken and m.cow is None and m.tokens == 3 * BS
+    # divergence mid-block 1: full match of block 0, partial tail of block 1
+    q = toks.copy()
+    q[BS + 3:] = 9
+    m = pc.match(q, usable=len(q))
+    assert m.blocks == taken[:1]
+    assert m.cow == (taken[1], 3) and m.tokens == BS + 3
+    # no common prefix: miss
+    m = pc.match(np.full(20, 3, np.int32), usable=20)
+    assert not m.hit
+
+
+def test_min_match_blocks_gates_small_hits():
+    pc, pool, toks, taken = _published_cache()
+    pc.min_match_blocks = 2
+    m = pc.match(np.concatenate([toks[:BS], [9] * BS]), usable=2 * BS)
+    assert not m.hit                      # 1 matched block < floor of 2
+    m = pc.match(toks, usable=3 * BS)
+    assert m.hit and len(m.blocks) == 3
+
+
+def test_eviction_drops_index_entries():
+    pc, pool, toks, taken = _published_cache()
+    assert pc.n_indexed == 3
+    grab = pool.alloc(pool.available)     # evicts all three cached blocks
+    assert pc.n_indexed == 0 and pc.stats.evictions == 3
+    assert not pc.match(toks, usable=3 * BS).hit
+    pool.free(grab)
+    assert pool.available == pool.n_blocks - 1   # refcount-leak free
+
+
+def test_duplicate_publish_keeps_first_block():
+    pc, pool, toks, taken = _published_cache()
+    dup = pool.alloc(3)
+    assert pc.publish(toks, dup) == 0     # chain already indexed
+    pool.free(dup)                        # not retained: straight to free
+    assert pool.n_cached == 3
+
+
+# ---------------------------------------------------------------------------
+# Serving lifecycle (device): parity, COW, rollback safety, leak checks
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
+                        n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=cfg.vocab_size, dtype="float32")
+    drf = build_model(d_cfg)
+    return (cfg, tgt, drf, tgt.init(jax.random.PRNGKey(1)),
+            drf.init(jax.random.PRNGKey(2)))
+
+
+def _server(setup, prefix="on", *, slots=4, pool_blocks=0, max_prompt=48,
+            max_len=96, k=3):
+    cfg, tgt, drf, t_params, d_params = setup
+    return SpecServer(
+        tgt, IndependentDrafter(drf, k=k, temperature=0.0),
+        t_params, d_params,
+        EngineConfig(k=k, rule="strict", mode="greedy", temperature=0.0),
+        ServerConfig(slots=slots, max_len=max_len, max_prompt_len=max_prompt,
+                     cache="paged", block_size=BS, pool_blocks=pool_blocks,
+                     prefix_cache=prefix))
+
+
+def _serve(server, reqs):
+    for r in reqs:
+        server.submit(dataclasses.replace(r))
+    return {r.uid: np.asarray(r.tokens) for r in server.run()}
+
+
+def _reqs(cfg, shared_len=24, n=8, suffix=6, max_tokens=10, seed=3):
+    rng = np.random.default_rng(seed)
+    system = rng.integers(3, cfg.vocab_size, shared_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.integers(3, cfg.vocab_size, suffix).astype(np.int32)
+        out.append(Request(uid=i, prompt=np.concatenate([system, tail]),
+                           params=SamplingParams(max_tokens=max_tokens,
+                                                 temperature=0.0)))
+    return out
+
+
+def test_shared_prefix_token_identical_to_cold(setup):
+    """Greedy outputs with block sharing on == cold-cache generate, per
+    request, and the prefill work drops by more than half."""
+    cfg, tgt, drf, t_params, d_params = setup
+    reqs = _reqs(cfg)
+    off_srv, on_srv = _server(setup, "off"), _server(setup, "on")
+    off = _serve(off_srv, reqs)
+    on = _serve(on_srv, reqs)
+    assert sorted(off) == sorted(on)
+    for uid in off:
+        np.testing.assert_array_equal(on[uid], off[uid], err_msg=f"uid {uid}")
+    # offline cold-cache reference for a couple of requests
+    gen = make_generate_fn(
+        tgt, IndependentDrafter(drf, k=3, temperature=0.0),
+        EngineConfig(k=3, rule="strict", mode="greedy", temperature=0.0))
+    for r in reqs[:2]:
+        out = gen(t_params, d_params, jnp.asarray(r.prompt)[None],
+                  jnp.asarray([len(r.prompt)], jnp.int32),
+                  jax.random.PRNGKey(0), max_new=10)
+        ref = np.asarray(out["tokens"])[0, len(r.prompt):len(r.prompt) + 10]
+        np.testing.assert_array_equal(on[r.uid], ref)
+    assert on_srv.prefix.stats.hits >= len(reqs) - 1 - 3  # slots-1 cold max
+    assert on_srv.prefill_tokens < off_srv.prefill_tokens / 2
+
+
+def test_cow_mid_block_divergence(setup):
+    """A prompt diverging mid-block against a published sequence maps the
+    partially matching block, COW-clones it, and still produces cold-cache
+    output — while the publisher's cached content stays intact."""
+    cfg = setup[0]
+    rng = np.random.default_rng(5)
+    base = rng.integers(3, cfg.vocab_size, 30).astype(np.int32)
+    div = base.copy()
+    div[19:] = rng.integers(3, cfg.vocab_size, 11).astype(np.int32)  # mid-blk 2
+    reqs = [Request(uid=i, prompt=p,
+                    params=SamplingParams(max_tokens=8, temperature=0.0))
+            for i, p in enumerate([base, div, base])]
+    cold = _serve(_server(setup, "off"), reqs)
+    srv = _server(setup, "on", slots=1)    # serialised: publish then match
+    warm = _serve(srv, reqs)
+    for uid in cold:
+        np.testing.assert_array_equal(warm[uid], cold[uid],
+                                      err_msg=f"uid {uid}")
+    s = srv.prefix.stats
+    assert s.cow_clones >= 1               # uid 1 cloned blocks[2] rows 0..2
+    assert s.hits >= 2                     # uid 1 (partial) and uid 2 (full)
+
+
+def test_rollback_on_shared_blocks_never_corrupts_siblings(setup):
+    """Concurrent slots share one prefix while speculating (drafts mostly
+    rejected -> a rollback every cycle); afterwards the published blocks
+    must still serve a fresh request with cold-identical output."""
+    cfg = setup[0]
+    reqs = _reqs(cfg, shared_len=24, n=6, max_tokens=12, seed=11)
+    cold = _serve(_server(setup, "off"), reqs)
+    srv = _server(setup, "on")
+    warm = _serve(srv, reqs)               # 4 slots: concurrent sharing
+    for uid in cold:
+        np.testing.assert_array_equal(warm[uid], cold[uid],
+                                      err_msg=f"uid {uid}")
+    # the shared blocks survived every sibling's speculative rollback:
+    # a late request re-using them still matches the cold cache
+    late = [dataclasses.replace(reqs[0], uid=99)]
+    out = _serve(srv, late)
+    np.testing.assert_array_equal(out[99], cold[0])
+
+
+def test_pool_leak_free_after_harvest_and_eviction(setup):
+    """After all requests drain: every block is either free or a
+    refcount-0 cached block; explicit eviction returns the pool to
+    all-free (the refcount-leak check)."""
+    cfg = setup[0]
+    srv = _server(setup, "on")
+    _serve(srv, _reqs(cfg))
+    pool = srv.pool
+    assert pool.available == pool.n_blocks - 1        # cached counted
+    assert pool.n_cached == srv.prefix.n_indexed
+    pool.evict_all_cached()
+    assert srv.prefix.n_indexed == 0
+    assert pool.available == pool.n_blocks - 1
+    assert not pool._ref                              # zero live references
+
+
+def test_prefix_flops_and_concurrency_acceptance(setup):
+    """Scaled version of the acceptance criterion: with a shared system
+    prompt, prefill positions <= 1/4 of off, and admitted concurrency at
+    equal pool bytes >= 2x."""
+    cfg = setup[0]
+    reqs = _reqs(cfg, shared_len=32, n=12, suffix=4, max_tokens=6, seed=7)
+    off_srv = _server(setup, "off", slots=6)
+    on_srv = _server(setup, "on", slots=6)
+    off = _serve(off_srv, reqs)
+    on = _serve(on_srv, reqs)
+    for uid in off:
+        np.testing.assert_array_equal(on[uid], off[uid])
+    assert on_srv.prefill_tokens <= off_srv.prefill_tokens / 4
+
+    # equal pool bytes: room for ~2 cold requests
+    need = off_srv._blocks_needed(36, 6)
+    pool_blocks = 2 * need + 2
+
+    def peak(prefix):
+        srv = _server(setup, prefix, slots=6, pool_blocks=pool_blocks)
+        for r in reqs:
+            srv.submit(dataclasses.replace(r))
+        peak = 0
+        for _ in range(10_000):
+            if not srv.queue and all(x is None for x in srv.slot_req):
+                break
+            srv._admit()
+            peak = max(peak, sum(x is not None for x in srv.slot_req))
+            srv.step()
+            srv.sync()
+        assert len(srv._responses) == len(reqs)
+        return peak
+
+    assert peak("on") >= 2 * peak("off")
+
+
+def test_tree_topology_with_feature_drafter(setup):
+    """Tree drafts (EAGLE-style, ``wants_features``) share prefixes too:
+    the usable prefix is clamped to plen-2 so the drafter's grounding
+    feature is always decoded live."""
+    from repro.core import EagleDrafter, init_eagle_params
+    cfg, tgt, _, t_params, _ = setup
+    e_params = init_eagle_params(cfg, jax.random.PRNGKey(2))
+    ecfg = EngineConfig(k=3, rule="strict", mode="greedy", temperature=0.0,
+                        topology="tree", branch=2)
+    reqs = _reqs(cfg, shared_len=24, n=4, max_tokens=8, seed=13)
+
+    def serve(prefix):
+        srv = SpecServer(
+            tgt, EagleDrafter(tgt, k=3, temperature=0.0), t_params,
+            e_params, ecfg,
+            ServerConfig(slots=2, max_len=96, max_prompt_len=32,
+                         cache="paged", block_size=BS,
+                         prefix_cache=prefix))
+        return _serve(srv, reqs), srv
+
+    off, _ = serve("off")
+    on, srv = serve("on")
+    for uid in off:
+        np.testing.assert_array_equal(on[uid], off[uid], err_msg=f"uid {uid}")
+    assert srv.prefix.stats.hits >= 2
+    # the grounding token was never swallowed by a cached prefix
+    assert all(int(s) <= len(reqs[0].prompt) - 2
+               for s in srv.slot_start)
+
+
+def test_prefix_cache_requires_paged(setup):
+    cfg, tgt, drf, t_params, d_params = setup
+    with pytest.raises(ValueError, match="requires"):
+        SpecServer(tgt, None, t_params, d_params, EngineConfig(k=2),
+                   ServerConfig(slots=2, cache="dense", prefix_cache="on"))
+
+
+def test_prefix_cache_rejects_recurrent(setup):
+    """Hybrid targets can page their attention sub-cache, but their mamba
+    state cannot be reconstructed from shared KV blocks."""
+    cfg = ModelConfig(name="h", family="hybrid", n_layers=4,
+                      hybrid_attn_every=2, d_model=64, n_heads=2,
+                      n_kv_heads=2, d_ff=128, ssm_state=16, ssm_head_dim=32,
+                      vocab_size=61, dtype="float32")
+    tgt = build_model(cfg)
+    with pytest.raises(ValueError, match="recurrent"):
+        SpecServer(tgt, None, None, None, EngineConfig(k=2),
+                   ServerConfig(slots=2, cache="paged", prefix_cache="on"))
