@@ -252,9 +252,12 @@ def time_generate(fn, *args, repeats: int = 1, **kw):
 
 def eval_engine(name, target, t_params, drafter, d_params, ecfg: EngineConfig,
                 *, max_new=96, n_prompts=6, theta=None, ar_time=None,
-                seed=0) -> RunResult:
+                seed=0, paged=None) -> RunResult:
+    """``paged`` (a ``repro.models.paging.PagedCacheConfig``) runs the whole
+    evaluation through the paged pool — with ``kv_dtype="int8"``/``"fp8"``
+    this is how the fidelity harnesses measure quantized-KV drift."""
     p, plen = prompts(n_prompts)
-    gen = make_generate_fn(target, drafter, ecfg)
+    gen = make_generate_fn(target, drafter, ecfg, paged=paged)
     out, dt = time_generate(gen, t_params, d_params, p, plen,
                             jax.random.PRNGKey(seed), max_new=max_new,
                             theta=theta)

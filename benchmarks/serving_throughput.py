@@ -34,6 +34,8 @@ the perf trajectory baseline future PRs diff against.
     python -m benchmarks.serving_throughput            # trained tiny pair
     python -m benchmarks.serving_throughput --quick    # random weights (CI)
     python -m benchmarks.serving_throughput --quick --cache paged
+    python -m benchmarks.serving_throughput --quick --cache paged \
+        --kv-dtype int8                    # + quantized-pool section
     python -m benchmarks.serving_throughput --quick --mesh 2,1
 
 Emits the same ``name,us_per_call,derived`` CSV rows as ``benchmarks/run.py``.
@@ -500,6 +502,150 @@ def prefix_reuse(target, t_params, draft, d_params, *, quick, k=3):
 
 
 # ---------------------------------------------------------------------------
+# Quantized pool: equal-HBM admission, greedy fidelity, θ-sweep drift
+# ---------------------------------------------------------------------------
+
+def quantized_pool(target, t_params, draft, d_params, *, kv_dtype, k=3):
+    """Three measurements of a ``kv_dtype`` (int8/fp8) pool against bf16:
+
+    * **admission at equal HBM** — both pools get the same byte budget,
+      priced honestly at bf16 rates for the baseline (the CPU harness
+      stores f32, but a serving deployment would store bf16); quantized
+      blocks cost ``head_dim`` bytes (int8) + 2 scale bytes per token-head
+      vs ``2*head_dim`` for bf16, so the same bytes buy ~1.94x the blocks
+      at head_dim=64 — measured as peak concurrent requests.
+    * **greedy fidelity** — the same greedy MARS workload through both
+      pools: exact-output agreement, token agreement, and the
+      acceptance-rate delta, which must sit within the bf16 workload-noise
+      tolerance (acceptance-rate spread across bf16 runs on resampled
+      prompts of the same distribution).
+    * **θ mini-sweep** — ``benchmarks.table4_theta``-style offline sweep
+      through ``eval_engine(paged=...)`` at both dtypes: per-θ τ and
+      acceptance-rate deltas (wide-margin accepts shrug off quantization
+      noise; near-threshold ones may flip).
+
+    Returns CSV rows + the BENCH_serving.json ``quantized`` summary."""
+    from benchmarks import common as C
+    from repro.models.paging import PagedCacheConfig, pool_block_bytes
+
+    cfg = target.cfg
+    prompt_len, max_tokens, bs = 8, 8, 16
+    max_len = prompt_len + max_tokens + k + 4
+    ecfg = EngineConfig(k=k, rule="mars", theta=0.9, mode="greedy",
+                        temperature=0.0, guard="margin")
+    per_req = PagedCacheConfig(bs, 8).request_blocks(
+        prompt_len, max_tokens, k + 2, max_len)
+
+    # equal-HBM sizing: a bf16 pool holding `conc` concurrent requests sets
+    # the byte budget; the quantized pool refits the same bytes
+    conc = 12
+    bf16_cfg = dataclasses.replace(cfg, dtype="bfloat16")
+    n_bf16 = conc * per_req + 1                       # +1: trash block
+    budget = n_bf16 * pool_block_bytes(bf16_cfg, bs, "bf16")
+    n_q = budget // pool_block_bytes(bf16_cfg, bs, kv_dtype)
+    q_cap = (n_q - 1) // per_req
+    slots = q_cap + 2
+    n_req = q_cap + 2
+
+    def mk(kv, pool, seed=7):
+        server = SpecServer(
+            target, IndependentDrafter(draft, k=k, temperature=0.0),
+            t_params, d_params, ecfg,
+            ServerConfig(slots=slots, max_len=max_len,
+                         max_prompt_len=prompt_len, cache="paged",
+                         block_size=bs, pool_blocks=pool, kv_dtype=kv))
+        prompts = C.corpus().sample_batch(n_req, prompt_len, seed=seed)
+        reqs = [Request(uid=i, prompt=np.asarray(prompts[i], np.int32),
+                        params=SamplingParams(max_tokens=max_tokens,
+                                              temperature=0.0))
+                for i in range(n_req)]
+        return server, reqs
+
+    def accept_rate(resps):
+        cyc = sum(r.n_cycles for r in resps)
+        return sum(r.n_accepted for r in resps) / max(k * cyc, 1)
+
+    print(f"\nquantized pool ({kv_dtype}, block {bs}, "
+          f"budget {budget // 1024} KiB/layer at bf16 rates):")
+    b_resps, b_peak = _run_tracking_concurrency(*mk("bf16", n_bf16))
+    q_resps, q_peak = _run_tracking_concurrency(*mk(kv_dtype, n_q))
+    assert len(b_resps) == len(q_resps) == n_req
+    ratio = q_peak / max(b_peak, 1)
+    print(f"  admission: bf16 {b_peak} concurrent ({n_bf16} blocks) vs "
+          f"{kv_dtype} {q_peak} ({n_q} blocks) = {ratio:.2f}x at equal HBM")
+
+    # greedy fidelity on the SAME requests; noise tolerance from a bf16 run
+    # on resampled prompts of the same distribution
+    b_out = {r.uid: np.asarray(r.tokens) for r in b_resps}
+    q_out = {r.uid: np.asarray(r.tokens) for r in q_resps}
+    exact = np.mean([np.array_equal(b_out[u], q_out[u]) for u in b_out])
+
+    def _agree(a, b):
+        n = min(len(a), len(b))
+        return np.mean(a[:n] == b[:n]) if n else 1.0
+
+    agree = np.mean([_agree(b_out[u], q_out[u]) for u in b_out])
+    rate_b, rate_q = accept_rate(b_resps), accept_rate(q_resps)
+    n_resps, _ = _run_tracking_concurrency(*mk("bf16", n_bf16, seed=8))
+    noise = abs(accept_rate(n_resps) - rate_b)
+    tol = max(2 * noise, 0.06)
+    delta = rate_q - rate_b
+    print(f"  fidelity : exact-output {exact:.0%}, token agreement "
+          f"{agree:.1%}; accept rate {rate_b:.3f} -> {rate_q:.3f} "
+          f"(delta {delta:+.3f}, bf16 noise tol {tol:.3f})")
+    assert abs(delta) <= tol, (
+        f"{kv_dtype} acceptance-rate delta {delta:+.3f} exceeds bf16 "
+        f"noise tolerance {tol:.3f}")
+    if kv_dtype == "int8":
+        assert ratio >= 1.9, (
+            f"int8 equal-HBM admission ratio {ratio:.2f} < 1.9")
+
+    # θ mini-sweep: offline eval_engine through paged pools at both dtypes
+    drafter = IndependentDrafter(draft, k=k, temperature=0.0)
+    sweep = []
+    for th in (0.85, 0.90, 0.95):
+        rb = C.eval_engine(f"bf16@{th}", target, t_params, drafter,
+                           d_params, ecfg, max_new=16, n_prompts=4,
+                           theta=th, paged=PagedCacheConfig(bs))
+        rq = C.eval_engine(f"{kv_dtype}@{th}", target, t_params, drafter,
+                           d_params, ecfg, max_new=16, n_prompts=4,
+                           theta=th,
+                           paged=PagedCacheConfig(bs, kv_dtype=kv_dtype))
+        sweep.append({"theta": th, "tau_bf16": round(rb.tau, 3),
+                      f"tau_{kv_dtype}": round(rq.tau, 3),
+                      "accept_bf16": round(rb.accept_rate, 3),
+                      f"accept_{kv_dtype}": round(rq.accept_rate, 3),
+                      "tau_delta": round(rq.tau - rb.tau, 3)})
+        print(f"  theta={th:.2f}: tau {rb.tau:.2f} -> {rq.tau:.2f}, "
+              f"accept {rb.accept_rate:.2f} -> {rq.accept_rate:.2f}")
+
+    rows = [
+        (f"serving/quantized_admission_{kv_dtype}", 0.0,
+         f"concurrent={q_peak};bf16={b_peak};x={ratio:.2f};"
+         f"budget_bytes={budget}"),
+        (f"serving/quantized_fidelity_{kv_dtype}", 0.0,
+         f"exact={exact:.3f};agree={agree:.3f};accept_delta={delta:+.3f};"
+         f"tol={tol:.3f}"),
+    ]
+    summary = {
+        "kv_dtype": kv_dtype, "block_size": bs,
+        "equal_hbm_budget_bytes_per_layer": int(budget),
+        "bf16_blocks": int(n_bf16), "quantized_blocks": int(n_q),
+        "bf16_concurrent": int(b_peak),
+        "quantized_concurrent": int(q_peak),
+        "admission_ratio": round(ratio, 2),
+        "greedy_exact_output_rate": round(float(exact), 3),
+        "greedy_token_agreement": round(float(agree), 4),
+        "accept_rate_bf16": round(rate_b, 4),
+        "accept_rate_quantized": round(rate_q, 4),
+        "accept_rate_delta": round(delta, 4),
+        "bf16_noise_tolerance": round(tol, 4),
+        "theta_sweep": sweep,
+    }
+    return rows, summary
+
+
+# ---------------------------------------------------------------------------
 # Mesh sweep: tok/s scaling of the partitioned tick vs one device
 # ---------------------------------------------------------------------------
 
@@ -512,7 +658,7 @@ SWEEP_TARGET_CFG = ModelConfig(name="sweep-target", family="dense",
                                dtype="float32")
 
 
-def mesh_sweep(draft, d_params, mesh_shape, *, cache, k=4):
+def mesh_sweep(draft, d_params, mesh_shape, *, cache, kv_dtype="bf16", k=4):
     """Weak-scaling sweep: per-shard slot count fixed, the data axis
     multiplies the admitted concurrency.  Baseline = the SAME workload on a
     single-device server with one shard's slots; the mesh server runs
@@ -533,7 +679,8 @@ def mesh_sweep(draft, d_params, mesh_shape, *, cache, k=4):
             target, IndependentDrafter(draft, k=k), t_params, d_params,
             ecfg,
             ServerConfig(slots=slots, max_len=prompt_len + max_tokens + k + 4,
-                         max_prompt_len=prompt_len, cache=cache, mesh=mesh))
+                         max_prompt_len=prompt_len, cache=cache, mesh=mesh,
+                         kv_dtype=kv_dtype))
 
     servers = {"serving/mesh_1dev": mk(None, per_shard_slots),
                f"serving/mesh_{data}x{model}": mk(mesh_shape,
@@ -560,6 +707,7 @@ def mesh_sweep(draft, d_params, mesh_shape, *, cache, k=4):
         ("serving/mesh_scaling", 0.0, f"x={scaling:.2f}"),
     ]
     summary = {"shape": [data, model], "cache": cache,
+               "kv_dtype": kv_dtype,
                "slots_per_shard": per_shard_slots,
                "baseline_tok_s": round(base["tok_s"], 1),
                "baseline_slots": per_shard_slots,
@@ -586,6 +734,13 @@ def main():
     ap.add_argument("--cache", default="dense", choices=["dense", "paged"],
                     help="KV layout of the device-resident server (the "
                          "legacy baseline always runs dense)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8", "fp8"],
+                    help="paged only: KV pool storage dtype for the "
+                         "device-resident server; int8/fp8 add a quantized "
+                         "section (equal-HBM admission vs bf16, greedy "
+                         "fidelity, theta-sweep drift) to the report and "
+                         "BENCH_serving.json")
     ap.add_argument("--prefix-cache", default="off", choices=["off", "on"],
                     help="paged only: refcounted prefix-block sharing; "
                          "adds a prefix-reuse section (shared system "
@@ -616,13 +771,17 @@ def main():
 
     if args.prefix_cache == "on" and args.cache != "paged":
         raise SystemExit("--prefix-cache on requires --cache paged")
+    if args.kv_dtype != "bf16" and args.cache != "paged":
+        raise SystemExit(f"--kv-dtype {args.kv_dtype} requires --cache "
+                         "paged (quantized storage lives in the block pool)")
     ecfg = EngineConfig(k=args.k, rule="mars", mode="sample",
                         temperature=1.0, guard="margin")
     scfg = ServerConfig(slots=args.slots,
                         max_len=args.prompt_len + max_tokens + args.k + 4,
                         max_prompt_len=args.prompt_len,
                         steps_per_sync=args.steps_per_sync,
-                        cache=args.cache, prefix_cache=args.prefix_cache)
+                        cache=args.cache, kv_dtype=args.kv_dtype,
+                        prefix_cache=args.prefix_cache)
     reqs = _requests(n_req, max_tokens, args.prompt_len, C.corpus())
 
     def new_server():
@@ -670,10 +829,18 @@ def main():
                                               d_params, quick=args.quick,
                                               k=min(args.k, 3))
         rows += p_rows
+    quant_summary = None
+    if args.kv_dtype != "bf16":
+        q_rows, quant_summary = quantized_pool(target, t_params, draft,
+                                               d_params,
+                                               kv_dtype=args.kv_dtype,
+                                               k=min(args.k, 3))
+        rows += q_rows
     mesh_summary = None
     if mesh_shape is not None:
         m_rows, mesh_summary = mesh_sweep(draft, d_params, mesh_shape,
-                                          cache=args.cache, k=args.k)
+                                          cache=args.cache,
+                                          kv_dtype=args.kv_dtype, k=args.k)
         rows += m_rows
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
@@ -697,10 +864,22 @@ def main():
         "speedup_vs_legacy": round(speedup, 2),
         "longctx_admission": lc_summary,
         "prefix": prefix_summary,
+        "quantized": quant_summary,
         "mesh": mesh_summary,
     }
+    # merge, don't clobber: sections another invocation produced (e.g. the
+    # prefix or quantized CI legs) survive runs that don't exercise them
+    merged = {}
+    try:
+        with open(BENCH_JSON) as f:
+            merged = json.load(f)
+    except (OSError, ValueError):
+        pass
+    for key, val in summary.items():
+        if val is not None or key not in merged:
+            merged[key] = val
     with open(BENCH_JSON, "w") as f:
-        json.dump(summary, f, indent=2)
+        json.dump(merged, f, indent=2)
         f.write("\n")
     print(f"\nwrote {os.path.relpath(BENCH_JSON)}")
     return speedup

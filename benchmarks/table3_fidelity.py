@@ -32,10 +32,17 @@ def lcs_f1(a: np.ndarray, b: np.ndarray) -> float:
     return 2 * p * r / max(p + r, 1e-9)
 
 
-def run(max_new=64, n_prompts=4):
+def run(max_new=64, n_prompts=4, kv_dtype="bf16"):
+    """``kv_dtype`` != "bf16" routes the spec-decoded side through a
+    quantized paged pool (the AR reference stays full precision), so the
+    fidelity deltas measure quantization noise on top of verification."""
     target, t_params, draft, d_params = C.get_pair()
     p, plen = C.prompts(n_prompts)
     s = int(plen[0])
+    paged = None
+    if kv_dtype != "bf16":
+        from repro.models.paging import PagedCacheConfig
+        paged = PagedCacheConfig(block_size=16, kv_dtype=kv_dtype)
 
     out_ar, _, _, _ = C.eval_ar(target, t_params, max_new=max_new,
                                 n_prompts=n_prompts, temperature=T, seed=0)
@@ -51,7 +58,8 @@ def run(max_new=64, n_prompts=4):
     for rule in ("strict", "mars"):
         gen = make_generate_fn(target, drafter,
                                EngineConfig(k=K, rule=rule, mode="sample",
-                                            temperature=T, guard="margin"))
+                                            temperature=T, guard="margin"),
+                               paged=paged)
         out = gen(t_params, d_params, p, plen, jax.random.PRNGKey(0),
                   max_new=max_new)
         sd = np.asarray(out["tokens"])[:, s:s + max_new]

@@ -18,8 +18,16 @@ T = 0.0
 THETAS = [0.80, 0.84, 0.88, 0.90, 0.92, 0.96, 0.99]
 
 
-def run(max_new=96, n_prompts=6):
+def run(max_new=96, n_prompts=6, kv_dtype="bf16"):
+    """``kv_dtype`` != "bf16" sweeps θ with the engine's KV held in a
+    quantized paged pool — the per-θ speedup/quality trends should match
+    the bf16 sweep within noise (wide-margin accepts are robust to mild
+    cache quantization error)."""
     target, t_params, draft, d_params = C.get_pair()
+    paged = None
+    if kv_dtype != "bf16":
+        from repro.models.paging import PagedCacheConfig
+        paged = PagedCacheConfig(block_size=16, kv_dtype=kv_dtype)
     _, ar_time, ar_nll, ar_cnll = C.eval_ar(target, t_params,
                                             max_new=max_new,
                                             n_prompts=n_prompts,
@@ -31,7 +39,8 @@ def run(max_new=96, n_prompts=6):
     for th in THETAS:
         r = C.eval_engine(f"theta={th:.2f}", target, t_params, drafter,
                           d_params, ecfg, max_new=max_new,
-                          n_prompts=n_prompts, theta=th, ar_time=ar_time)
+                          n_prompts=n_prompts, theta=th, ar_time=ar_time,
+                          paged=paged)
         print(r.row())
         rows.append((th, r))
     # strict reference
@@ -39,7 +48,7 @@ def run(max_new=96, n_prompts=6):
                            EngineConfig(k=K, rule="strict", mode="greedy",
                                         temperature=T, guard="margin"),
                            max_new=max_new, n_prompts=n_prompts,
-                           ar_time=ar_time)
+                           ar_time=ar_time, paged=paged)
     print(strict.row())
     return rows, strict
 

@@ -28,6 +28,8 @@ rate, the prompt tokens whose KV was reused, and the blocks saved.
     PYTHONPATH=src python examples/serve_continuous.py
     PYTHONPATH=src python examples/serve_continuous.py --cache paged
     PYTHONPATH=src python examples/serve_continuous.py \
+        --cache paged --kv-dtype int8
+    PYTHONPATH=src python examples/serve_continuous.py \
         --system-prompt --system-len 64
     # 2-way slot sharding needs >= 2 devices; on CPU force host devices
     XLA_FLAGS=--xla_force_host_platform_device_count=2 \
@@ -73,12 +75,14 @@ def serve(server, n_req=12, max_tokens=48, label="", temperatures=(1.0,)):
 
 
 def serve_system_prompt(target, t_params, draft, d_params, *, slots,
-                        mesh, system_len, n_req=12, max_tokens=24):
+                        mesh, system_len, kv_dtype="bf16", n_req=12,
+                        max_tokens=24):
     """Stream ``n_req`` requests sharing one ``system_len``-token system
     prefix through the prefix cache, printing hit rate and blocks saved."""
     scfg = ServerConfig(slots=slots, max_len=256,
                         max_prompt_len=system_len + 16, cache="paged",
-                        block_size=16, prefix_cache="on", mesh=mesh)
+                        block_size=16, prefix_cache="on", mesh=mesh,
+                        kv_dtype=kv_dtype)
     server = SpecServer(
         target, IndependentDrafter(draft, k=4, temperature=0.0),
         t_params, d_params,
@@ -121,6 +125,11 @@ def main():
                          "(needs data*model devices; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N first)")
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8", "fp8"],
+                    help="paged only: KV pool storage dtype — int8/fp8 "
+                         "quantize blocks on write with per-token-head "
+                         "scales in a parallel pool")
     ap.add_argument("--system-prompt", action="store_true",
                     help="stream requests sharing one long system prefix "
                          "through the prefix cache (paged implied); print "
@@ -135,15 +144,21 @@ def main():
             assert len(mesh) == 2 and min(mesh) >= 1
         except (ValueError, AssertionError):
             raise SystemExit(f"--mesh expects DATA,MODEL (got {args.mesh!r})")
+    if args.kv_dtype != "bf16" and args.cache != "paged" \
+            and not args.system_prompt:
+        raise SystemExit(f"--kv-dtype {args.kv_dtype} requires --cache "
+                         "paged (quantized storage lives in the block pool)")
 
     target, t_params, draft, d_params = C.get_pair()
     if args.system_prompt:
         serve_system_prompt(target, t_params, draft, d_params,
                             slots=args.slots, mesh=mesh,
-                            system_len=args.system_len)
+                            system_len=args.system_len,
+                            kv_dtype=args.kv_dtype)
         return
     scfg = ServerConfig(slots=args.slots, max_len=256, max_prompt_len=32,
-                        cache=args.cache, mesh=mesh)
+                        cache=args.cache, mesh=mesh,
+                        kv_dtype=args.kv_dtype)
 
     # chain topology: independent small-LM drafter, sampling verification,
     # a different per-request temperature riding each slot's carry

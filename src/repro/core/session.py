@@ -513,14 +513,29 @@ class DecodeSession:
     # -- full generation ------------------------------------------------------
     def generate(self, t_params, d_params, prompt: jnp.ndarray,
                  prompt_len: jnp.ndarray, max_new: int, key,
-                 theta=None, encoder_frames=None) -> Dict[str, Any]:
-        """prompt: (B, S) right-padded; prompt_len: (B,) valid lengths."""
+                 theta=None, encoder_frames=None,
+                 paged=None) -> Dict[str, Any]:
+        """prompt: (B, S) right-padded; prompt_len: (B,) valid lengths.
+
+        ``paged`` (a :class:`repro.models.paging.PagedCacheConfig`) routes
+        the target cache through the paged pool with a dense-equivalent
+        static block assignment (``paging.full_tables``) — the offline path
+        the fidelity harnesses use to measure a quantized pool
+        (``kv_dtype="int8"``/``"fp8"``) against the dense cache; the
+        config's ``n_blocks`` is overridden with the exact static-pool
+        size."""
         b, s = prompt.shape
         l_buf = s + max_new + self.topology.buffer_margin
+        block_rows = None
+        if paged is not None:
+            from repro.models.paging import full_tables
+            mb = paged.max_blocks(l_buf)
+            paged = dataclasses.replace(paged, n_blocks=1 + b * mb)
+            block_rows = full_tables(b, mb)
         state = self.init_state(t_params, d_params, b, l_buf, key=key,
-                                encoder_frames=encoder_frames)
+                                encoder_frames=encoder_frames, paged=paged)
         state = self.prefill(t_params, d_params, state, prompt, prompt_len,
-                             budget=max_new)
+                             budget=max_new, block_rows=block_rows)
 
         max_cycles = max_new  # worst case: 1 committed token per cycle
 
@@ -541,9 +556,13 @@ class DecodeSession:
         }
 
 
-def make_generate_fn(target: Model, drafter, cfg: EngineConfig):
+def make_generate_fn(target: Model, drafter, cfg: EngineConfig, *,
+                     paged=None):
     """Returns a jitted generate(t_params, d_params, prompt, prompt_len, key)
-    for any topology the config names."""
+    for any topology the config names.  ``paged`` (a
+    :class:`repro.models.paging.PagedCacheConfig`) makes every generation
+    run through the paged pool — the fidelity harnesses' lever for
+    comparing quantized KV storage against the dense baseline."""
     session = DecodeSession(target, drafter, cfg)
 
     @functools.partial(jax.jit, static_argnames=("max_new",))
@@ -553,6 +572,6 @@ def make_generate_fn(target: Model, drafter, cfg: EngineConfig):
             theta = cfg.theta
         return session.generate(t_params, d_params, prompt, prompt_len,
                                 max_new, key, theta=jnp.asarray(theta),
-                                encoder_frames=encoder_frames)
+                                encoder_frames=encoder_frames, paged=paged)
 
     return generate

@@ -41,7 +41,7 @@ NEG = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
             o_ref, m_ref, l_ref, *, bl: int, n_lblocks: int, window: int,
-            hkv: int, g: int, d: int):
+            hkv: int, g: int, d: int, ks_ref=None, vs_ref=None):
     lb = pl.program_id(1)
 
     @pl.when(lb == 0)
@@ -53,6 +53,11 @@ def _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
     q = q_ref[0].astype(jnp.float32)                 # (H, D)
     k = k_ref[0].astype(jnp.float32)                 # (BL, Hkv, D)
     v = v_ref[0].astype(jnp.float32)
+    if ks_ref is not None:
+        # quantized pool: the block's scale row rode in with it — dequant
+        # in-register, the dense f32 view never exists outside VMEM
+        k = k * ks_ref[0].astype(jnp.float32)[..., None]
+        v = v * vs_ref[0].astype(jnp.float32)[..., None]
     kpos = kpos_ref[0]                               # (BL,)
     qpos = qpos_ref[0]                               # scalar-ish (1,)
 
@@ -140,6 +145,8 @@ def decode_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def paged_decode_attention_kernel(q: jnp.ndarray, k_pool: jnp.ndarray,
                                   v_pool: jnp.ndarray, table: jnp.ndarray,
                                   k_pos: jnp.ndarray, q_pos: jnp.ndarray, *,
+                                  k_scale: jnp.ndarray = None,
+                                  v_scale: jnp.ndarray = None,
                                   window: int = 0,
                                   interpret: bool = False) -> jnp.ndarray:
     """q: (B, H, D); k_pool/v_pool: (N, bs, Hkv, D); table: (B, MB) physical
@@ -150,24 +157,40 @@ def paged_decode_attention_kernel(q: jnp.ndarray, k_pool: jnp.ndarray,
     ``pool[table].reshape(B, MB*bs, ...)`` — but nothing is gathered: the
     scalar-prefetched table drives the k/v block index map, so each grid
     step DMAs one pool block straight from HBM.
+
+    Quantized pools (``repro.models.paging`` kv_dtype int8/fp8) pass the
+    parallel scale pools ``k_scale``/``v_scale`` (N, bs, Hkv): their
+    BlockSpec index map reads the same scalar-prefetched ``table[i, j]``
+    entry, so each grid step's DMA brings the block's scale row in
+    alongside its payload and the kernel dequantizes inside the gather —
+    a dense dequantized view is never materialised in HBM.
     """
     b, h, d = q.shape
     n, bs, hkv, _ = k_pool.shape
     mb = table.shape[1]
     g = h // hkv
+    quant = k_scale is not None
 
+    in_specs = [
+        pl.BlockSpec((1, h, d), lambda i, j, tbl: (i, 0, 0)),
+        pl.BlockSpec((1, bs, hkv, d),
+                     lambda i, j, tbl: (tbl[i, j], 0, 0, 0)),
+        pl.BlockSpec((1, bs, hkv, d),
+                     lambda i, j, tbl: (tbl[i, j], 0, 0, 0)),
+    ]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, bs, hkv), lambda i, j, tbl: (tbl[i, j], 0, 0)),
+            pl.BlockSpec((1, bs, hkv), lambda i, j, tbl: (tbl[i, j], 0, 0)),
+        ]
+    in_specs += [
+        pl.BlockSpec((1, bs), lambda i, j, tbl: (i, j)),
+        pl.BlockSpec((1,), lambda i, j, tbl: (i,)),
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,           # the block table
         grid=(b, mb),
-        in_specs=[
-            pl.BlockSpec((1, h, d), lambda i, j, tbl: (i, 0, 0)),
-            pl.BlockSpec((1, bs, hkv, d),
-                         lambda i, j, tbl: (tbl[i, j], 0, 0, 0)),
-            pl.BlockSpec((1, bs, hkv, d),
-                         lambda i, j, tbl: (tbl[i, j], 0, 0, 0)),
-            pl.BlockSpec((1, bs), lambda i, j, tbl: (i, j)),
-            pl.BlockSpec((1,), lambda i, j, tbl: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, h, d), lambda i, j, tbl: (i, 0, 0)),
             pl.BlockSpec((1, h), lambda i, j, tbl: (i, 0)),
@@ -175,10 +198,20 @@ def paged_decode_attention_kernel(q: jnp.ndarray, k_pool: jnp.ndarray,
         ],
     )
 
-    def kernel(tbl_ref, q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
-               o_ref, m_ref, l_ref):
-        _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref, m_ref,
-                l_ref, bl=bs, n_lblocks=mb, window=window, hkv=hkv, g=g, d=d)
+    if quant:
+        def kernel(tbl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref,
+                   qpos_ref, o_ref, m_ref, l_ref):
+            _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref, m_ref,
+                    l_ref, bl=bs, n_lblocks=mb, window=window, hkv=hkv,
+                    g=g, d=d, ks_ref=ks_ref, vs_ref=vs_ref)
+        operands = (table, q, k_pool, v_pool, k_scale, v_scale, k_pos, q_pos)
+    else:
+        def kernel(tbl_ref, q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
+                   o_ref, m_ref, l_ref):
+            _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref, m_ref,
+                    l_ref, bl=bs, n_lblocks=mb, window=window, hkv=hkv,
+                    g=g, d=d)
+        operands = (table, q, k_pool, v_pool, k_pos, q_pos)
 
     out, _, _ = pl.pallas_call(
         kernel,
@@ -191,5 +224,5 @@ def paged_decode_attention_kernel(q: jnp.ndarray, k_pool: jnp.ndarray,
         interpret=interpret,
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
-    )(table, q, k_pool, v_pool, k_pos, q_pos)
+    )(*operands)
     return out

@@ -45,12 +45,16 @@ def decode_attention(q, k, v, k_pos, q_pos, *, window: int = 0,
 
 
 def paged_decode_attention(q, k_pool, v_pool, table, k_pos, q_pos, *,
-                           window: int = 0):
+                           k_scale=None, v_scale=None, window: int = 0):
     """Flash-decode over a paged cache (``repro.models.paging`` layout):
     the block table is scalar-prefetched so the kernel reads physical pool
-    blocks directly — no host- or device-side gather of a dense view."""
+    blocks directly — no host- or device-side gather of a dense view.
+    Quantized pools pass their scale pools as ``k_scale``/``v_scale``; the
+    kernel prefetches each block's scale row with its payload and
+    dequantizes inside the gather."""
     return paged_decode_attention_kernel(q, k_pool, v_pool, table, k_pos,
-                                         q_pos, window=window,
+                                         q_pos, k_scale=k_scale,
+                                         v_scale=v_scale, window=window,
                                          interpret=_interpret())
 
 

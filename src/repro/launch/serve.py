@@ -64,6 +64,12 @@ def main():
     ap.add_argument("--pool-blocks", type=int, default=0,
                     help="paged: physical blocks in the shared pool "
                          "(0 = dense-equivalent capacity)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8", "fp8"],
+                    help="paged only: KV pool storage dtype; int8/fp8 store "
+                         "quantized blocks with per-token-head scales in a "
+                         "parallel pool (equal HBM admits ~2x the requests; "
+                         "see docs/SERVING.md)")
     ap.add_argument("--prefix-cache", default="off", choices=["off", "on"],
                     help="paged only: share published KV blocks between "
                          "requests with common token prefixes (refcounted "
@@ -105,6 +111,17 @@ def main():
             raise SystemExit(
                 f"--cache paged is incompatible with --arch {args.arch}: "
                 f"{reason}; use --cache dense")
+    if args.kv_dtype != "bf16":
+        if args.cache != "paged":
+            raise SystemExit(f"--kv-dtype {args.kv_dtype} requires --cache "
+                             "paged (quantized storage lives in the block "
+                             "pool); use --cache paged or --kv-dtype bf16")
+        from repro.models.paging import kv_dtype_unsupported_reason
+        reason = kv_dtype_unsupported_reason(args.kv_dtype)
+        if reason is not None:
+            raise SystemExit(
+                f"--kv-dtype {args.kv_dtype} is unavailable for "
+                f"--arch {args.arch}: {reason}")
     target = build_model(cfg)
     t_params = target.init(jax.random.PRNGKey(0))
     if not args.smoke:
@@ -145,6 +162,7 @@ def main():
                      steps_per_sync=args.steps_per_sync, cache=args.cache,
                      block_size=args.block_size,
                      pool_blocks=args.pool_blocks, mesh=mesh_shape,
+                     kv_dtype=args.kv_dtype,
                      prefix_cache=args.prefix_cache,
                      min_match_blocks=args.min_match_blocks))
 
@@ -158,9 +176,10 @@ def main():
                                   temperature=args.temperature)))
     mesh_note = (f", mesh={mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape
                  else "")
+    kv_note = f", kv={args.kv_dtype}" if args.kv_dtype != "bf16" else ""
     print(f"serving {args.requests} requests "
           f"({args.topology}, {args.rule}, θ={args.theta}, K={args.k}, "
-          f"cache={args.cache}{mesh_note}) ...")
+          f"cache={args.cache}{kv_note}{mesh_note}) ...")
     for r in sorted(server.run(), key=lambda r: r.uid):
         print(f"  req {r.uid:2d}: {len(r.tokens):3d} tokens "
               f"tau={r.tau:4.2f} latency={r.latency_s:5.2f}s")

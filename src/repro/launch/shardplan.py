@@ -130,6 +130,10 @@ def _cache_spec_for_path(path: str, ndim: int, rules) -> P:
     # "model"; tables and logical positions are slot-indexed like the carry
     if path.endswith("k_pool") or path.endswith("v_pool"):
         return pad([rules.get("pool_blocks"), None, kvh, None])
+    # quantized pool: the scale pool shards exactly like its parent —
+    # physical blocks on "data", KV heads on "model" (no head_dim)
+    if path.endswith("k_scale") or path.endswith("v_scale"):
+        return pad([rules.get("pool_blocks"), None, kvh])
     if path.endswith("table"):
         return pad([b, None])
     if path.endswith("trash"):            # per-slot trash block id

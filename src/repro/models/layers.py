@@ -499,6 +499,12 @@ def attention_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                 "v_pool": constrain(new_cache["v_pool"],
                                     "pool_blocks", None, "kv_heads", None),
             }
+            # quantized pool: the scale rows shard exactly like their
+            # parent pool (blocks on data, KV heads on model)
+            for leaf in ("k_scale", "v_scale"):
+                if leaf in new_cache:
+                    att_cache[leaf] = constrain(
+                        new_cache[leaf], "pool_blocks", None, "kv_heads")
 
             def attend(qc, pc):
                 return P.paged_blockwise_attention(

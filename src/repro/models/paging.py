@@ -64,6 +64,25 @@ writes there.  A table entry equal to the slot's trash id means *unmapped*.
 
 ``cfg.sliding_window`` targets keep the dense ring (the window already
 bounds their per-slot memory); requesting a paged cache for one is an error.
+
+Quantized pool (``PagedCacheConfig.kv_dtype``)
+----------------------------------------------
+``kv_dtype="int8"`` / ``"fp8"`` stores ``k_pool``/``v_pool`` in the low-bit
+dtype with per-token per-head amax scales riding in a small parallel **scale
+pool** — ``k_scale``/``v_scale`` of shape ``(n_layers, n_blocks, block_size,
+Hkv)`` — indexed by the same physical block ids as the payload pools, so a
+block's scale row travels with it through every table operation.  Writes
+quantize (:func:`quantize_kv` inside :func:`paged_cache_write` — the prefill
+seeding path and decode writes share it); reads dequantize at the gather
+(:func:`paged_blockwise_attention`, :func:`gather_dense_view`, and the
+Pallas ``kernels.decode_attn.paged_decode_attention_kernel``) without ever
+materialising a dense dequantized view.  Because each token's scale is
+finalized at its own write — never accumulated per block history — rollback
+stays a pure index rewind, and :func:`cow_clone_blocks` / prefix
+publish/acquire move a block's bytes and its scale row as one unit, so the
+refcount>1 never-mutated invariant is untouched.  ``kv_dtype="bf16"`` (the
+default) means *unquantized*: the pool keeps the model's activation dtype
+and no scale leaves exist, exactly the historical layout.
 """
 from __future__ import annotations
 
@@ -83,16 +102,96 @@ Params = Dict[str, jnp.ndarray]
 # (their stored logical position stays invalid).
 TRASH_BLOCK = 0
 
+# Quantized-pool storage modes.  "bf16" = unquantized (the pool keeps the
+# model's activation dtype — bf16 in production, float32 in the CPU
+# harness); "int8"/"fp8" store low-bit payloads with per-token per-head
+# amax scales in the parallel scale pool.
+KV_DTYPES = ("bf16", "int8", "fp8")
+
+# Scale-row element type: float16 keeps the scale overhead at 2 bytes per
+# token-head (an int8 block + scales stays under half a bf16 block, which
+# is what the equal-HBM admission win rides on), with ample range — scales
+# are amax/qmax of O(1) activations — and 10 bits of mantissa, well below
+# the int8 rounding error it multiplies.
+SCALE_DTYPE = jnp.float16
+
+_QMAX = {"int8": 127.0, "fp8": 448.0}     # fp8 = float8_e4m3fn max normal
+
+
+def kv_dtype_unsupported_reason(kv_dtype: str) -> Optional[str]:
+    """Why ``kv_dtype`` cannot back the pool here, or None when it can.
+
+    Mirrors :func:`paged_unsupported_reason`: the serving layer and the
+    launchers call this before any cache is built so an unsupported dtype
+    fails with one actionable error naming the backend, instead of a raise
+    from deep inside a jitted cache write."""
+    if kv_dtype not in KV_DTYPES:
+        return (f"unknown kv_dtype {kv_dtype!r} "
+                f"(choose from {', '.join(KV_DTYPES)})")
+    if kv_dtype == "fp8" and not hasattr(jnp, "float8_e4m3fn"):
+        return (f"fp8 KV storage needs jnp.float8_e4m3fn, which this jax "
+                f"build ({jax.__version__}, backend "
+                f"{jax.default_backend()!r}) does not provide; use "
+                f"kv_dtype='int8'")
+    return None
+
+
+def quantize_kv(x: jnp.ndarray, dtype) -> tuple:
+    """Quantize ``x`` (..., D) to storage ``dtype`` with per-(...)-row amax
+    scales: returns ``(q, scale)`` where ``q`` has ``x``'s shape in
+    ``dtype`` and ``scale`` (...,) is :data:`SCALE_DTYPE`.  Quantization
+    divides by the *stored* (float16-rounded) scale, so
+    :func:`dequantize_kv` round-trips within the storage dtype's own
+    rounding error.  All-zero rows store scale 1 (dequant stays zero)."""
+    dtype = jnp.dtype(dtype)
+    qmax = _QMAX["int8" if dtype == jnp.dtype(jnp.int8) else "fp8"]
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(SCALE_DTYPE)
+    y = xf / scale.astype(jnp.float32)[..., None]
+    if dtype == jnp.dtype(jnp.int8):
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(dtype)
+    else:
+        q = y.astype(dtype)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv`: ``q`` (..., D) low-bit payload,
+    ``scale`` (...,) per-row scales → float32."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
 
 @dataclasses.dataclass(frozen=True)
 class PagedCacheConfig:
     """Shape of the shared block pool.
 
     ``n_blocks`` counts *physical* blocks including the reserved trash block,
-    so ``n_blocks - 1`` are allocatable.  Sizing guide: docs/SERVING.md.
+    so ``n_blocks - 1`` are allocatable.  ``kv_dtype`` picks the pool's
+    storage mode (see :data:`KV_DTYPES`): quantized modes add the parallel
+    scale pool and shrink the per-block HBM cost
+    (:func:`pool_block_bytes`).  Sizing guide: docs/SERVING.md.
     """
     block_size: int = 16
     n_blocks: int = 64
+    kv_dtype: str = "bf16"
+
+    def __post_init__(self):
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {self.kv_dtype!r} "
+                             f"(choose from {', '.join(KV_DTYPES)})")
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype != "bf16"
+
+    def storage_dtype(self, cfg: ModelConfig):
+        """Pool element dtype: the model's activation dtype when
+        unquantized, the low-bit storage type otherwise."""
+        from repro.models.layers import dtype_of
+        if self.kv_dtype == "bf16":
+            return dtype_of(cfg)
+        return jnp.int8 if self.kv_dtype == "int8" else jnp.float8_e4m3fn
 
     def max_blocks(self, max_len: int) -> int:
         """Table width: logical blocks needed for a ``max_len`` slot."""
@@ -344,6 +443,28 @@ def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
     return None
 
 
+def pool_block_bytes(cfg: ModelConfig, block_size: int,
+                     kv_dtype: str = "bf16") -> int:
+    """HBM bytes ONE physical block costs per layer: K + V payload plus,
+    when quantized, the parallel scale rows.  The unit for honest equal-HBM
+    pool sizing: a quantized ``ServerConfig(pool_blocks=0)`` fits as many
+    blocks as the dense-equivalent *byte* budget allows, and the admission
+    benchmark compares pools of equal bytes, not equal block counts."""
+    from repro.models.layers import dtype_of
+
+    reason = kv_dtype_unsupported_reason(kv_dtype)
+    if reason is not None:
+        raise ValueError(f"cannot size a kv_dtype={kv_dtype!r} pool: "
+                         f"{reason}")
+    if kv_dtype == "bf16":
+        per_th = cfg.head_dim * jnp.dtype(dtype_of(cfg)).itemsize
+    else:
+        store = jnp.int8 if kv_dtype == "int8" else jnp.float8_e4m3fn
+        per_th = (cfg.head_dim * jnp.dtype(store).itemsize
+                  + jnp.dtype(SCALE_DTYPE).itemsize)
+    return 2 * block_size * cfg.n_kv_heads * per_th
+
+
 def used_blocks(n_tokens: int, block_size: int) -> int:
     """Blocks a slot actually used for ``n_tokens`` cached entries.  The
     serving scheduler frees finished slots' lists whole at harvest; this
@@ -378,16 +499,18 @@ def slot_trash_blocks(batch: int, n_blocks: int,
 def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                                paged: PagedCacheConfig, *,
                                n_layers: Optional[int] = None,
-                               data_shards: int = 1) -> Params:
+                               data_shards: int = 1,
+                               kv_dtype: Optional[str] = None) -> Params:
     """Paged counterpart of ``layers.make_attention_cache``.
 
     Layout (leading ``n_layers`` dim on every leaf when given, so the layer
     scan slices the pool, positions, and table uniformly)::
 
-        k_pool / v_pool : (n_layers, n_blocks, block_size, Hkv, D)
-        pos             : (n_layers, B, L + TRASH_SLOTS)   logical, per slot
-        table           : (n_layers, B, max_blocks)        physical block ids
-        trash           : (n_layers, B)                    per-slot trash id
+        k_pool / v_pool   : (n_layers, n_blocks, block_size, Hkv, D)
+        k_scale / v_scale : (n_layers, n_blocks, block_size, Hkv)  quantized
+        pos               : (n_layers, B, L + TRASH_SLOTS) logical, per slot
+        table             : (n_layers, B, max_blocks)      physical block ids
+        trash             : (n_layers, B)                  per-slot trash id
 
     ``table`` and ``trash`` are logically layer-independent (the host writes
     the same rows to every layer); they carry the layer dim only so the
@@ -395,32 +518,48 @@ def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
     slot must be mapped via :func:`assign_block_rows` before its writes
     persist.  ``data_shards`` > 1 gives every slot the reserved first block
     of its own pool partition as trash (shard-local masked writes).
+
+    ``kv_dtype`` overrides ``paged.kv_dtype``; quantized modes store the
+    pools in the low-bit dtype and add the parallel scale pool (same
+    physical block indexing, :data:`SCALE_DTYPE` elements).
     """
-    from repro.models.layers import TRASH_SLOTS, _INVALID_POS, dtype_of
+    from repro.models.layers import TRASH_SLOTS, _INVALID_POS
 
     reason = paged_unsupported_reason(cfg)
     if reason is not None:
         raise ValueError(
             f"paged KV cache does not support {cfg.name!r}: {reason}")
+    if kv_dtype is not None:
+        paged = dataclasses.replace(paged, kv_dtype=kv_dtype)
+    reason = kv_dtype_unsupported_reason(paged.kv_dtype)
+    if reason is not None:
+        raise ValueError(f"paged KV cache for {cfg.name!r} cannot use "
+                         f"kv_dtype={paged.kv_dtype!r}: {reason}")
     bs = paged.block_size
     mb = paged.max_blocks(max_len)
     trash = slot_trash_blocks(batch, paged.n_blocks, data_shards)
     shape_pool = (paged.n_blocks, bs, cfg.n_kv_heads, cfg.head_dim)
+    shape_scale = (paged.n_blocks, bs, cfg.n_kv_heads)
     shape_pos = (batch, mb * bs + TRASH_SLOTS)
     table = jnp.broadcast_to(trash[:, None], (batch, mb))
     if n_layers is not None:
         shape_pool = (n_layers,) + shape_pool
+        shape_scale = (n_layers,) + shape_scale
         shape_pos = (n_layers,) + shape_pos
         table = jnp.broadcast_to(table[None], (n_layers, batch, mb))
         trash = jnp.broadcast_to(trash[None], (n_layers, batch))
-    dt = dtype_of(cfg)
-    return {
+    dt = paged.storage_dtype(cfg)
+    out = {
         "k_pool": jnp.zeros(shape_pool, dt),
         "v_pool": jnp.zeros(shape_pool, dt),
         "pos": jnp.full(shape_pos, _INVALID_POS, jnp.int32),
         "table": jnp.array(table, jnp.int32),
         "trash": jnp.array(trash, jnp.int32),
     }
+    if paged.quantized:
+        out["k_scale"] = jnp.zeros(shape_scale, SCALE_DTYPE)
+        out["v_scale"] = jnp.zeros(shape_scale, SCALE_DTYPE)
+    return out
 
 
 def is_paged(cache: Optional[Params]) -> bool:
@@ -451,17 +590,26 @@ def cow_clone_blocks(cache: Params, src: jnp.ndarray,
     land in the private copy; the shared ``src`` (refcount > 1) is never
     mutated.  Slots with nothing to clone pass ``src == dst == trash``:
     the copy degenerates to trash → trash.  On a serving mesh both ids come
-    from the slot's own pool partition, so the clone stays shard-local."""
-    k_pool, v_pool = cache["k_pool"], cache["v_pool"]
+    from the slot's own pool partition, so the clone stays shard-local.
+    On a quantized pool the scale rows are cloned with their payload — a
+    block's bytes plus its scale row move as one unit, so the copy is
+    bit-exact and no requantization happens."""
     src = src.astype(jnp.int32)
     dst = dst.astype(jnp.int32)
-    if k_pool.ndim == 5:                   # (n_layers, N, bs, Hkv, D)
-        new_k = k_pool.at[:, dst].set(k_pool[:, src])
-        new_v = v_pool.at[:, dst].set(v_pool[:, src])
-    else:
-        new_k = k_pool.at[dst].set(k_pool[src])
-        new_v = v_pool.at[dst].set(v_pool[src])
-    return {**cache, "k_pool": new_k, "v_pool": new_v}
+
+    def clone(pool, layered):
+        if layered:                        # leading n_layers dim
+            return pool.at[:, dst].set(pool[:, src])
+        return pool.at[dst].set(pool[src])
+
+    layered = cache["k_pool"].ndim == 5    # (n_layers, N, bs, Hkv, D)
+    new = {**cache,
+           "k_pool": clone(cache["k_pool"], layered),
+           "v_pool": clone(cache["v_pool"], layered)}
+    for leaf in ("k_scale", "v_scale"):
+        if leaf in cache:
+            new[leaf] = clone(cache[leaf], layered)
+    return new
 
 
 def seed_prefix_positions(cache: Params, slot_mask: jnp.ndarray,
@@ -507,6 +655,13 @@ def paged_cache_write(cache: Params, new_k, new_v, positions) -> Params:
     contract.  Writes to slots whose table row is unmapped (== the slot's
     trash id) are *dropped whole* (K/V to trash, pos stays invalid) — an
     unmapped slot can neither be corrupted nor fabricate readable entries.
+
+    On a quantized pool (scale leaves present) the write is
+    quantize-on-write: each (token, head) row quantizes against its own
+    amax (:func:`quantize_kv`) and scatters payload + scale with the same
+    ``[phys, off]`` indices.  A write granule finalizes its own scales, so
+    a later index rewind (rollback) simply leaves stale rows to be
+    overwritten — committed blocks' scales are never revisited.
     """
     from repro.models.layers import TRASH_SLOTS, _INVALID_POS
 
@@ -533,13 +688,20 @@ def paged_cache_write(cache: Params, new_k, new_v, positions) -> Params:
                       l + (jnp.arange(t, dtype=positions.dtype)
                            % TRASH_SLOTS)[None])
     stored = jnp.where(valid, positions, _INVALID_POS)
-    return {
-        **cache,
-        "k_pool": k_pool.at[phys, off].set(new_k.astype(k_pool.dtype)),
-        "v_pool": v_pool.at[phys, off].set(new_v.astype(v_pool.dtype)),
-        "pos": pos_arr.at[b_idx, pslot].set(stored.astype(jnp.int32)),
-        "table": table,
-    }
+    out = {**cache,
+           "pos": pos_arr.at[b_idx, pslot].set(stored.astype(jnp.int32)),
+           "table": table}
+    if "k_scale" in cache:
+        qk, sk = quantize_kv(new_k, k_pool.dtype)
+        qv, sv = quantize_kv(new_v, v_pool.dtype)
+        out["k_pool"] = k_pool.at[phys, off].set(qk)
+        out["v_pool"] = v_pool.at[phys, off].set(qv)
+        out["k_scale"] = cache["k_scale"].at[phys, off].set(sk)
+        out["v_scale"] = cache["v_scale"].at[phys, off].set(sv)
+    else:
+        out["k_pool"] = k_pool.at[phys, off].set(new_k.astype(k_pool.dtype))
+        out["v_pool"] = v_pool.at[phys, off].set(new_v.astype(v_pool.dtype))
+    return out
 
 
 def paged_blockwise_attention(q: jnp.ndarray, cache: Params,
@@ -555,7 +717,9 @@ def paged_blockwise_attention(q: jnp.ndarray, cache: Params,
     the scan: each step fetches ``chunk // block_size`` table entries
     (matching the dense path's scan granularity, so small blocks don't
     multiply sequential steps), and peak memory is the pool plus one
-    (B, chunk) window, never the full logical view.
+    (B, chunk) window, never the full logical view.  On a quantized pool
+    each step additionally gathers the fetched blocks' scale rows and
+    dequantizes in-register — only the low-bit pool ever lives in HBM.
     """
     from repro.models.layers import (_INVALID_POS, _NEG_INF, kv_valid_mask,
                                      online_softmax_step)
@@ -588,10 +752,19 @@ def paged_blockwise_attention(q: jnp.ndarray, cache: Params,
     l0 = jnp.zeros((b, t, hkv, g), jnp.float32)
     o0 = jnp.zeros((b, t, hkv, g, d), jnp.float32)
 
+    quant = "k_scale" in cache
+    k_scale = cache.get("k_scale")             # (N, bs, Hkv) or None
+    v_scale = cache.get("v_scale")
+
     def step(carry, xs):
         tbl_j, pos_j = xs                       # (B, GB), (B, GB*bs)
         kci = k_pool[tbl_j].reshape(b, gb * bs, hkv, d)
         vci = v_pool[tbl_j].reshape(b, gb * bs, hkv, d)
+        if quant:
+            ks = k_scale[tbl_j].reshape(b, gb * bs, hkv)
+            vs = v_scale[tbl_j].reshape(b, gb * bs, hkv)
+            kci = dequantize_kv(kci, ks)
+            vci = dequantize_kv(vci, vs)
         valid = kv_valid_mask(pos_j, q_pos, causal=causal, window=window)
         return online_softmax_step(carry, qg, kci, vci, valid, scale), None
 
@@ -604,10 +777,14 @@ def paged_blockwise_attention(q: jnp.ndarray, cache: Params,
 
 def gather_dense_view(cache: Params) -> Params:
     """Materialise the dense {k, v, pos} view of one layer's paged cache —
-    (B, L, Hkv, D) — for oracles and the Pallas-kernel fallback path.  This
-    allocates the full logical view: debugging/testing only."""
+    (B, L, Hkv, D) — for oracles and the Pallas-kernel fallback path.
+    Quantized pools come back dequantized (float32).  This allocates the
+    full logical view: debugging/testing only."""
     k = cache["k_pool"][cache["table"]]                # (B, MB, bs, Hkv, D)
     v = cache["v_pool"][cache["table"]]
+    if "k_scale" in cache:
+        k = dequantize_kv(k, cache["k_scale"][cache["table"]])
+        v = dequantize_kv(v, cache["v_scale"][cache["table"]])
     b, mb, bs = k.shape[0], k.shape[1], k.shape[2]
     l = mb * bs
     return {

@@ -106,7 +106,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.session import DecodeSession, DecodeState, EngineConfig
 from repro.models.model import Model
 from repro.models.paging import (BlockPool, PagedCacheConfig,
-                                 ShardedBlockPool, paged_unsupported_reason,
+                                 ShardedBlockPool,
+                                 kv_dtype_unsupported_reason,
+                                 paged_unsupported_reason, pool_block_bytes,
                                  slot_trash_blocks)
 from repro.serving.prefix_cache import PrefixCache
 from repro.sharding import axis_rules, serving_rules
@@ -132,6 +134,7 @@ class Response:
     n_cycles: int
     n_committed: int
     latency_s: float
+    n_accepted: int = 0        # accepted draft tokens (fidelity reporting)
 
     @property
     def tau(self) -> float:
@@ -158,6 +161,15 @@ class ServerConfig:
     block_size: int = 16                # paged: tokens per KV block
     pool_blocks: int = 0                # paged: physical blocks incl. trash;
                                         # 0 = dense-equivalent capacity
+                                        # (dense-equivalent BYTES when
+                                        # kv_dtype is quantized)
+    # Pool storage mode (paged only): "bf16" keeps the model's activation
+    # dtype; "int8"/"fp8" store low-bit blocks with per-token per-head amax
+    # scales in a parallel scale pool (repro.models.paging).  Quantized
+    # pools fit ~2-4x the blocks in the same HBM, so pool_blocks=0 sizes
+    # the pool in BYTES (dense-equivalent budget / quantized block bytes)
+    # and admission rises accordingly.  Sizing guide: docs/SERVING.md.
+    kv_dtype: str = "bf16"              # "bf16" | "int8" | "fp8"
     # (data, model) serving-mesh shape; None/(1,1) = single device.  Slots
     # shard over "data" (slots % data == 0 required), target/drafter tensor
     # dims over "model"; the paged pool is partitioned under both (rounded
@@ -200,6 +212,19 @@ class SpecServer:
                     f"ServerConfig(cache='paged') is incompatible with "
                     f"arch {target.cfg.name!r}: {reason}; use "
                     f"cache='dense'")
+        # kv_dtype validation mirrors the paged check: one actionable error
+        # naming the arch/backend before any device state exists
+        reason = kv_dtype_unsupported_reason(cfg.kv_dtype)
+        if reason is not None:
+            raise ValueError(
+                f"ServerConfig(kv_dtype={cfg.kv_dtype!r}) cannot serve "
+                f"arch {target.cfg.name!r}: {reason}")
+        if cfg.kv_dtype != "bf16" and cfg.cache != "paged":
+            raise ValueError(
+                f"ServerConfig(kv_dtype={cfg.kv_dtype!r}) requires "
+                f"cache='paged': quantized storage lives in the shared "
+                f"block pool's scale-pool layout, which the dense per-slot "
+                f"ring does not have")
         if cfg.prefix_cache == "on":
             if cfg.cache != "paged":
                 raise ValueError(
@@ -231,10 +256,21 @@ class SpecServer:
         if cfg.cache == "paged":
             n_blocks = (cfg.pool_blocks or
                         1 + b * -(-cfg.max_len // cfg.block_size))
+            if not cfg.pool_blocks and cfg.kv_dtype != "bf16":
+                # size in BYTES for honest equal-HBM accounting: the
+                # dense-equivalent budget above, refitted at the quantized
+                # block cost — an int8 pool gets ~2-4x the blocks of the
+                # unquantized default instead of silently shrinking to its
+                # block count
+                budget = n_blocks * pool_block_bytes(
+                    target.cfg, cfg.block_size, "bf16")
+                n_blocks = max(n_blocks, budget // pool_block_bytes(
+                    target.cfg, cfg.block_size, cfg.kv_dtype))
             # the pool's block dim shards on "data": round to divisible
             n_blocks = -(-n_blocks // self.data_shards) * self.data_shards
             self.paged = PagedCacheConfig(block_size=cfg.block_size,
-                                          n_blocks=n_blocks)
+                                          n_blocks=n_blocks,
+                                          kv_dtype=cfg.kv_dtype)
             self.max_blocks = self.paged.max_blocks(cfg.max_len)
             # physical blocks currently owned by each slot (host ledger;
             # the device only ever sees them through the table rows).  On a
@@ -705,7 +741,8 @@ class SpecServer:
                 uid=req.uid, tokens=np.asarray(toks),
                 n_cycles=int(rows["stats"]["cycles"][j]),
                 n_committed=int(rows["stats"]["commits"][j]),
-                latency_s=now - self.slot_t0[slot]))
+                latency_s=now - self.slot_t0[slot],
+                n_accepted=int(rows["stats"]["accepts"][j])))
             self.slot_req[slot] = None
             if self.pool is not None and self.slot_blocks[slot]:
                 if self.prefix is not None:

@@ -9,7 +9,10 @@ Asserts, for dense AND paged caches (prefix cache off and on) on real
 ≥2-device meshes:
 
 * the mesh-partitioned ``SpecServer`` produces token-identical greedy
-  output to single-device offline ``DecodeSession.generate`` per request;
+  output to single-device offline ``DecodeSession.generate`` per request
+  — including an int8-quantized paged case, whose offline reference
+  decodes through the same quantized pool (scale pools shard like their
+  parent pools: blocks on ``data``, KV heads on ``model``);
 * ``step()`` performs zero device→host transfers under the mesh (the
   PR 2 sync-free contract is mesh-invariant) — guarded by patching
   ``jax.device_get``, checking the server's transfer counter, and running
@@ -77,7 +80,7 @@ def main():
     session = DecodeSession(tgt, IndependentDrafter(drf, k=k,
                                                     temperature=0.0), ecfg)
 
-    def offline_ref(case_reqs):
+    def offline_ref(case_reqs, paged=None):
         out = {}
         for req in case_reqs:
             plen, mt = len(req.prompt), req.params.max_tokens
@@ -86,30 +89,36 @@ def main():
             o = session.generate(t_params, d_params,
                                  jnp.asarray(padded)[None],
                                  jnp.asarray([plen], jnp.int32), mt,
-                                 jax.random.PRNGKey(0))
+                                 jax.random.PRNGKey(0), paged=paged)
             out[req.uid] = np.asarray(o["tokens"])[0, plen:plen + mt]
         return out
 
     offline = offline_ref(reqs)
     offline_shared = offline_ref(shared_reqs)
+    # the int8 reference must itself decode through an int8 pool: quantized
+    # serving is token-identical to quantized offline, not to f32 offline
+    from repro.models.paging import PagedCacheConfig
+    offline_int8 = offline_ref(reqs,
+                               paged=PagedCacheConfig(4, kv_dtype="int8"))
 
     real_device_get = jax.device_get
 
     def forbidden(*a, **kw):
         raise AssertionError("device→host transfer inside step() on mesh")
 
-    cases = [((2, 1), "dense", "off", reqs, offline),
-             ((2, 1), "paged", "off", reqs, offline),
-             ((2, 2), "paged", "off", reqs, offline),
-             ((2, 2), "paged", "on", shared_reqs, offline_shared),
-             ((4, 2), "dense", "off", reqs, offline)]
-    for mesh, cache, prefix, case_reqs, ref in cases:
+    cases = [((2, 1), "dense", "off", "bf16", reqs, offline),
+             ((2, 1), "paged", "off", "bf16", reqs, offline),
+             ((2, 2), "paged", "off", "bf16", reqs, offline),
+             ((2, 2), "paged", "off", "int8", reqs, offline_int8),
+             ((2, 2), "paged", "on", "bf16", shared_reqs, offline_shared),
+             ((4, 2), "dense", "off", "bf16", reqs, offline)]
+    for mesh, cache, prefix, kv, case_reqs, ref in cases:
         server = SpecServer(
             tgt, IndependentDrafter(drf, k=k, temperature=0.0),
             t_params, d_params, ecfg,
             ServerConfig(slots=4, max_len=96, max_prompt_len=12,
                          steps_per_sync=3, cache=cache, mesh=mesh,
-                         prefix_cache=prefix, block_size=4))
+                         prefix_cache=prefix, block_size=4, kv_dtype=kv))
         for r in case_reqs:
             server.submit(dataclasses.replace(r))
         for _ in range(10_000):
@@ -141,15 +150,15 @@ def main():
             got = np.asarray(resps[req.uid].tokens)
             np.testing.assert_array_equal(
                 got, ref[req.uid],
-                err_msg=f"mesh={mesh} cache={cache} prefix={prefix} req "
-                        f"{req.uid}: sharded != offline")
+                err_msg=f"mesh={mesh} cache={cache} prefix={prefix} "
+                        f"kv={kv} req {req.uid}: sharded != offline")
         note = ""
         if prefix == "on":
             s = server.prefix.summary()
             assert s["hits"] >= 1, s     # shared blocks actually rode in
             note = (f", prefix hit rate {s['hit_rate']:.0%} "
                     f"({s['blocks_shared']} shared mappings)")
-        print(f"  mesh={mesh} cache={cache} prefix={prefix}: "
+        print(f"  mesh={mesh} cache={cache} prefix={prefix} kv={kv}: "
               f"token-identical, 0 in-tick syncs "
               f"({server.host_syncs} at sync points){note}")
 

@@ -1,0 +1,314 @@
+"""Quantized paged KV pool: int8/fp8 block storage with per-token-head
+scales in a parallel pool.
+
+The invariants under test (docs/ARCHITECTURE.md §Quantized pool):
+
+* quantize-on-write round-trips within the storage dtype's rounding error,
+* the paged Pallas kernel's in-gather dequant matches the reference
+  attention over an explicitly dequantized dense view (shuffled tables),
+* COW clones and prefix publish/acquire move block bytes + scale rows as a
+  unit — so quantized serving with sharing on equals sharing off, and both
+  equal the offline quantized generate,
+* rollback stays an index rewind: rewinding over junk drafts and rewriting
+  leaves the pool byte-identical to never having speculated (per-write
+  quantization is deterministic).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.core import EngineConfig, IndependentDrafter, make_generate_fn
+from repro.models import build_model
+from repro.models.paging import (PagedCacheConfig, cow_clone_blocks,
+                                 dequantize_kv, full_tables,
+                                 kv_dtype_unsupported_reason,
+                                 paged_cache_write, pool_block_bytes,
+                                 quantize_kv)
+from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
+
+FP8 = hasattr(jnp, "float8_e4m3fn")
+fp8_only = pytest.mark.skipif(not FP8, reason="no float8_e4m3fn in this jax")
+
+# observed worst case on N(0,1) is ~0.015 (int8) / ~0.10 (fp8); the bound
+# is the storage dtype's relative step times the per-row amax
+TOL = {"int8": 0.05, "fp8": 0.35}
+
+
+# ---------------------------------------------------------------------------
+# Quantize/dequantize round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["int8"] + (["fp8"] if FP8 else []))
+def test_roundtrip_error_bounds(kv_dtype):
+    store = jnp.int8 if kv_dtype == "int8" else jnp.float8_e4m3fn
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 16, 2, 32)),
+                    jnp.float32)
+    q, scale = quantize_kv(x, store)
+    assert q.dtype == store and scale.dtype == jnp.float16
+    err = np.max(np.abs(np.asarray(dequantize_kv(q, scale)) - np.asarray(x)))
+    assert err < TOL[kv_dtype], f"{kv_dtype} round-trip err {err}"
+
+
+def test_roundtrip_zero_rows_and_outliers():
+    # all-zero rows take scale 1.0 (no 0/0) and round-trip exactly
+    z = jnp.zeros((2, 4, 8), jnp.float32)
+    q, scale = quantize_kv(z, jnp.int8)
+    np.testing.assert_array_equal(np.asarray(scale), 1.0)
+    np.testing.assert_array_equal(np.asarray(dequantize_kv(q, scale)), 0.0)
+    # a per-row outlier widens only its own row's step, not its neighbours'
+    x = np.random.default_rng(1).normal(size=(2, 4, 8)).astype(np.float32)
+    x[0, 0, 0] = 100.0
+    q, scale = quantize_kv(jnp.asarray(x), jnp.int8)
+    err = np.abs(np.asarray(dequantize_kv(q, scale)) - x)
+    assert err[0, 0].max() < 100.0 / 127 + 1e-3     # outlier row: wide step
+    assert err[1].max() < TOL["int8"]               # clean rows unaffected
+
+
+def test_pool_block_bytes_equal_hbm_arithmetic():
+    """The admission criterion rides on this arithmetic: at head_dim 64 a
+    bf16 token-head costs 128 bytes, an int8 one 64+2 (payload + fp16
+    scale) — the same HBM buys >= 1.9x the blocks."""
+    cfg = ModelConfig(name="b", family="dense", n_layers=2, d_model=256,
+                      n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=64,
+                      dtype="bfloat16")
+    b16, i8 = (pool_block_bytes(cfg, 16, d) for d in ("bf16", "int8"))
+    assert b16 / i8 >= 1.9
+    with pytest.raises(ValueError, match="unknown kv_dtype"):
+        pool_block_bytes(cfg, 16, "int4")
+    assert kv_dtype_unsupported_reason("bf16") is None
+    assert "unknown" in kv_dtype_unsupported_reason("fp4")
+
+
+# ---------------------------------------------------------------------------
+# Cache write / gather / kernel parity (model-free, raw pools)
+# ---------------------------------------------------------------------------
+
+def _quantized_cache(rng, *, B=3, Hkv=2, D=16, bs=8, MB=4, kv_dtype="int8"):
+    """A written quantized cache over SHUFFLED tables + the f32 original."""
+    cfg = ModelConfig(name="q", family="dense", n_layers=1, d_model=64,
+                      n_heads=2, n_kv_heads=Hkv, d_ff=64, vocab_size=61,
+                      dtype="float32")
+    pc = PagedCacheConfig(bs, 1 + B * MB, kv_dtype=kv_dtype)
+    L = MB * bs
+    table = np.array(full_tables(B, MB))
+    rng.shuffle(table.reshape(-1))
+    table = jnp.asarray(table)
+    store = pc.storage_dtype(cfg)
+    cache = {"k_pool": jnp.zeros((pc.n_blocks, bs, Hkv, D), store),
+             "v_pool": jnp.zeros((pc.n_blocks, bs, Hkv, D), store),
+             "k_scale": jnp.zeros((pc.n_blocks, bs, Hkv), jnp.float16),
+             "v_scale": jnp.zeros((pc.n_blocks, bs, Hkv), jnp.float16),
+             "pos": jnp.full((B, L), -(1 << 30), jnp.int32),
+             "table": table}
+    k = jnp.asarray(rng.normal(size=(B, L, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, Hkv, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    return paged_cache_write(cache, k, v, pos), k, v
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8"] + (["fp8"] if FP8 else []))
+def test_write_then_gather_roundtrips(kv_dtype):
+    from repro.models.paging import gather_dense_view
+    cache, k, v = _quantized_cache(np.random.default_rng(2),
+                                   kv_dtype=kv_dtype)
+    got = gather_dense_view(cache)
+    assert got["k"].dtype == jnp.float32          # dequantized view
+    for name, want in (("k", k), ("v", v)):
+        err = np.max(np.abs(np.asarray(got[name]) - np.asarray(want)))
+        assert err < TOL[kv_dtype], f"{name} gather err {err}"
+
+
+def test_paged_kernel_int8_parity_shuffled_tables():
+    """The Pallas kernel's scale-row prefetch + in-gather dequant must
+    match the reference attention fed the explicitly dequantized dense
+    view — same quantized content, so the comparison is exact up to
+    float accumulation order."""
+    from repro.kernels import ops, ref
+    from repro.models.paging import gather_dense_view
+    B, H, D = 3, 4, 16
+    cache, _, _ = _quantized_cache(np.random.default_rng(3), B=B, D=D)
+    lens = jnp.asarray([5, 20, 32])
+    L = cache["pos"].shape[1]
+    k_pos = jnp.where(jnp.arange(L)[None] < lens[:, None],
+                      jnp.arange(L)[None], -(1 << 30)).astype(jnp.int32)
+    cache = {**cache, "pos": k_pos}
+    q = jnp.asarray(np.random.default_rng(4).normal(size=(B, H, D)),
+                    jnp.float32)
+    q_pos = (lens - 1).astype(jnp.int32)
+    out = ops.paged_decode_attention(
+        q, cache["k_pool"], cache["v_pool"], cache["table"], k_pos, q_pos,
+        k_scale=cache["k_scale"], v_scale=cache["v_scale"])
+    dense = gather_dense_view(cache)
+    want = ref.decode_attention_ref(q, dense["k"], dense["v"], dense["pos"],
+                                    q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cow_clone_moves_payload_and_scales_as_a_unit():
+    """COW must copy the quantized bytes AND the scale rows bit-exactly —
+    requantizing on clone would drift shared history."""
+    cache, _, _ = _quantized_cache(np.random.default_rng(5))
+    src = jnp.asarray(np.asarray(cache["table"])[0, :2])
+    dst = jnp.asarray(np.asarray(cache["table"])[1, 2:4])
+    out = cow_clone_blocks(cache, src, dst)
+    for leaf in ("k_pool", "v_pool", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(out[leaf])[np.asarray(dst)],
+            np.asarray(cache[leaf])[np.asarray(src)], err_msg=leaf)
+        np.testing.assert_array_equal(          # source rows untouched
+            np.asarray(out[leaf])[np.asarray(src)],
+            np.asarray(cache[leaf])[np.asarray(src)], err_msg=leaf)
+
+
+# ---------------------------------------------------------------------------
+# Model-level: rollback on a quantized cache is still an index rewind
+# ---------------------------------------------------------------------------
+
+def test_quantized_rollback_rewind_is_bytewise_clean():
+    """Write junk drafts, rewind the index, rewrite the committed tokens:
+    pools AND scale pools must equal a cache that never speculated —
+    per-write quantization is deterministic, so equality is exact."""
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, bs = 2, 8
+    pc = PagedCacheConfig(bs, 1 + B * (-(-32 // bs)), kv_dtype="int8")
+
+    def fresh():
+        cache = model.init_cache(params, B, 32, paged=pc)
+        return model.assign_blocks(cache, jnp.ones((B,), bool),
+                                   full_tables(B, pc.max_blocks(32)))
+
+    committed = jax.random.randint(jax.random.PRNGKey(1), (B, 12), 3,
+                                   cfg.vocab_size)
+    junk = jax.random.randint(jax.random.PRNGKey(2), (B, 4), 3,
+                              cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(8, 12, dtype=jnp.int32)[None], (B, 4))
+
+    _, spec = model.prefill(params, committed[:, :8], fresh())
+    _, spec = model.decode(params, junk, pos, spec)
+    spec = dict(spec)
+    spec["index"] = jnp.full((B,), 8, jnp.int32)          # rollback
+    lg_spec, spec = model.decode(params, committed[:, 8:12], pos, spec)
+
+    _, clean = model.prefill(params, committed[:, :8], fresh())
+    lg_clean, clean = model.decode(params, committed[:, 8:12], pos, clean)
+    np.testing.assert_array_equal(np.asarray(lg_spec), np.asarray(lg_clean))
+
+    def pool_leaves(cache):
+        return {jax.tree_util.keystr(p): leaf for p, leaf in
+                jax.tree_util.tree_flatten_with_path(cache)[0]
+                if any(t in jax.tree_util.keystr(p) for t in
+                       ("k_pool", "v_pool", "k_scale", "v_scale"))}
+
+    s_leaves, c_leaves = pool_leaves(spec), pool_leaves(clean)
+    assert len(s_leaves) >= 4 and sorted(s_leaves) == sorted(c_leaves)
+    for key in s_leaves:
+        np.testing.assert_array_equal(np.asarray(s_leaves[key]),
+                                      np.asarray(c_leaves[key]),
+                                      err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# Serving: validation, sharing, offline parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
+                        n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=cfg.vocab_size, dtype="float32")
+    drf = build_model(d_cfg)
+    return (cfg, tgt, drf, tgt.init(jax.random.PRNGKey(1)),
+            drf.init(jax.random.PRNGKey(2)))
+
+
+def _server(setup, *, kv_dtype="int8", cache="paged", prefix="off",
+            slots=4, k=3):
+    cfg, tgt, drf, t_params, d_params = setup
+    return SpecServer(
+        tgt, IndependentDrafter(drf, k=k, temperature=0.0),
+        t_params, d_params,
+        EngineConfig(k=k, rule="strict", mode="greedy", temperature=0.0),
+        ServerConfig(slots=slots, max_len=96, max_prompt_len=48,
+                     cache=cache, block_size=8, kv_dtype=kv_dtype,
+                     prefix_cache=prefix))
+
+
+def test_server_config_validation(setup):
+    with pytest.raises(ValueError, match="requires.*paged"):
+        _server(setup, cache="dense")
+    with pytest.raises(ValueError, match="unknown kv_dtype"):
+        _server(setup, kv_dtype="int4")
+    if not FP8:
+        with pytest.raises(ValueError, match="float8_e4m3fn"):
+            _server(setup, kv_dtype="fp8")
+
+
+def test_quantized_serving_matches_offline_generate(setup):
+    """int8 server outputs == offline generate through the SAME quantized
+    pool layout (token-identical: one quantization story end to end)."""
+    cfg, tgt, drf, t_params, d_params = setup
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(3, cfg.vocab_size, size=(5, 8)).astype(np.int32)
+    srv = _server(setup)
+    for i in range(5):
+        srv.submit(Request(uid=i, prompt=prompts[i],
+                           params=SamplingParams(max_tokens=10,
+                                                 temperature=0.0)))
+    got = {r.uid: np.asarray(r.tokens) for r in srv.run()}
+    gen = make_generate_fn(
+        tgt, IndependentDrafter(drf, k=3, temperature=0.0),
+        EngineConfig(k=3, rule="strict", mode="greedy", temperature=0.0),
+        paged=PagedCacheConfig(8, kv_dtype="int8"))
+    out = gen(t_params, d_params, jnp.asarray(prompts),
+              jnp.full((5,), 8, jnp.int32), jax.random.PRNGKey(0),
+              max_new=10)
+    offline = np.asarray(out["tokens"])[:, 8:18]
+    for uid in got:
+        np.testing.assert_array_equal(got[uid], offline[uid],
+                                      err_msg=f"uid {uid}")
+    # harvest returned every block: no leak through the quantized path
+    assert srv.pool.available == srv.pool.n_blocks - 1
+
+
+def test_prefix_sharing_and_cow_on_quantized_blocks(setup):
+    """Prefix publish/acquire + COW on int8 blocks: sharing on == sharing
+    off per request, shared rows are byte-identical in pool and scale
+    pool, and the publisher's content survives follower divergence."""
+    cfg = setup[0]
+    rng = np.random.default_rng(9)
+    system = rng.integers(3, cfg.vocab_size, 24).astype(np.int32)
+    reqs = []
+    for i in range(6):
+        tail = rng.integers(3, cfg.vocab_size, 6).astype(np.int32)
+        reqs.append(Request(uid=i, prompt=np.concatenate([system, tail]),
+                            params=SamplingParams(max_tokens=10,
+                                                  temperature=0.0)))
+
+    def serve(srv, rs):
+        for r in rs:
+            srv.submit(dataclasses.replace(r))
+        return {r.uid: np.asarray(r.tokens) for r in srv.run()}
+
+    cold = serve(_server(setup, prefix="off"), reqs)
+    srv = _server(setup, prefix="on")
+    warm = serve(srv, reqs)
+    for uid in cold:
+        np.testing.assert_array_equal(warm[uid], cold[uid],
+                                      err_msg=f"uid {uid}")
+    s = srv.prefix.summary()
+    assert s["blocks_shared"] >= 1
+    # publisher content intact after every follower's COW + rollback: a
+    # late request re-using the published quantized blocks still matches
+    late = serve(srv, [dataclasses.replace(reqs[0], uid=99)])
+    np.testing.assert_array_equal(late[99], cold[0])
+    assert srv.prefix.summary()["hits"] > s["hits"]
