@@ -231,13 +231,18 @@ class RunResult:
     speedup_measured: float = 0.0
     speedup_v5e: float = 0.0
     greedy_match: float = float("nan")
+    # mean first-rejection top-2 ratio EMA over rows that saw a rejection,
+    # read straight off the engine's on-device stats (no logit recompute)
+    margin_ema: float = float("nan")
 
     def row(self):
+        m = (f" margin={self.margin_ema:.3f}"
+             if self.margin_ema == self.margin_ema else "")
         return (f"{self.name:24s} tau={self.tau:5.2f} "
                 f"acc={self.accept_rate:.2f} relax={self.relax_frac:.2f} "
                 f"speedup(meas)={self.speedup_measured:4.2f}x "
                 f"speedup(v5e)={self.speedup_v5e:4.2f}x "
-                f"nll={self.nll:.3f} corpus_nll={self.corpus_nll_:.3f}")
+                f"nll={self.nll:.3f} corpus_nll={self.corpus_nll_:.3f}{m}")
 
 
 def time_generate(fn, *args, repeats: int = 1, **kw):
@@ -276,12 +281,14 @@ def eval_engine(name, target, t_params, drafter, d_params, ecfg: EngineConfig,
                        int(plen[0]))
     cn = corpus_nll(corpus(), np.asarray(out["tokens"]), out["lengths"],
                     int(plen[0]))
+    me = np.asarray(st.get("margin_ema", np.zeros((0,), np.float32)))
+    margin = float(me[me > 0].mean()) if (me > 0).any() else float("nan")
     return RunResult(
         name=name, tau=tau, accept_rate=metrics.acceptance_rate(st, k),
         relax_frac=metrics.relax_fraction(st), wall_s=dt,
         tokens_generated=toks, nll=nll, corpus_nll_=cn,
         speedup_measured=(ar_time / dt if ar_time else 0.0),
-        speedup_v5e=sp_v5e)
+        speedup_v5e=sp_v5e, margin_ema=margin)
 
 
 def eval_ar(target, t_params, *, max_new=96, n_prompts=6, temperature=1.0,

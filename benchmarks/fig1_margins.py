@@ -8,6 +8,19 @@ paper's three observations:
   (b) a substantial fraction of steps fall in the relaxation zone r > 0.9,
   (c) the logit ratio decouples from the probability ratio — high-r steps
       span a wide range of p2/p1 (softmax exponential distortion).
+
+Margins are sourced on device: the decode loop is a ``lax.scan`` whose body
+computes the ratio with ``repro.core.verify.top2_and_ratio`` — the SAME
+primitive the verification engine and the serving margin stats use — and the
+stacked per-step statistics cross the device boundary exactly once at the
+end.  (The original harness re-derived the ratio host-side from a top-k
+transfer every step: 3 device→host round-trips per generated token.)
+
+``theta_mode="adaptive"`` overlays the serving controller's operating
+points on the distribution: the per-row margin EMA (folded with the
+session's ``MARGIN_EMA_DECAY``, exactly as ``DecodeSession.cycle``
+maintains it on device) and the theta each EMA would steer the
+``ThetaController`` to at zero queue pressure.
 """
 from __future__ import annotations
 
@@ -16,9 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
+from repro.core.session import MARGIN_EMA_DECAY
+from repro.core.verify import top2_and_ratio
 
 
-def run(n_prompts=8, steps=128):
+def run(n_prompts=8, steps=128, theta_mode="fixed"):
     target, t_params, _, _ = C.get_pair()
     p, plen = C.prompts(n_prompts, s=32)
     b, s = p.shape
@@ -26,31 +41,27 @@ def run(n_prompts=8, steps=128):
     pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     _, cache = target.decode(t_params, p, pos, cache,
                              token_mask=pos < (plen - 1)[:, None])
-    last = p[:, -1]
-    z1s, ratios, pratios = [], [], []
-    key = jax.random.PRNGKey(0)
 
-    @jax.jit
-    def step(cache, last, key):
+    def step(carry, key):
+        cache, last = carry
         logits, cache = target.decode(
             t_params, last[:, None], cache["index"][:, None], cache)
         lg = logits[:, -1].astype(jnp.float32)
-        vals, _ = jax.lax.top_k(lg, 2)
-        probs = jax.nn.softmax(lg, -1)
-        pv, _ = jax.lax.top_k(probs, 2)
+        _, _, ratio, valid = top2_and_ratio(lg)        # the engine's primitive
+        z1 = jnp.max(lg, axis=-1)
+        pv, _ = jax.lax.top_k(jax.nn.softmax(lg, -1), 2)
         nxt = jax.random.categorical(key, lg, -1).astype(jnp.int32)
-        return cache, nxt, vals, pv
+        return (cache, nxt), (z1, jnp.where(valid, ratio, 0.0),
+                              pv[:, 1] / jnp.maximum(pv[:, 0], 1e-9))
 
-    for i in range(steps):
-        key, k2 = jax.random.split(key)
-        cache, last, vals, pv = step(cache, last, k2)
-        z1s.append(np.asarray(vals[:, 0]))
-        ratios.append(np.asarray(vals[:, 1] / np.maximum(vals[:, 0], 1e-9)))
-        pratios.append(np.asarray(pv[:, 1] / np.maximum(pv[:, 0], 1e-9)))
+    @jax.jit
+    def sweep(cache, last, key):
+        keys = jax.random.split(key, steps)
+        _, stacked = jax.lax.scan(step, (cache, last), keys)
+        return stacked                       # each (steps, B), one transfer
 
-    z1 = np.concatenate(z1s)
-    r = np.concatenate(ratios)
-    pr = np.concatenate(pratios)
+    z1, r, pr = (np.asarray(x).ravel()
+                 for x in sweep(cache, p[:, -1], jax.random.PRNGKey(0)))
     pos_frac = float((z1 > 0).mean())
     valid = z1 > 0
     zone = float(((r > 0.9) & valid).mean())
@@ -64,9 +75,39 @@ def run(n_prompts=8, steps=128):
         "zone_pratio_p90": float(np.percentile(in_zone, 90)) if len(in_zone) else None,
         "corr(logit_ratio, prob_ratio)": float(np.corrcoef(r[valid], pr[valid])[0, 1]),
     }
+    if theta_mode == "adaptive":
+        stats.update(_controller_overlay(np.asarray(r).reshape(steps, -1),
+                                         z1.reshape(steps, -1)))
     for k, v in stats.items():
         print(f"  {k}: {v}")
     return stats
+
+
+def _controller_overlay(r_steps, z1_steps):
+    """Fold the per-step ratios into the session's margin EMA (decay
+    ``MARGIN_EMA_DECAY``, unseen rows stay at the 0.0 sentinel — the exact
+    device-side recurrence) and report where those EMAs would steer the
+    serving ``ThetaController`` at zero queue pressure."""
+    from repro.serving import ControllerConfig, ThetaController
+
+    ema = np.zeros(r_steps.shape[1])
+    for t in range(r_steps.shape[0]):
+        sample = np.where(z1_steps[t] > 0, r_steps[t], -1.0)
+        seen = sample >= 0
+        ema = np.where(seen & (ema > 0),
+                       MARGIN_EMA_DECAY * ema
+                       + (1 - MARGIN_EMA_DECAY) * sample,
+                       np.where(seen, sample, ema))
+    ctl = ThetaController(ControllerConfig())
+    theta = np.full_like(ema, ctl.cfg.theta_max)
+    for _ in range(64):                    # iterate the update to fixed point
+        theta = ctl.update(theta, np.zeros_like(ema), ema, 0.0)
+    guided = ema > 0
+    return {
+        "margin_ema_mean": float(ema[guided].mean()) if guided.any() else None,
+        "controller_theta_p10": float(np.percentile(theta, 10)),
+        "controller_theta_p90": float(np.percentile(theta, 90)),
+    }
 
 
 if __name__ == "__main__":

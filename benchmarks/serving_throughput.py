@@ -646,6 +646,171 @@ def quantized_pool(target, t_params, draft, d_params, *, kv_dtype, k=3):
 
 
 # ---------------------------------------------------------------------------
+# Adaptive verification under bursty load: fixed-theta sweep vs controller
+# ---------------------------------------------------------------------------
+
+def _serve_open_loop(server, reqs, arrivals):
+    """Open-loop serving: requests arrive on their own (Poisson) schedule
+    regardless of server progress — the production regime where a burst
+    builds a real admission queue.  Returns per-uid submit→finish latency
+    and the drained responses."""
+    t0 = time.time()
+    submit_t, finish_t, harvested = {}, {}, 0
+    i = 0
+    while True:
+        now = time.time() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            submit_t[reqs[i].uid] = now
+            server.submit(dataclasses.replace(reqs[i]))
+            i += 1
+        idle = not server.queue and all(x is None for x in server.slot_req)
+        if i >= len(reqs) and idle:
+            break
+        if idle:
+            time.sleep(max(arrivals[i] - now, 0.0))
+            continue
+        server._admit()
+        server.step()
+        server.sync()
+        now = time.time() - t0
+        for r in server._responses[harvested:]:
+            finish_t[r.uid] = now
+        harvested = len(server._responses)
+    resps, server._responses = server._responses, []
+    lat = np.asarray([finish_t[r.uid] - submit_t[r.uid] for r in resps])
+    return resps, lat
+
+
+def adaptive_serving(target, t_params, draft, d_params, *, quick, k=4):
+    """Bursty open-loop comparison of fixed-theta serving against the
+    margin/acceptance controller.
+
+    Workload: two Poisson phases — calm (λ below the measured service rate)
+    then a burst (λ ~2x the service rate), so the admission queue actually
+    builds and the controller's pressure term engages.  Greedy MARS
+    decoding throughout; per-config metrics:
+
+    * p50/p99 submit→finish latency (queueing included);
+    * greedy-token agreement against the strict-verification offline
+      reference — the fidelity cost of relaxation (disagreement = tokens
+      that differ from what strict greedy would have emitted).
+
+    The sweep serves the same workload at several fixed thetas spanning
+    [theta_min, theta_max]; the adaptive run starts at the strict end and
+    lets the controller relax under pressure.  The summary lands in
+    ``BENCH_serving.json`` under ``"adaptive"`` (merge-written)."""
+    from benchmarks import common as C
+
+    prompt_len, max_tokens = (8, 8) if quick else (32, 24)
+    n_calm, n_burst = (6, 10) if quick else (16, 32)
+    slots = 2 if quick else 4
+    th_min, th_max = 0.6, 0.99
+    fixed_thetas = [0.6, 0.9, 0.99] if quick else [0.6, 0.75, 0.9, 0.99]
+    ecfg = EngineConfig(k=k, rule="mars", mode="greedy", temperature=0.0,
+                        theta=0.9, guard="margin")
+    n_req = n_calm + n_burst
+    reqs = _requests(n_req, max_tokens, prompt_len, C.corpus(), seed=23)
+    for r in reqs:
+        r.params.temperature = 0.0
+
+    # strict-verification offline reference (== AR greedy): the fidelity
+    # yardstick every config's outputs are scored against
+    gen = make_generate_fn(
+        target, IndependentDrafter(draft, k=k, temperature=0.0),
+        dataclasses.replace(ecfg, rule="strict"))
+    prompts = np.stack([r.prompt for r in reqs])
+    out = gen(t_params, d_params, jnp.asarray(prompts),
+              jnp.full((n_req,), prompt_len, jnp.int32),
+              jax.random.PRNGKey(0), max_new=max_tokens)
+    strict_ref = np.asarray(out["tokens"])[:, prompt_len:
+                                           prompt_len + max_tokens]
+
+    def mk(mode, theta):
+        kw = {}
+        if mode == "adaptive":
+            kw = dict(theta_mode="adaptive", theta_min=th_min,
+                      theta_max=th_max)
+        return SpecServer(
+            target, IndependentDrafter(draft, k=k, temperature=0.0),
+            t_params, d_params, dataclasses.replace(ecfg, theta=theta),
+            ServerConfig(slots=slots,
+                         max_len=prompt_len + max_tokens + k + 4,
+                         max_prompt_len=prompt_len, **kw))
+
+    # service rate from a closed-loop warm pass (also pays jit compile so
+    # the open-loop latencies below are scheduling, not compilation)
+    warm = mk("fixed", 0.9)
+    res = _serve_once(warm, reqs, max_tokens)
+    svc_rate = n_req / res["wall_s"]            # requests/s, closed loop
+    rng = np.random.default_rng(31)
+    gaps = np.concatenate([
+        rng.exponential(1.0 / (0.7 * svc_rate), n_calm),   # calm phase
+        rng.exponential(1.0 / (2.0 * svc_rate), n_burst)]) # burst: λ > μ
+    arrivals = np.cumsum(gaps)
+
+    def disagreement(resps):
+        per = []
+        for r in resps:
+            ref = strict_ref[r.uid]
+            n = min(len(r.tokens), len(ref))
+            per.append(float(np.mean(np.asarray(r.tokens)[:n] != ref[:n])))
+        return float(np.mean(per))
+
+    print(f"\nadaptive verification under bursty load "
+          f"({n_calm}+{n_burst} requests, Poisson 0.7x then 2.0x the "
+          f"service rate, {slots} slots, K={k}):")
+    results = {}
+    for name, mode, theta in (
+            [(f"fixed@{t:.2f}", "fixed", t) for t in fixed_thetas]
+            + [("adaptive", "adaptive", th_max)]):
+        server = mk(mode, theta)
+        _serve_once(server, reqs[:2], max_tokens)      # compile pass
+        resps, lat = _serve_open_loop(server, reqs, arrivals)
+        assert len(resps) == n_req
+        entry = {"p50_s": float(np.percentile(lat, 50)),
+                 "p99_s": float(np.percentile(lat, 99)),
+                 "disagreement": disagreement(resps)}
+        if mode == "adaptive":
+            entry["theta_retunes"] = int(server.theta_retunes)
+            entry["final_thetas"] = [round(float(t), 3)
+                                     for t in server.slot_theta]
+        results[name] = entry
+        extra = (f", {entry.get('theta_retunes', 0)} retunes"
+                 if mode == "adaptive" else "")
+        print(f"  {name:11s}: p50 {entry['p50_s']:6.3f}s  "
+              f"p99 {entry['p99_s']:6.3f}s  "
+              f"strict-disagreement {entry['disagreement']:.3f}{extra}")
+
+    ad = results["adaptive"]
+    fixed = {n: v for n, v in results.items() if n != "adaptive"}
+    best_p99 = min(v["p99_s"] for v in fixed.values())
+    relaxed_dis = results[f"fixed@{min(fixed_thetas):.2f}"]["disagreement"]
+    print(f"  adaptive p99 vs best fixed: {ad['p99_s']:.3f}s / "
+          f"{best_p99:.3f}s; disagreement vs most-relaxed fixed: "
+          f"{ad['disagreement']:.3f} / {relaxed_dis:.3f}")
+
+    rows = [(f"serving/adaptive_{name}", 0.0,
+             f"p50={v['p50_s']:.3f};p99={v['p99_s']:.3f};"
+             f"disagree={v['disagreement']:.3f}")
+            for name, v in results.items()]
+    summary = {
+        "workload": {"calm": n_calm, "burst": n_burst,
+                     "max_tokens": max_tokens, "slots": slots, "k": k,
+                     "service_rate_rps": round(svc_rate, 2)},
+        "theta_bounds": [th_min, th_max],
+        "fixed": {n: {k2: round(v2, 4) if isinstance(v2, float) else v2
+                      for k2, v2 in v.items()} for n, v in fixed.items()},
+        "adaptive": {k2: round(v2, 4) if isinstance(v2, float) else v2
+                     for k2, v2 in ad.items()},
+        "p99_vs_best_fixed": round(ad["p99_s"] / max(best_p99, 1e-9), 3),
+        "disagreement_vs_most_relaxed":
+            round(ad["disagreement"] / max(relaxed_dis, 1e-9), 3)
+            if relaxed_dis > 0 else None,
+    }
+    return rows, summary
+
+
+# ---------------------------------------------------------------------------
 # Mesh sweep: tok/s scaling of the partitioned tick vs one device
 # ---------------------------------------------------------------------------
 
@@ -750,6 +915,14 @@ def main():
                     help="add a mesh-sweep section: tok/s of the "
                          "(data, model)-partitioned server vs one device "
                          "(host devices are forced automatically)")
+    ap.add_argument("--theta-mode", default="fixed",
+                    choices=["fixed", "adaptive"],
+                    help="adaptive: add a bursty open-loop section "
+                         "comparing a fixed-theta sweep against the "
+                         "margin/acceptance controller on p50/p99 latency "
+                         "and greedy-token agreement vs strict "
+                         "verification (written to BENCH_serving.json "
+                         "under 'adaptive')")
     args = ap.parse_args()
 
     mesh_shape = None
@@ -842,6 +1015,13 @@ def main():
                                           cache=args.cache,
                                           kv_dtype=args.kv_dtype, k=args.k)
         rows += m_rows
+    adaptive_summary = None
+    if args.theta_mode == "adaptive":
+        a_rows, adaptive_summary = adaptive_serving(target, t_params, draft,
+                                                    d_params,
+                                                    quick=args.quick,
+                                                    k=min(args.k, 3))
+        rows += a_rows
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -866,6 +1046,7 @@ def main():
         "prefix": prefix_summary,
         "quantized": quant_summary,
         "mesh": mesh_summary,
+        "adaptive": adaptive_summary,
     }
     # merge, don't clobber: sections another invocation produced (e.g. the
     # prefix or quantized CI legs) survive runs that don't exercise them

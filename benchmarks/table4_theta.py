@@ -7,8 +7,17 @@ Run in greedy mode: at T=1 with an exact-residual, well-calibrated chain
 drafter, Leviathan sampling already accepts near-ties probabilistically, so
 the relaxation margin is only visible under deterministic verification
 (see EXPERIMENTS.md §Paper-validation for the discussion).
+
+The per-θ margin column comes from the engine's on-device stats (the
+``margin_ema`` field ``DecodeSession.cycle`` maintains — the first-rejection
+top-2 ratio EMA the serving controller reads), not from a host-side logit
+recompute.  ``theta_mode="adaptive"`` overlays, for each swept θ, the
+operating point the serving ``ThetaController`` would converge to given
+that run's observed margin EMA and relaxed share (zero queue pressure).
 """
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks import common as C
 from repro.core import EngineConfig, IndependentDrafter
@@ -18,7 +27,7 @@ T = 0.0
 THETAS = [0.80, 0.84, 0.88, 0.90, 0.92, 0.96, 0.99]
 
 
-def run(max_new=96, n_prompts=6, kv_dtype="bf16"):
+def run(max_new=96, n_prompts=6, kv_dtype="bf16", theta_mode="fixed"):
     """``kv_dtype`` != "bf16" sweeps θ with the engine's KV held in a
     quantized paged pool — the per-θ speedup/quality trends should match
     the bf16 sweep within noise (wide-margin accepts are robust to mild
@@ -50,7 +59,28 @@ def run(max_new=96, n_prompts=6, kv_dtype="bf16"):
                            max_new=max_new, n_prompts=n_prompts,
                            ar_time=ar_time, paged=paged)
     print(strict.row())
+    if theta_mode == "adaptive":
+        overlay_controller(rows)
     return rows, strict
+
+
+def overlay_controller(rows):
+    """For each swept θ, iterate the serving controller's update law to its
+    fixed point under that run's on-device margin EMA and relaxed share —
+    where an adaptive server on this workload would operate (no pressure)."""
+    from repro.serving import ControllerConfig, ThetaController
+
+    ctl = ThetaController(ControllerConfig())
+    print("controller operating points (zero queue pressure):")
+    for th, r in rows:
+        ema = r.margin_ema if r.margin_ema == r.margin_ema else 0.0
+        theta = np.asarray([th])
+        for _ in range(64):
+            theta = ctl.update(theta, np.asarray([r.relax_frac]),
+                               np.asarray([ema]), 0.0)
+        print(f"  theta={th:.2f}: margin_ema={ema:.3f} "
+              f"relax={r.relax_frac:.2f} -> operating point "
+              f"{float(theta[0]):.3f}")
 
 
 if __name__ == "__main__":

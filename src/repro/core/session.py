@@ -65,6 +65,10 @@ from repro.models.model import Model
 from repro.sharding import constrain
 
 STAT_KEYS = ("cycles", "commits", "accepts", "relaxed")
+# Float stats ride the same per-slot dict: ``margin_ema`` is an EMA of the
+# top-2 logit ratio at each cycle's first rejection (0 = no sample yet) —
+# the on-device margin signal the serving theta controller reads at harvest.
+MARGIN_EMA_DECAY = 0.875
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,11 +95,14 @@ class DecodeState(NamedTuple):
     """The decode carry.  A NamedTuple so it is simultaneously a pytree
     (while_loop / jit friendly) and positionally unpackable.
 
-    All *per-request serving state* lives here, on device: ``budget`` and
-    ``temperature`` extend the historical 8-tuple so a scheduler tick never
-    has to round-trip through the host to enforce ``max_tokens`` or
-    per-request sampling temperature — ``cycle`` clamps commits to the
-    budget, decrements it, and flips ``finished`` on-device."""
+    All *per-request serving state* lives here, on device: ``budget``,
+    ``temperature``, and ``theta`` extend the historical 8-tuple so a
+    scheduler tick never has to round-trip through the host to enforce
+    ``max_tokens``, per-request sampling temperature, or the per-request
+    MARS relaxation threshold — ``cycle`` clamps commits to the budget,
+    decrements it, and flips ``finished`` on-device, and verification reads
+    each row's own ``theta`` (set at admission, retuned by the serving
+    controller between tick groups — never mid-group)."""
     buf: jnp.ndarray            # (B, L+1) committed tokens (+1 trash slot)
     lengths: jnp.ndarray        # (B,) committed length incl. prompt
     finished: jnp.ndarray       # (B,) bool; True == idle/finished slot
@@ -106,6 +113,7 @@ class DecodeState(NamedTuple):
     stats: Dict[str, jnp.ndarray]
     budget: jnp.ndarray         # (B,) remaining new tokens this request may emit
     temperature: jnp.ndarray    # (B,) per-slot verification temperature
+    theta: jnp.ndarray          # (B,) per-slot MARS relaxation threshold
 
 
 class CycleOutcome(NamedTuple):
@@ -122,6 +130,7 @@ class CycleOutcome(NamedTuple):
     d_state: Any
     base_index: jnp.ndarray     # (B,) target cache index pre-cycle
     features: Any = None        # (B, W, d) target features or None
+    margin: Any = None          # (B,) first-rejection top-2 ratio (-1 = none)
 
 
 # ---------------------------------------------------------------------------
@@ -192,7 +201,7 @@ class ChainTopology:
 
         return CycleOutcome(res.out_tokens, res.n_accept, res.n_commit,
                             res.n_relaxed, t_cache, d_state, base_index,
-                            features=feats)
+                            features=feats, margin=res.margin)
 
 
 def _make_topology(cfg: EngineConfig):
@@ -259,15 +268,17 @@ class DecodeSession:
             d_state=self.drafter.init_state(d_params, batch, max_len),
             last_token=jnp.zeros((batch,), jnp.int32),
             key=key,
-            stats={k: jnp.zeros((batch,), jnp.int32) for k in STAT_KEYS},
+            stats={**{k: jnp.zeros((batch,), jnp.int32) for k in STAT_KEYS},
+                   "margin_ema": jnp.zeros((batch,), jnp.float32)},
             budget=jnp.full((batch,), NO_BUDGET, jnp.int32),
             temperature=jnp.full((batch,), self.cfg.temperature, jnp.float32),
+            theta=jnp.full((batch,), self.cfg.theta, jnp.float32),
         )
 
     def prefill(self, t_params, d_params, state: DecodeState,
                 prompt: jnp.ndarray, prompt_len: jnp.ndarray,
                 slot_mask: Optional[jnp.ndarray] = None,
-                budget=None, temperature=None,
+                budget=None, temperature=None, theta=None,
                 block_rows=None, start_pos=None,
                 cow_src=None, cow_dst=None,
                 decode_tokens=None, decode_off=None) -> DecodeState:
@@ -281,9 +292,11 @@ class DecodeSession:
 
         ``budget`` (scalar or (B,)) sets the admitted rows' remaining-token
         budget (None = unlimited); ``temperature`` (scalar or (B,)) their
-        verification temperature (None = the config default).  Both live in
-        the device carry, so admission is the only time the host supplies
-        per-request serving state.
+        verification temperature and ``theta`` (scalar or (B,)) their MARS
+        relaxation threshold (None = the config defaults).  All three live
+        in the device carry, so admission is the only time the host
+        supplies per-request serving state (the serving theta controller
+        may later retune ``theta`` between tick groups).
 
         ``block_rows`` (B, max_blocks) maps the admitted rows of a *paged*
         target cache to their freshly allocated physical blocks before the
@@ -315,12 +328,17 @@ class DecodeSession:
             budget = NO_BUDGET
         if temperature is None:
             temperature = self.cfg.temperature
+        if theta is None:
+            theta = self.cfg.theta
         budget_row = jnp.broadcast_to(
             jnp.asarray(budget, jnp.int32), (b,))
         temp_row = jnp.broadcast_to(
             jnp.asarray(temperature, jnp.float32), (b,))
+        theta_row = jnp.broadcast_to(
+            jnp.asarray(theta, jnp.float32), (b,))
         new_budget = jnp.where(slot_mask, budget_row, state.budget)
         new_temp = jnp.where(slot_mask, temp_row, state.temperature)
+        new_theta = jnp.where(slot_mask, theta_row, state.theta)
 
         t_cache = self.target.reset_slots(state.t_cache, slot_mask)
         if block_rows is not None:
@@ -388,7 +406,7 @@ class DecodeSession:
         last_token = jnp.where(slot_mask, last, state.last_token)
         return DecodeState(buf, lengths, finished, t_cache, d_state,
                            last_token, state.key, stats,
-                           new_budget, new_temp)
+                           new_budget, new_temp, new_theta)
 
     # -- cache rollback (shared by all topologies) ----------------------------
     def rollback(self, t_params, pre_cache, post_cache, inputs, positions,
@@ -426,9 +444,12 @@ class DecodeSession:
 
     # -- one verify cycle (jit-traceable) -------------------------------------
     def cycle(self, t_params, d_params, state, theta=None) -> DecodeState:
+        """``theta=None`` (the serving path) verifies each row against its
+        own carried ``state.theta``; an explicit scalar-or-(B,) override
+        (the offline sweep path) wins without touching the carry."""
         cfg = self.cfg
-        theta = cfg.theta if theta is None else theta
         state = DecodeState(*state)
+        theta = state.theta if theta is None else theta
         b = state.last_token.shape[0]
         key, k_draft, k_verify = jax.random.split(state.key, 3)
         active = ~state.finished
@@ -506,9 +527,22 @@ class DecodeSession:
             "relaxed": state.stats["relaxed"]
             + jnp.where(active, out.n_relaxed, 0),
         }
+        # margin EMA: rows with a valid first-rejection ratio fold it in
+        # (first sample replaces the 0 "unseen" sentinel); full-accept
+        # cycles and strict-sampling verifies leave the EMA untouched
+        ema = state.stats["margin_ema"]
+        if out.margin is not None:
+            sample = out.margin.astype(jnp.float32)
+            folded = jnp.where(ema > 0,
+                               MARGIN_EMA_DECAY * ema
+                               + (1.0 - MARGIN_EMA_DECAY) * sample,
+                               sample)
+            ema = jnp.where(active & (sample >= 0), folded, ema)
+            ema = constrain(ema, "batch")
+        stats["margin_ema"] = ema
         return DecodeState(buf, lengths, finished, out.t_cache, d_state,
                            last_token, key, stats, budget,
-                           state.temperature)
+                           state.temperature, state.theta)
 
     # -- full generation ------------------------------------------------------
     def generate(self, t_params, d_params, prompt: jnp.ndarray,

@@ -124,17 +124,21 @@ def draft_tree_eagle(drafter, params, state, last_token, extras, key,
 
 def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
                 node_logits: jnp.ndarray, *, rule: str, mode: str,
-                theta: float, temperature, key,
+                theta, temperature, key,
                 node_probs: Optional[jnp.ndarray] = None,
                 use_kernel: bool = False, guard: str = "positive",
                 backend: Optional[V.VerifyBackend] = None):
     """Choose the committed path.
 
     node_tokens: (B, N); node_logits: (B, N, V) — logits[i] is the target
-    distribution for the *successor* of node i.  ``temperature`` may be a
-    scalar or a per-row ``(B,)`` vector (per-request serving temperature).
+    distribution for the *successor* of node i.  ``temperature`` and
+    ``theta`` may each be a scalar or a per-row ``(B,)`` vector
+    (per-request serving temperature / relaxation threshold).
 
-    Returns (out_tokens (B, K+2), n_commit (B,), n_accept, n_relaxed).
+    Returns (out_tokens (B, K+2), n_commit (B,), n_accept, n_relaxed,
+    margin) — ``margin`` is the top-2 logit ratio at the first rejected
+    *chain* node (-1 when the chain fully accepted or the guard held no
+    valid ratio there), mirroring :class:`repro.core.verify.VerifyResult`.
     """
     b, n, v = node_logits.shape
     k, branch = tpl.k, tpl.branch
@@ -145,9 +149,10 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
     parent_logits = node_logits[:, jnp.maximum(parent, 0)]   # (B, N, V)
 
     need_relax = rule == "mars"
+    ratio = valid = None
     if mode == "greedy" or need_relax:
-        exact, relax_raw = backend.exact_and_relax(node_tokens, parent_logits,
-                                                   theta)
+        exact, relax_raw, ratio, valid = backend.exact_relax_margin(
+            node_tokens, parent_logits, theta)
 
     if mode == "greedy":
         accept = exact
@@ -172,6 +177,12 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
     run = jnp.cumprod(chain_acc.astype(jnp.int32), 1)
     n_chain = jnp.sum(run, 1)                                 # (B,)
     n_relax_chain = jnp.sum(run * relax[:, chain_idx].astype(jnp.int32), 1)
+
+    if ratio is not None:
+        margin = V.margin_at_first_rejection(
+            ratio[:, chain_idx], valid[:, chain_idx], n_chain, k)
+    else:
+        margin = jnp.full((b,), -1.0, jnp.float32)
 
     # sibling rescue at depth n_chain + 1 (if any sibling accepted there)
     # node index of sibling j at depth d: chain nodes are first per depth
@@ -230,7 +241,7 @@ def verify_tree(tpl: TreeTemplate, node_tokens: jnp.ndarray,
     n_accept = n_chain + n_resc
     n_commit = n_accept + 1
     n_relaxed = n_relax_chain + (rescue_rel & has_rescue).astype(jnp.int32)
-    return out, n_commit, n_accept, n_relaxed
+    return out, n_commit, n_accept, n_relaxed, margin
 
 
 # ---------------------------------------------------------------------------
@@ -280,7 +291,7 @@ class TreeTopology:
             jnp.asarray(tpl.mask))
 
         # 3. verify: chain walk + sibling rescue
-        out, n_commit, n_accept, n_relaxed = verify_tree(
+        out, n_commit, n_accept, n_relaxed, margin = verify_tree(
             tpl, draft.tokens, node_logits, rule=cfg.rule, mode=cfg.mode,
             theta=theta, temperature=state.temperature, key=k_verify,
             node_probs=draft.token_probs, backend=cfg.backend())
@@ -297,7 +308,8 @@ class TreeTopology:
             want_features=drafter.wants_features)
 
         return CycleOutcome(out, n_accept, n_commit, n_relaxed, t_cache,
-                            d_state, base_index, features=feats)
+                            d_state, base_index, features=feats,
+                            margin=margin)
 
 
 # ---------------------------------------------------------------------------

@@ -48,11 +48,17 @@ class VerifyResult(NamedTuple):
                  accepted draft prefix plus correction-or-bonus token).
     n_accept   : (B,) accepted draft tokens.
     n_relaxed  : (B,) accepted positions that needed MARS relaxation.
+    margin     : (B,) top-2 logit ratio at the first rejected position
+                 (clipped to [1e-4, 1]); -1 when the row has no valid
+                 margin sample (full accept, or the guard rejected the
+                 ratio).  This is the on-device signal the serving theta
+                 controller consumes — no host-side logit recompute.
     """
     out_tokens: jnp.ndarray
     n_commit: jnp.ndarray
     n_accept: jnp.ndarray
     n_relaxed: jnp.ndarray
+    margin: jnp.ndarray
 
 
 def top2_and_ratio(logits: jnp.ndarray, guard: str = "positive"):
@@ -78,10 +84,14 @@ def top2_and_ratio(logits: jnp.ndarray, guard: str = "positive"):
 
 
 def mars_relax_mask(draft_tokens: jnp.ndarray, target_logits: jnp.ndarray,
-                    theta: float, guard: str = "positive") -> jnp.ndarray:
-    """(B, K) mask of positions acceptable via adaptive relaxation."""
+                    theta, guard: str = "positive") -> jnp.ndarray:
+    """(B, K) mask of positions acceptable via adaptive relaxation.
+
+    ``theta`` is a scalar or a per-row ``(B,)`` vector (the serving layer's
+    per-slot thresholds)."""
     _, top2, ratio, valid = top2_and_ratio(target_logits, guard)
-    return (draft_tokens == top2) & valid & (ratio > theta)
+    return (draft_tokens == top2) & valid & (ratio > _temp_like(theta,
+                                                               ratio.ndim))
 
 
 # ---------------------------------------------------------------------------
@@ -112,21 +122,39 @@ class VerifyBackend:
                         target_logits: jnp.ndarray, theta,
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Masks (draft == target top-1) and (MARS-relaxable), any leading
-        shape; ``target_logits`` has one trailing vocab axis."""
+        shape; ``target_logits`` has one trailing vocab axis.  ``theta`` is
+        a scalar or a per-row ``(B,)`` vector broadcast over the trailing
+        draft positions."""
+        exact, relax, _, _ = self.exact_relax_margin(draft_tokens,
+                                                     target_logits, theta)
+        return exact, relax
+
+    def exact_relax_margin(self, draft_tokens: jnp.ndarray,
+                           target_logits: jnp.ndarray, theta):
+        """Like :meth:`exact_and_relax` but additionally returns the top-2
+        logit ratio and its validity mask per position — the margin signal
+        the serving controller accumulates.  Both implementations hand it
+        back for free: the reference path already top-k's, and the kernel
+        already streams z1/z2 through VMEM."""
         if self.kind == "kernel":
             from repro.kernels import ops as kops
             v = target_logits.shape[-1]
-            flat_d = draft_tokens.reshape(1, -1)
-            flat_l = target_logits.reshape(1, -1, v)
-            exact, relax, _, _ = kops.mars_verify(flat_d, flat_l, theta)
-            return (exact.reshape(draft_tokens.shape),
-                    relax.reshape(draft_tokens.shape))
+            shape = draft_tokens.shape
+            lead = shape[0] if len(shape) > 1 else 1
+            d2 = draft_tokens.reshape(lead, -1)
+            l2 = target_logits.reshape(lead, -1, v)
+            exact, relax, _, _, z1, z2 = kops.mars_verify_stats(d2, l2, theta)
+            valid = (z1 > 0.0) & (z2 > 0.0)
+            ratio = jnp.where(valid, z2 / jnp.maximum(z1, 1e-30), 0.0)
+            rs = lambda x: x.reshape(shape)
+            return rs(exact), rs(relax), rs(ratio), rs(valid)
         # one top-k pass yields both masks (top-1 for exact, top-2 + ratio
         # for the relaxation) — no separate argmax scan over the vocab
         top1, top2, ratio, valid = top2_and_ratio(target_logits, self.guard)
         exact = draft_tokens == top1
-        relax = (draft_tokens == top2) & valid & (ratio > theta)
-        return exact, relax
+        relax = ((draft_tokens == top2) & valid
+                 & (ratio > _temp_like(theta, ratio.ndim)))
+        return exact, relax, ratio, valid
 
 
 def resolve_backend(backend: Optional[VerifyBackend] = None, *,
@@ -145,6 +173,18 @@ def _temp_like(temperature, ndim: int) -> jnp.ndarray:
     device-resident carry without a per-request recompile."""
     t = jnp.asarray(temperature, jnp.float32)
     return t.reshape(t.shape + (1,) * (ndim - t.ndim))
+
+
+def margin_at_first_rejection(ratio, valid, n_accept, k: int):
+    """Per-row margin sample: the top-2 logit ratio at the first rejected
+    position (clipped to [1e-4, 1] so zero stays a reserved "no sample yet"
+    EMA sentinel), or -1 when the row fully accepted / the guard held no
+    valid ratio there.  ``ratio``/``valid`` are (B, K); n_accept (B,)."""
+    first_rej = jnp.minimum(n_accept, k - 1)[:, None]
+    m = jnp.take_along_axis(ratio, first_rej, axis=1)[:, 0]
+    mv = jnp.take_along_axis(valid, first_rej, axis=1)[:, 0]
+    has_rej = n_accept < k
+    return jnp.where(has_rej & mv, jnp.clip(m, 1e-4, 1.0), -1.0)
 
 
 def _accept_sampling(draft_tokens, target_logits, draft_token_probs,
@@ -207,7 +247,7 @@ def verify_chain(draft_tokens: jnp.ndarray,
                  *,
                  rule: str = "mars",
                  mode: str = "sample",
-                 theta: float = DEFAULT_THETA,
+                 theta=DEFAULT_THETA,
                  temperature=1.0,
                  key: Optional[jnp.ndarray] = None,
                  draft_token_probs: Optional[jnp.ndarray] = None,
@@ -223,6 +263,9 @@ def verify_chain(draft_tokens: jnp.ndarray,
                     token *at draft position i* (row K = bonus distribution).
     rule          : "strict" | "mars"
     mode          : "greedy" | "sample"
+    theta         : scalar or per-row ``(B,)`` vector — the serving layer
+                    passes the per-slot relaxation thresholds it carries on
+                    device (same contract as ``temperature``).
     temperature   : scalar or per-row ``(B,)`` vector — the serving layer
                     passes the per-slot temperatures it carries on device.
     backend       : optional :class:`VerifyBackend`; when None one is built
@@ -237,9 +280,10 @@ def verify_chain(draft_tokens: jnp.ndarray,
 
     logits_at_draft = target_logits[:, :k]
     need_relax = rule == "mars"
+    ratio = valid = None
     if mode == "greedy" or need_relax:
-        exact, relax = backend.exact_and_relax(draft_tokens, logits_at_draft,
-                                               theta)
+        exact, relax, ratio, valid = backend.exact_relax_margin(
+            draft_tokens, logits_at_draft, theta)
 
     if mode == "greedy":
         accept = exact
@@ -258,6 +302,11 @@ def verify_chain(draft_tokens: jnp.ndarray,
     n_accept = jnp.sum(run, axis=1)                           # (B,)
     n_relaxed = jnp.sum(run * relaxed.astype(jnp.int32), axis=1)
 
+    if ratio is not None:
+        margin = margin_at_first_rejection(ratio, valid, n_accept, k)
+    else:           # strict sampling: no top-2 pass ran, no margin signal
+        margin = jnp.full((b,), -1.0, jnp.float32)
+
     extra = _correction_token(
         target_logits, n_accept, mode=mode, key=k_corr,
         temperature=temperature, draft_full_probs=draft_full_probs)
@@ -269,4 +318,5 @@ def verify_chain(draft_tokens: jnp.ndarray,
     out = jnp.where(pos < n_accept[:, None], draft_pad, extra[:, None])
     out = jnp.where(pos > n_accept[:, None], extra[:, None], out)
     n_commit = n_accept + 1
-    return VerifyResult(out.astype(jnp.int32), n_commit, n_accept, n_relaxed)
+    return VerifyResult(out.astype(jnp.int32), n_commit, n_accept, n_relaxed,
+                        margin)

@@ -78,7 +78,7 @@ def _kernel(draft_ref, logits_ref, theta_ref,
     @pl.when(vb == n_vblocks - 1)
     def _finish():
         draft = draft_ref[...]
-        theta = theta_ref[0]
+        theta = theta_ref[...]                   # (BT,) per-row threshold
         exact_ref[...] = (draft == i1).astype(jnp.int32)
         pos_ok = (z1 > 0.0) & (z2 > 0.0)
         relax_ref[...] = ((draft == i2) & pos_ok
@@ -88,25 +88,29 @@ def _kernel(draft_ref, logits_ref, theta_ref,
 @functools.partial(jax.jit,
                    static_argnames=("block_rows", "block_vocab", "interpret"))
 def mars_verify_kernel(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
-                       theta: float, *, block_rows: int = 8,
+                       theta, *, block_rows: int = 8,
                        block_vocab: int = 2048, interpret: bool = False):
-    """draft_tokens: (T,) int32; logits: (T, V).
+    """draft_tokens: (T,) int32; logits: (T, V); theta: scalar or (T,) —
+    a per-row threshold rides the grid like the draft tokens, so mixed
+    per-slot thetas verify in the same fused pass.
 
-    Returns (exact, relax, top1, top2) — all (T,)."""
+    Returns (exact, relax, top1, top2, z1, z2) — all (T,)."""
     t, v = logits.shape
     bt = min(block_rows, t)
     bv = min(block_vocab, v)
     # pad so grid divides evenly; padded logits are NEG so never win top-2
     tp = -(-t // bt) * bt
     vp = -(-v // bv) * bv
+    theta_arr = jnp.broadcast_to(
+        jnp.asarray(theta, jnp.float32), (t,))
     if (tp, vp) != (t, v):
         logits = jnp.pad(logits, ((0, tp - t), (0, vp - v)),
                          constant_values=NEG)
         draft_tokens = jnp.pad(draft_tokens, (0, tp - t))
+        # padded rows have z1 = z2 = NEG, so relax is False for any theta
+        theta_arr = jnp.pad(theta_arr, (0, tp - t), constant_values=1.0)
     n_vblocks = vp // bv
     grid = (tp // bt, n_vblocks)
-
-    theta_arr = jnp.asarray([theta], jnp.float32)
     out_shapes = [
         jax.ShapeDtypeStruct((tp,), jnp.float32),   # z1
         jax.ShapeDtypeStruct((tp,), jnp.int32),     # i1
@@ -122,7 +126,7 @@ def mars_verify_kernel(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
         in_specs=[
             row_spec,
             pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
-            pl.BlockSpec((1,), lambda i, j: (0,)),
+            row_spec,
         ],
         out_specs=[row_spec] * 6,
         out_shape=out_shapes,
@@ -133,4 +137,4 @@ def mars_verify_kernel(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
     z1, i1, z2, i2, exact, relax = outs
     sl = slice(0, t)
     return (exact[sl].astype(bool), relax[sl].astype(bool),
-            i1[sl], i2[sl])
+            i1[sl], i2[sl], z1[sl], z2[sl])

@@ -22,19 +22,36 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def mars_verify(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
-                theta: float):
-    """Fused verify for (B, K) drafts against (B, K, V) logits.
-
-    Returns (exact, relax, top1, top2), each (B, K)."""
+def _mars_verify_all(draft_tokens, logits, theta):
     b, k = draft_tokens.shape
     v = logits.shape[-1]
     flat_d = draft_tokens.reshape(b * k)
     flat_l = logits.reshape(b * k, v)
-    exact, relax, t1, t2 = mars_verify_kernel(
-        flat_d, flat_l, theta, interpret=_interpret())
-    rs = lambda x: x.reshape(b, k)
-    return rs(exact), rs(relax), rs(t1), rs(t2)
+    # theta: scalar (one threshold for all rows), (B,) per batch row, or
+    # (B, K) per position — always lands on the kernel as one value/row
+    th = jnp.asarray(theta, jnp.float32)
+    if th.ndim == 1:
+        th = th[:, None]
+    flat_t = jnp.broadcast_to(th, (b, k)).reshape(b * k)
+    outs = mars_verify_kernel(flat_d, flat_l, flat_t,
+                              interpret=_interpret())
+    return tuple(x.reshape(b, k) for x in outs)
+
+
+def mars_verify(draft_tokens: jnp.ndarray, logits: jnp.ndarray, theta):
+    """Fused verify for (B, K) drafts against (B, K, V) logits.
+
+    ``theta`` may be a scalar, per-batch-row ``(B,)``, or per-position
+    ``(B, K)``.  Returns (exact, relax, top1, top2), each (B, K)."""
+    exact, relax, t1, t2, _, _ = _mars_verify_all(draft_tokens, logits, theta)
+    return exact, relax, t1, t2
+
+
+def mars_verify_stats(draft_tokens: jnp.ndarray, logits: jnp.ndarray, theta):
+    """Like :func:`mars_verify` but also returns the top-2 logit values the
+    kernel already holds — (exact, relax, top1, top2, z1, z2) — so callers
+    can derive the acceptance margin without a second vocab pass."""
+    return _mars_verify_all(draft_tokens, logits, theta)
 
 
 def decode_attention(q, k, v, k_pos, q_pos, *, window: int = 0,

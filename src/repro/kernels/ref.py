@@ -8,11 +8,16 @@ import jax.numpy as jnp
 
 
 def mars_verify_ref(draft_tokens: jnp.ndarray, logits: jnp.ndarray,
-                    theta: float):
-    """Oracle for mars_verify_kernel: (exact, relax, top1, top2)."""
+                    theta):
+    """Oracle for mars_verify_kernel: (exact, relax, top1, top2).
+
+    ``theta`` is a scalar or any shape broadcastable against
+    ``draft_tokens`` (per-row thresholds), in lockstep with the kernel's
+    per-row theta operand."""
     vals, idx = jax.lax.top_k(logits.astype(jnp.float32), 2)
     z1, z2 = vals[..., 0], vals[..., 1]
     top1, top2 = idx[..., 0], idx[..., 1]
+    theta = jnp.asarray(theta, jnp.float32)
     exact = draft_tokens == top1
     relax = ((draft_tokens == top2) & (z1 > 0.0) & (z2 > 0.0)
              & (z2 > theta * z1))

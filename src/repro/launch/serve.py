@@ -78,6 +78,31 @@ def main():
     ap.add_argument("--min-match-blocks", type=int, default=1,
                     help="prefix cache: smallest cached run (in blocks) "
                          "worth mapping shared")
+    ap.add_argument("--prefix-cache-max-blocks", type=int, default=0,
+                    help="prefix cache: cap on published-but-free blocks "
+                         "parked in the reclaimable LRU (0 = bounded only "
+                         "by the pool)")
+    ap.add_argument("--prefix-cache-ttl", type=float, default=0.0,
+                    help="prefix cache: seconds an unused parked block "
+                         "survives before reclamation (0 = no TTL)")
+    ap.add_argument("--theta-mode", default="fixed",
+                    choices=["fixed", "adaptive"],
+                    help="fixed: every slot verifies at --theta; adaptive: "
+                         "a per-slot controller retunes theta at each sync "
+                         "from on-device margin/acceptance stats "
+                         "(see docs/SERVING.md)")
+    ap.add_argument("--theta-min", type=float, default=0.6,
+                    help="adaptive: most-relaxed threshold queue pressure "
+                         "may reach")
+    ap.add_argument("--theta-max", type=float, default=0.99,
+                    help="adaptive: strictest threshold tightening may "
+                         "reach")
+    ap.add_argument("--relax-budget", type=float, default=0.25,
+                    help="adaptive: tolerated relaxed share of accepted "
+                         "tokens before a slot is tightened")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="adaptive + chain only: let the controller drop "
+                         "to a half-K draft when acceptance is low")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="partition the serving tick over a (data, model) "
                          "mesh: slots shard over data, target/drafter "
@@ -164,7 +189,13 @@ def main():
                      pool_blocks=args.pool_blocks, mesh=mesh_shape,
                      kv_dtype=args.kv_dtype,
                      prefix_cache=args.prefix_cache,
-                     min_match_blocks=args.min_match_blocks))
+                     min_match_blocks=args.min_match_blocks,
+                     prefix_cache_max_blocks=args.prefix_cache_max_blocks,
+                     prefix_cache_ttl_s=args.prefix_cache_ttl,
+                     theta_mode=args.theta_mode, theta_min=args.theta_min,
+                     theta_max=args.theta_max,
+                     relax_budget=args.relax_budget,
+                     adaptive_k=args.adaptive_k))
 
     # per-request sampling params ride the device carry: each request may
     # ask for its own temperature and token budget
@@ -177,14 +208,20 @@ def main():
     mesh_note = (f", mesh={mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape
                  else "")
     kv_note = f", kv={args.kv_dtype}" if args.kv_dtype != "bf16" else ""
+    theta_note = (f"θ=adaptive[{args.theta_min},{args.theta_max}]"
+                  if args.theta_mode == "adaptive" else f"θ={args.theta}")
     print(f"serving {args.requests} requests "
-          f"({args.topology}, {args.rule}, θ={args.theta}, K={args.k}, "
+          f"({args.topology}, {args.rule}, {theta_note}, K={args.k}, "
           f"cache={args.cache}{kv_note}{mesh_note}) ...")
     for r in sorted(server.run(), key=lambda r: r.uid):
         print(f"  req {r.uid:2d}: {len(r.tokens):3d} tokens "
               f"tau={r.tau:4.2f} latency={r.latency_s:5.2f}s")
     print(f"host syncs: {server.host_syncs} across {server.step_calls} "
           f"fused tick groups (tick loop itself is sync-free)")
+    if server.controller is not None:
+        print(f"theta controller: {server.theta_retunes} retune dispatches, "
+              f"final slot thetas "
+              f"{np.round(server.slot_theta, 3).tolist()}")
     if server.prefix is not None:
         s = server.prefix.summary()
         print(f"prefix cache: hit rate {s['hit_rate']:.0%}, "

@@ -173,14 +173,14 @@ def cache_specs(cache_struct, rules):
 
 # DecodeState fields whose leading dim is the batch-slot dim.
 _SLOT_FIELDS = ("buf", "lengths", "finished", "last_token", "budget",
-                "temperature", "stats")
+                "temperature", "theta", "stats")
 
 
 def decode_state_specs(state, rules):
     """PartitionSpec pytree for a :class:`repro.core.session.DecodeState`
     carry under ``rules``: every slot-indexed field (token buffer, lengths,
-    finished flags, budgets, temperatures, stats) shards its leading dim on
-    the batch axes; the target cache and drafter state resolve per leaf via
+    finished flags, budgets, temperatures, thetas, stats) shards its
+    leading dim on the batch axes; the target cache and drafter state resolve per leaf via
     :func:`cache_specs` path matching (incl. the paged pool); the PRNG key
     is replicated.  Returns the same NamedTuple type with specs as leaves.
     """

@@ -88,6 +88,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -229,16 +230,31 @@ class BlockPool:
     evicted (oldest first, ``evict_cb`` notified) when the free list runs
     short; unpublished blocks return to the free list immediately, exactly
     the pre-prefix-cache behaviour.
+
+    The LRU itself is boundable: ``max_cached`` caps how many refcount-0
+    blocks may park at once (insertion past the cap evicts oldest-first to
+    the free list), and ``ttl_s`` expires parked blocks untouched for that
+    long (swept at every ``alloc``; ``sweep_expired`` forces a sweep).
+    Both default off (0), preserving the park-until-pressure behaviour.
+    Eviction only ever touches refcount-0 blocks, so neither cap can stall
+    an in-flight slot.  ``time_fn`` is injectable for deterministic tests.
     """
 
-    def __init__(self, n_blocks: int):
+    def __init__(self, n_blocks: int, *, max_cached: int = 0,
+                 ttl_s: float = 0.0,
+                 time_fn: Callable[[], float] = time.monotonic):
         if n_blocks < 2:
             raise ValueError("pool needs >= 2 blocks (trash + 1 usable)")
+        if max_cached < 0 or ttl_s < 0:
+            raise ValueError("max_cached/ttl_s must be >= 0 (0 = off)")
         self.n_blocks = n_blocks
+        self.max_cached = max_cached
+        self.ttl_s = ttl_s
+        self._time = time_fn
         self._free: List[int] = list(range(1, n_blocks))
         self._free_set = set(self._free)      # O(1) double-free detection
         self._ref: Dict[int, int] = {}        # block -> live references
-        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        self._cached: "OrderedDict[int, float]" = OrderedDict()  # b -> t_in
         self.retain_cb: Optional[Callable[[int], bool]] = None
         self.evict_cb: Optional[Callable[[int], None]] = None
 
@@ -259,6 +275,7 @@ class BlockPool:
         blocks are preferred; the shortfall evicts reclaimable cached
         blocks LRU-first (their index entries are dropped via
         ``evict_cb``)."""
+        self.sweep_expired()
         if n > self.available:
             return None
         taken, self._free = self._free[:n], self._free[n:]
@@ -274,6 +291,24 @@ class BlockPool:
         if self.evict_cb is not None:
             self.evict_cb(b)
         return b
+
+    def sweep_expired(self) -> int:
+        """Reclaim parked blocks older than ``ttl_s`` (oldest first — the
+        LRU order is also insertion order, so expiry scans stop at the
+        first survivor).  No-op when the TTL is off."""
+        if not self.ttl_s or not self._cached:
+            return 0
+        cutoff = self._time() - self.ttl_s
+        n = 0
+        while self._cached:
+            t_in = next(iter(self._cached.values()))
+            if t_in > cutoff:
+                break
+            b = self._evict_lru()
+            self._free.append(b)
+            self._free_set.add(b)
+            n += 1
+        return n
 
     def evict_all_cached(self) -> int:
         """Reclaim every refcount-0 cached block (tests / pressure relief).
@@ -314,7 +349,12 @@ class BlockPool:
             if self._ref[b] == 0:
                 del self._ref[b]
                 if self.retain_cb is not None and self.retain_cb(b):
-                    self._cached[b] = None          # most-recently used
+                    self._cached[b] = self._time()  # most-recently used
+                    while (self.max_cached
+                           and len(self._cached) > self.max_cached):
+                        old = self._evict_lru()     # size cap: oldest out
+                        self._free.append(old)
+                        self._free_set.add(old)
                 else:
                     self._free.append(b)
                     self._free_set.add(b)
@@ -335,7 +375,9 @@ class ShardedBlockPool:
     and capacity reasoning is shard-independent).
     """
 
-    def __init__(self, n_blocks: int, n_shards: int):
+    def __init__(self, n_blocks: int, n_shards: int, *, max_cached: int = 0,
+                 ttl_s: float = 0.0,
+                 time_fn: Callable[[], float] = time.monotonic):
         if n_shards < 1:
             raise ValueError("need >= 1 shard")
         if n_blocks % n_shards:
@@ -352,7 +394,12 @@ class ShardedBlockPool:
         # never-handed-out block 0 IS the shard's reserved first block, so
         # the whole refcount / retain-LRU / eviction lifecycle lives in
         # BlockPool once.  Global id = shard * per_shard + local id.
-        self._pools = [BlockPool(self.per_shard) for _ in range(n_shards)]
+        # A global cached-LRU cap splits evenly (rounded up so a small cap
+        # never silently disables caching on every shard).
+        per_cap = -(-max_cached // n_shards) if max_cached else 0
+        self._pools = [BlockPool(self.per_shard, max_cached=per_cap,
+                                 ttl_s=ttl_s, time_fn=time_fn)
+                       for _ in range(n_shards)]
         for s, p in enumerate(self._pools):
             base = s * self.per_shard
             p.retain_cb = (lambda base: lambda b:
@@ -396,6 +443,9 @@ class ShardedBlockPool:
 
     def evict_all_cached(self) -> int:
         return sum(p.evict_all_cached() for p in self._pools)
+
+    def sweep_expired(self) -> int:
+        return sum(p.sweep_expired() for p in self._pools)
 
     def _by_shard(self, blocks: Sequence[int],
                   what: str) -> Dict[int, List[int]]:

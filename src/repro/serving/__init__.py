@@ -1,3 +1,4 @@
+from repro.serving.controller import ControllerConfig, ThetaController
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch, PrefixStats
 from repro.serving.scheduler import (
     Request,
@@ -8,4 +9,5 @@ from repro.serving.scheduler import (
 )
 
 __all__ = ["Request", "Response", "SamplingParams", "SpecServer",
-           "ServerConfig", "PrefixCache", "PrefixMatch", "PrefixStats"]
+           "ServerConfig", "PrefixCache", "PrefixMatch", "PrefixStats",
+           "ControllerConfig", "ThetaController"]

@@ -1,0 +1,106 @@
+"""Online margin/acceptance controller for per-slot adaptive verification.
+
+MARS's knob — the relaxation threshold θ — is a *quality/latency dial*:
+lower θ relaxes more near-tie rejections (more tokens per cycle, more drift
+from the strict-greedy output), higher θ converges to strict verification.
+The repo historically picked one θ offline (``benchmarks/table4_theta.py``)
+and broadcast it to every request; this module closes the loop instead.
+
+:class:`ThetaController` is a pure host-side policy over the per-slot
+statistics the device carry already accumulates (``DecodeState.stats``):
+
+* ``relaxed`` / ``accepts``  — the *relaxed-accept share*: the fraction of
+  accepted draft tokens that needed MARS relaxation.  This is the quality
+  proxy: every relaxed accept is a token strict verification would have
+  rejected, so the share is held against ``relax_budget``.
+* ``margin_ema``             — the on-device EMA of the top-2 logit ratio
+  at each cycle's first rejection.  Rejections with ratio just *below* the
+  current θ are exactly the ones a small θ drop would convert into
+  accepts, so the EMA marks the productive operating point.
+* ``accepts`` / ``cycles``   — accepts-per-cycle, the throughput signal
+  that (optionally) drives the draft-length bucket.
+
+The update is a clamped proportional law, deliberately monotone in its
+inputs (tested in ``tests/test_adaptive_theta.py``):
+
+    θ' = clip(θ + gain·(relax_share − relax_budget)
+                − pressure_gain·pressure
+                + margin_gain·(margin_ema − θ),            # when EMA valid
+              θ_min, θ_max)
+
+so a slot relaxing past its quality budget is tightened (θ ↑), admission
+*queue pressure* relaxes every live slot toward ``theta_min`` (trading
+marginal fidelity for latency — ∂θ'/∂pressure = −pressure_gain < 0), and a
+valid margin EMA pulls θ toward where the target's actual near-ties sit.
+
+The controller runs entirely at the harvest boundary on rows
+:meth:`SpecServer.sync` already transfers — the sync-free tick contract is
+untouched, and retunes reach the device as one host→device scatter into the
+carry's ``theta`` row (never mid-group).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    theta_min: float = 0.6       # most-relaxed threshold pressure may reach
+    theta_max: float = 0.99      # strictest threshold tightening may reach
+    relax_budget: float = 0.25   # tolerated relaxed share of accepted tokens
+    gain: float = 0.15           # proportional gain on the budget error
+    pressure_gain: float = 0.08  # θ drop per unit of admission-queue pressure
+    margin_gain: float = 0.25    # pull toward the observed margin EMA
+    # draft-length buckets (chain topology only): when accepts-per-cycle
+    # sits below ``k_shrink_frac`` of the short bucket, drafting the full K
+    # is wasted target work — dispatch the pre-jitted short-K program.
+    k_shrink_frac: float = 0.5
+
+
+class ThetaController:
+    """Pure per-slot θ policy; all methods are host-side numpy and
+    side-effect free (the scheduler owns dispatching the result)."""
+
+    def __init__(self, cfg: Optional[ControllerConfig] = None):
+        self.cfg = cfg or ControllerConfig()
+        if not (0.0 < self.cfg.theta_min <= self.cfg.theta_max <= 1.0):
+            raise ValueError(
+                f"need 0 < theta_min <= theta_max <= 1, got "
+                f"[{self.cfg.theta_min}, {self.cfg.theta_max}]")
+
+    def clamp(self, theta):
+        return float(np.clip(theta, self.cfg.theta_min, self.cfg.theta_max))
+
+    def update(self, theta, relax_share, margin_ema, pressure: float):
+        """One retune step over the live slots.
+
+        theta       : (n,) current per-slot thresholds
+        relax_share : (n,) relaxed / max(accepts, 1) since admission
+        margin_ema  : (n,) device margin EMA (0 = no sample yet)
+        pressure    : scalar >= 0 admission-queue pressure (queued work per
+                      slot; 0 = no queue)
+
+        Returns the new (n,) thresholds, clipped to [theta_min, theta_max].
+        Monotone: pressure up => theta down, relax_share up => theta up.
+        """
+        cfg = self.cfg
+        theta = np.asarray(theta, np.float64)
+        relax_share = np.asarray(relax_share, np.float64)
+        margin_ema = np.asarray(margin_ema, np.float64)
+        step = cfg.gain * (relax_share - cfg.relax_budget)
+        step -= cfg.pressure_gain * max(float(pressure), 0.0)
+        guided = margin_ema > 0
+        step = np.where(guided, step + cfg.margin_gain * (margin_ema - theta),
+                        step)
+        return np.clip(theta + step, cfg.theta_min, cfg.theta_max)
+
+    def choose_k(self, accepts_per_cycle: float, k_full: int,
+                 k_short: int) -> int:
+        """Width bucket for the next tick group: fall back to the short
+        draft when observed accepts-per-cycle can't even fill it."""
+        if accepts_per_cycle < self.cfg.k_shrink_frac * k_short:
+            return k_short
+        return k_full

@@ -64,6 +64,24 @@ every slot's writes land at positions ≥ its ``start_pos``, shared blocks
 are never written — speculative rollback remains an index rewind into
 private blocks only.
 
+Adaptive verification (``ServerConfig.theta_mode="adaptive"``)
+---------------------------------------------------------------
+The MARS threshold θ is a per-slot ``(B,)`` row of the carry (seeded from
+``SamplingParams.theta`` at admission), and every verify cycle reads its
+own row — so different in-flight requests run at different strictness with
+zero extra transfers.  A host-side
+:class:`~repro.serving.controller.ThetaController` closes the loop at each
+sync boundary: the finished-flag poll additionally carries the per-slot
+``accepts``/``relaxed`` counters and the on-device margin EMA (same single
+transfer), the controller retunes every live slot within
+``[theta_min, theta_max]`` — tightening slots whose relaxed-accept share
+exceeds ``relax_budget``, relaxing everyone under admission-queue
+pressure — and one host→device write lands the new θ row in the carry.
+``theta_mode="fixed"`` never constructs a controller and stays
+token-identical to the pre-adaptive server.  ``adaptive_k=True`` (chain
+topology) additionally lets the controller pick the next group's draft
+length between pre-jitted full-K and half-K tick programs.
+
 Host-side logic (queueing, response assembly, detokenisation, block
 accounting) is deliberately thin and never feeds back into the carry
 mid-flight.
@@ -118,6 +136,11 @@ from repro.sharding import axis_rules, serving_rules
 class SamplingParams:
     max_tokens: int = 128
     temperature: float = 1.0
+    # Per-request MARS relaxation threshold; None inherits the engine
+    # default.  Under ``theta_mode="adaptive"`` this seeds the slot's
+    # controller state (clamped to [theta_min, theta_max]) and the
+    # controller retunes it from there.
+    theta: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -185,6 +208,28 @@ class ServerConfig:
     # Smallest cached run (in blocks) worth mapping shared — tiny matches
     # cost table bookkeeping + a COW clone for near-zero prefill savings.
     min_match_blocks: int = 1
+    # Caps on the reclaimable LRU of published-but-free blocks: at most
+    # ``prefix_cache_max_blocks`` parked blocks (0 = bounded only by the
+    # pool itself), each reclaimed after ``prefix_cache_ttl_s`` seconds
+    # unused (0 = no TTL).  Oldest-first either way; eviction only touches
+    # blocks nobody references, so it can never stall an in-flight slot.
+    prefix_cache_max_blocks: int = 0
+    prefix_cache_ttl_s: float = 0.0
+    # Per-slot adaptive verification: "fixed" broadcasts EngineConfig.theta
+    # (token-identical to the pre-controller server); "adaptive" runs a
+    # ThetaController (repro.serving.controller) at every sync boundary,
+    # retuning each live slot's theta within [theta_min, theta_max] from
+    # the on-device relaxed-accept share and margin EMA, and relaxing
+    # everyone under admission-queue pressure.
+    theta_mode: str = "fixed"           # "fixed" | "adaptive"
+    theta_min: float = 0.6
+    theta_max: float = 0.99
+    relax_budget: float = 0.25          # tolerated relaxed accept share
+    # Adaptive draft length (chain topology + theta_mode="adaptive" only):
+    # pre-jit a second tick program over a half-K drafter and let the
+    # controller pick the width bucket per group from observed
+    # accepts-per-cycle — low-acceptance phases stop paying full-K drafts.
+    adaptive_k: bool = False
 
 
 class SpecServer:
@@ -237,6 +282,25 @@ class SpecServer:
                     f"{target.cfg.name!r}: its recurrent state cannot be "
                     "reconstructed from shared KV blocks")
 
+        if cfg.theta_mode not in ("fixed", "adaptive"):
+            raise ValueError(f"unknown theta_mode {cfg.theta_mode!r} "
+                             f"(fixed|adaptive)")
+        self.controller = None
+        if cfg.theta_mode == "adaptive":
+            from repro.serving.controller import (ControllerConfig,
+                                                  ThetaController)
+            self.controller = ThetaController(ControllerConfig(
+                theta_min=cfg.theta_min, theta_max=cfg.theta_max,
+                relax_budget=cfg.relax_budget))
+        if cfg.adaptive_k:
+            if self.controller is None:
+                raise ValueError("ServerConfig(adaptive_k=True) requires "
+                                 "theta_mode='adaptive': the width bucket "
+                                 "is picked by the same controller")
+            if engine_cfg.topology != "chain":
+                raise ValueError("adaptive_k supports the chain topology "
+                                 "only (tree templates bake their own K)")
+
         # -- serving mesh (tentpole): partition the tick over (data, model)
         mesh_shape = tuple(cfg.mesh) if cfg.mesh else (1, 1)
         self.mesh = None
@@ -276,8 +340,11 @@ class SpecServer:
             # the device only ever sees them through the table rows).  On a
             # mesh the free list is per-data-shard so a slot's block ids
             # never leave the pool partition of the shard that owns it.
-            self.pool = (ShardedBlockPool(n_blocks, self.data_shards)
-                         if self.data_shards > 1 else BlockPool(n_blocks))
+            caps = dict(max_cached=cfg.prefix_cache_max_blocks,
+                        ttl_s=cfg.prefix_cache_ttl_s)
+            self.pool = (ShardedBlockPool(n_blocks, self.data_shards, **caps)
+                         if self.data_shards > 1
+                         else BlockPool(n_blocks, **caps))
             self.slot_blocks: List[List[int]] = [[] for _ in range(b)]
             # per-slot trash block: the reserved first block of the slot's
             # own pool partition (block 0 on one device), so masked and
@@ -345,6 +412,24 @@ class SpecServer:
         self._tau_est = float(self.session.topology.commit_width)
         self._last_cycles = np.zeros((b,), np.int64)
         self._last_commits = np.zeros((b,), np.int64)
+        # host mirror of the carry's per-slot theta row (written at
+        # admission and by controller retunes; the device copy is the
+        # truth the verify reads)
+        self.slot_theta = np.full((b,), engine_cfg.theta, np.float64)
+        self.theta_retunes = 0     # controller dispatches (host→device)
+        # adaptive-K bucket state: the controller flips the *next* group's
+        # draft length between the full-K and half-K pre-jitted programs
+        self._k_full = engine_cfg.k
+        self._k_short = max(1, engine_cfg.k // 2)
+        self._k_bucket = self._k_full
+        self.session_short = None
+        if cfg.adaptive_k and self._k_short < self._k_full:
+            import copy
+            short_drafter = copy.copy(drafter)
+            short_drafter.k = self._k_short
+            self.session_short = DecodeSession(
+                target, short_drafter,
+                dataclasses.replace(engine_cfg, k=self._k_short))
 
         def _rules_ctx():
             # trace-time: activates `constrain` annotations throughout the
@@ -353,29 +438,40 @@ class SpecServer:
                 return contextlib.nullcontext()
             return axis_rules(self.rules, mesh=self.mesh)
 
-        def _fused_cycles(tp, dp, state, steps):
-            # dynamic trip count: group size varies tick to tick without
-            # recompilation, and the loop exits early on-device once every
-            # slot is finished (a mis-sized group never burns dead cycles)
-            def cond(carry):
-                i, st = carry
-                return (i < steps) & (~DecodeState(*st).finished).any()
+        def _make_fused(session):
+            def _fused_cycles(tp, dp, state, steps):
+                # dynamic trip count: group size varies tick to tick
+                # without recompilation, and the loop exits early
+                # on-device once every slot is finished (a mis-sized
+                # group never burns dead cycles)
+                def cond(carry):
+                    i, st = carry
+                    return (i < steps) & (~DecodeState(*st).finished).any()
 
-            def body(carry):
-                i, st = carry
-                return i + 1, tuple(self.session.cycle(tp, dp,
-                                                       DecodeState(*st)))
+                def body(carry):
+                    i, st = carry
+                    return i + 1, tuple(session.cycle(tp, dp,
+                                                      DecodeState(*st)))
 
-            with _rules_ctx():
-                _, out = jax.lax.while_loop(cond, body,
-                                            (jnp.int32(0), tuple(state)))
-            return DecodeState(*out)
+                with _rules_ctx():
+                    _, out = jax.lax.while_loop(cond, body,
+                                                (jnp.int32(0),
+                                                 tuple(state)))
+                return DecodeState(*out)
+            return _fused_cycles
+
+        _fused_cycles = _make_fused(self.session)
+
+        def _set_theta_row(state, theta):
+            # controller retune: ONE host→device write into the carry's
+            # theta row; every other field passes through untouched
+            return DecodeState(*state)._replace(theta=theta)
 
         use_prefix = self.prefix is not None
 
         def _admit_all(tp, dp, state, prompts, plens, smask, budgets, temps,
-                       block_rows, starts, cow_src, cow_dst, win_tokens,
-                       win_off):
+                       thetas, block_rows, starts, cow_src, cow_dst,
+                       win_tokens, win_off):
             kw = {}
             if use_prefix:
                 # cached-prefix admission: map shared blocks read-only,
@@ -387,7 +483,7 @@ class SpecServer:
             with _rules_ctx():
                 return self.session.prefill(tp, dp, state, prompts, plens,
                                             slot_mask=smask, budget=budgets,
-                                            temperature=temps,
+                                            temperature=temps, theta=thetas,
                                             block_rows=block_rows, **kw)
 
         def _gather_rows(state, idx):
@@ -403,22 +499,36 @@ class SpecServer:
         # "data", and harvest gathers to a replicated (host-readable) tree.
         if self.mesh is None:
             self._cycle = jax.jit(_fused_cycles, donate_argnums=(2,))
+            self._cycle_short = (
+                jax.jit(_make_fused(self.session_short),
+                        donate_argnums=(2,))
+                if self.session_short is not None else None)
             self._prefill = jax.jit(_admit_all, donate_argnums=(2,))
+            self._set_theta = jax.jit(_set_theta_row, donate_argnums=(0,))
             self._gather = jax.jit(_gather_rows)
         else:
             repl = NamedSharding(self.mesh, P())
             row = NamedSharding(self.mesh, P("data"))
             mat = NamedSharding(self.mesh, P("data", None))
-            self._cycle = jax.jit(
-                _fused_cycles, donate_argnums=(2,),
+            cycle_shardings = dict(
                 in_shardings=(self._t_shardings, self._d_shardings,
                               self._state_shardings, repl),
                 out_shardings=self._state_shardings)
+            self._cycle = jax.jit(_fused_cycles, donate_argnums=(2,),
+                                  **cycle_shardings)
+            self._cycle_short = (
+                jax.jit(_make_fused(self.session_short),
+                        donate_argnums=(2,), **cycle_shardings)
+                if self.session_short is not None else None)
             self._prefill = jax.jit(
                 _admit_all, donate_argnums=(2,),
                 in_shardings=(self._t_shardings, self._d_shardings,
                               self._state_shardings, mat, row, row, row,
-                              row, mat, row, row, row, mat, repl),
+                              row, row, mat, row, row, row, mat, repl),
+                out_shardings=self._state_shardings)
+            self._set_theta = jax.jit(
+                _set_theta_row, donate_argnums=(0,),
+                in_shardings=(self._state_shardings, row),
                 out_shardings=self._state_shardings)
             self._gather = jax.jit(
                 _gather_rows,
@@ -530,6 +640,10 @@ class SpecServer:
         smask = np.zeros((b,), bool)
         budgets = np.zeros((b,), np.int32)
         temps = np.zeros((b,), np.float32)
+        # non-admitted rows keep their carried theta: splat the host
+        # mirror, overwrite admitted rows below (prefill's slot mask only
+        # writes masked rows, but the full array must still be well-formed)
+        thetas = self.slot_theta.astype(np.float32).copy()
         # unmapped table rows point at the slot's (shard-local) trash block
         rows = np.tile(self.trash_ids.astype(np.int32)[:, None],
                        (1, self.max_blocks))
@@ -598,6 +712,12 @@ class SpecServer:
             smask[slot] = True
             budgets[slot] = req.params.max_tokens
             temps[slot] = req.params.temperature
+            th = (req.params.theta if req.params.theta is not None
+                  else self.ecfg.theta)
+            if self.controller is not None:
+                th = self.controller.clamp(th)
+            thetas[slot] = th
+            self.slot_theta[slot] = th
             self.slot_req[slot] = req
             self.slot_t0[slot] = now
             self.slot_base_len[slot] = plen
@@ -627,7 +747,7 @@ class SpecServer:
         self.prefill_window_tokens += b * w
         self.state = self._prefill(
             self.t_params, self.d_params, self.state, prompts, plens,
-            smask, budgets, temps, rows, starts, cow_src, cow_dst,
+            smask, budgets, temps, thetas, rows, starts, cow_src, cow_dst,
             win, np.int32(off))
         # publish the admitted prompts' full blocks NOW: a prompt is
         # committed content by definition, and device dispatches execute in
@@ -674,7 +794,7 @@ class SpecServer:
         budgets/lengths and the observed tau — no transfer.  An EOS token
         can preempt a slot much earlier, so then ``steps_per_sync`` caps
         the group."""
-        w = self.session.topology.commit_width
+        w = self._active_session().topology.commit_width
         active = [int(self.slot_remaining[s])
                   for s in range(self.cfg.slots)
                   if self.slot_req[s] is not None and not self._finished_host[s]]
@@ -686,6 +806,15 @@ class SpecServer:
             steps = min(steps, max(1, self.cfg.steps_per_sync))
         return steps
 
+    def _active_session(self):
+        """The DecodeSession whose pre-jitted tick program the next group
+        dispatches (adaptive-K picks the half-K bucket when acceptance is
+        low; everyone else always runs the full-K session)."""
+        if (self.session_short is not None
+                and self._k_bucket == self._k_short):
+            return self.session_short
+        return self.session
+
     def step(self):
         """One scheduler tick: dispatch one fused group of verify cycles
         (adaptively sized, see :meth:`_group_size`).  Budget exhaustion,
@@ -694,18 +823,26 @@ class SpecServer:
         if all(r is None for r in self.slot_req):
             return                      # nothing in flight: no dispatch
         self.step_calls += 1
-        self.state = self._cycle(self.t_params, self.d_params, self.state,
-                                 np.int32(self._group_size()))
+        cycle = (self._cycle if self._active_session() is self.session
+                 else self._cycle_short)
+        self.state = cycle(self.t_params, self.d_params, self.state,
+                           np.int32(self._group_size()))
 
     def sync(self):
         """The only point where the host observes the carry: one poll of
         the finished flags + lengths (refreshing the group-sizing bounds),
         then harvest all newly finished rows with a single gathered
         ``device_get``."""
-        poll = self._device_get({"finished": self.state.finished,
-                                 "lengths": self.state.lengths,
-                                 "cycles": self.state.stats["cycles"],
-                                 "commits": self.state.stats["commits"]})
+        fields = {"finished": self.state.finished,
+                  "lengths": self.state.lengths,
+                  "cycles": self.state.stats["cycles"],
+                  "commits": self.state.stats["commits"]}
+        if self.controller is not None:
+            # controller inputs ride the SAME transfer: still one poll
+            fields.update(accepts=self.state.stats["accepts"],
+                          relaxed=self.state.stats["relaxed"],
+                          margin=self.state.stats["margin_ema"])
+        poll = self._device_get(fields)
         self._finished_host = np.array(poll["finished"])  # writable copy
         d_cycles = d_commits = 0
         for s in range(self.cfg.slots):
@@ -726,6 +863,7 @@ class SpecServer:
         done = [s for s in range(self.cfg.slots)
                 if self._finished_host[s] and self.slot_req[s] is not None]
         if not done:
+            self._retune(poll)
             return
         # fixed-size index (pad with the first entry) so the gather has one
         # shape for any number of finished slots — a single compiled program
@@ -763,6 +901,44 @@ class SpecServer:
                 # admission)
                 self.pool.free(self.slot_blocks[slot])
                 self.slot_blocks[slot] = []
+        self._retune(poll)
+
+    def _retune(self, poll):
+        """Controller pass at the sync boundary: retune every live slot's
+        theta from stats the poll already transferred, then (only when
+        something actually moved) dispatch ONE host→device write into the
+        carry's theta row.  Runs strictly between fused groups, so the
+        sync-free tick contract is untouched — ``step()`` still performs
+        zero device→host transfers, and ``host_syncs`` does not grow here
+        (the retune is a host→device scatter, the cheap direction)."""
+        if self.controller is None:
+            return
+        live = [s for s in range(self.cfg.slots)
+                if self.slot_req[s] is not None
+                and not self._finished_host[s]]
+        if self.session_short is not None:
+            # width bucket for the NEXT group: commits/cycle ~ accepts/cycle
+            # + 1 correction token, so tau-1 estimates draft acceptance
+            self._k_bucket = self.controller.choose_k(
+                max(self._tau_est - 1.0, 0.0), self._k_full, self._k_short)
+        if not live:
+            return
+        idx = np.asarray(live, np.int64)
+        # stats rows were reset at each slot's admission, so the raw
+        # counters ARE per-request totals
+        accepts = np.asarray(poll["accepts"], np.float64)[idx]
+        relaxed = np.asarray(poll["relaxed"], np.float64)[idx]
+        relax_share = relaxed / np.maximum(accepts, 1.0)
+        margin = np.asarray(poll["margin"], np.float64)[idx]
+        pressure = len(self.queue) / max(self.cfg.slots, 1)
+        new = self.controller.update(self.slot_theta[idx], relax_share,
+                                     margin, pressure)
+        if float(np.max(np.abs(new - self.slot_theta[idx]))) <= 1e-6:
+            return                      # converged: skip the dispatch
+        self.slot_theta[idx] = new
+        self.theta_retunes += 1
+        self.state = self._set_theta(
+            self.state, self.slot_theta.astype(np.float32))
 
     def run(self, *, max_ticks: int = 10_000) -> List[Response]:
         for _ in range(max_ticks):

@@ -106,25 +106,39 @@ def main():
     def forbidden(*a, **kw):
         raise AssertionError("device→host transfer inside step() on mesh")
 
-    cases = [((2, 1), "dense", "off", "bf16", reqs, offline),
-             ((2, 1), "paged", "off", "bf16", reqs, offline),
-             ((2, 2), "paged", "off", "bf16", reqs, offline),
-             ((2, 2), "paged", "off", "int8", reqs, offline_int8),
-             ((2, 2), "paged", "on", "bf16", shared_reqs, offline_shared),
-             ((4, 2), "dense", "off", "bf16", reqs, offline)]
-    for mesh, cache, prefix, kv, case_reqs, ref in cases:
+    # the adaptive case pins mesh-invariance of per-slot theta: a clamped
+    # controller (theta_min == theta_max == EngineConfig.theta) can never
+    # move theta, so greedy output must still match the offline reference
+    # while the controller machinery (clamp at admission, stats in the sync
+    # poll, the sharded theta-row dispatch) runs for real
+    adaptive = {"theta_mode": "adaptive", "theta_min": 0.9, "theta_max": 0.9}
+    cases = [((2, 1), "dense", "off", "bf16", reqs, offline, {}),
+             ((2, 1), "paged", "off", "bf16", reqs, offline, {}),
+             ((2, 2), "paged", "off", "bf16", reqs, offline, {}),
+             ((2, 2), "paged", "off", "int8", reqs, offline_int8, {}),
+             ((2, 2), "paged", "on", "bf16", shared_reqs, offline_shared, {}),
+             ((2, 2), "paged", "off", "bf16", reqs, offline, adaptive),
+             ((4, 2), "dense", "off", "bf16", reqs, offline, {})]
+    for mesh, cache, prefix, kv, case_reqs, ref, extra in cases:
         server = SpecServer(
             tgt, IndependentDrafter(drf, k=k, temperature=0.0),
             t_params, d_params, ecfg,
             ServerConfig(slots=4, max_len=96, max_prompt_len=12,
                          steps_per_sync=3, cache=cache, mesh=mesh,
-                         prefix_cache=prefix, block_size=4, kv_dtype=kv))
+                         prefix_cache=prefix, block_size=4, kv_dtype=kv,
+                         **extra))
         for r in case_reqs:
             server.submit(dataclasses.replace(r))
         for _ in range(10_000):
             if not server.queue and all(r is None for r in server.slot_req):
                 break
             server._admit()
+            if server.controller is not None:
+                # exercise the sharded retune entry point directly (the
+                # clamped controller's own updates are no-ops and skip the
+                # dispatch): writing the SAME thetas must preserve parity
+                server.state = server._set_theta(
+                    server.state, server.slot_theta.astype(np.float32))
             if server.pool is not None:
                 # no cross-shard paged traffic: every mapped block (shared
                 # prefix blocks included) and every trash target lives in
@@ -158,6 +172,9 @@ def main():
             assert s["hits"] >= 1, s     # shared blocks actually rode in
             note = (f", prefix hit rate {s['hit_rate']:.0%} "
                     f"({s['blocks_shared']} shared mappings)")
+        if server.controller is not None:
+            assert (server.slot_theta == 0.9).all(), server.slot_theta
+            note += ", adaptive(theta clamped)"
         print(f"  mesh={mesh} cache={cache} prefix={prefix} kv={kv}: "
               f"token-identical, 0 in-tick syncs "
               f"({server.host_syncs} at sync points){note}")

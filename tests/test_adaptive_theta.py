@@ -1,0 +1,333 @@
+"""Per-slot adaptive verification: theta as device carry state + the
+margin/acceptance controller.
+
+Three layers under test (docs/ARCHITECTURE.md "Adaptive verification"):
+
+* verify layer — ``theta`` may be a per-row ``(B,)`` vector anywhere a
+  scalar was accepted (reference AND fused kernel paths), a uniform vector
+  is bit-identical to the scalar it splats, and rows never interact;
+* controller — the pure host policy is monotone (pressure relaxes, relaxed
+  overshoot tightens) and always clamped;
+* server — ``theta_mode="adaptive"`` keeps the sync-free tick contract
+  (zero device→host transfers inside ``step()``) and a clamped controller
+  (theta_min == theta_max) reproduces fixed-mode output token for token.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.core import EngineConfig, IndependentDrafter
+from repro.core import verify as V
+from repro.core.tree import make_caterpillar, verify_tree
+from repro.kernels import ops, ref
+from repro.models import build_model
+from repro.serving import (ControllerConfig, Request, SamplingParams,
+                           ServerConfig, SpecServer, ThetaController)
+
+
+# ---------------------------------------------------------------------------
+# Kernel layer: per-row theta
+# ---------------------------------------------------------------------------
+
+def test_kernel_per_row_theta_matches_ref():
+    rng = np.random.default_rng(0)
+    b, k, v = 5, 4, 257
+    logits = jnp.asarray(rng.standard_normal((b, k, v)) * 3, jnp.float32)
+    draft = jnp.asarray(rng.integers(0, v, (b, k)), jnp.int32)
+    # plant exact matches and near-ties so both masks have signal
+    _, idx = jax.lax.top_k(logits, 2)
+    draft = draft.at[:, 0].set(idx[:, 0, 0]).at[:, 1].set(idx[:, 1, 1])
+    thetas = jnp.asarray([0.5, 0.8, 0.9, 0.97, 0.999], jnp.float32)
+    e, r, _, _, z1, z2 = ops.mars_verify_stats(draft, logits, thetas)
+    for i in range(b):
+        er, rr, _, _ = ref.mars_verify_ref(draft[i], logits[i],
+                                           float(thetas[i]))
+        np.testing.assert_array_equal(np.asarray(e[i]), np.asarray(er),
+                                      err_msg=f"row {i} exact")
+        np.testing.assert_array_equal(np.asarray(r[i]), np.asarray(rr),
+                                      err_msg=f"row {i} relax")
+    # z1/z2 are the true top-2 (the margin stats the carry accumulates)
+    vals, _ = jax.lax.top_k(logits, 2)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(vals[..., 0]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z2), np.asarray(vals[..., 1]),
+                               rtol=1e-6)
+
+
+def test_kernel_uniform_vector_theta_equals_scalar():
+    rng = np.random.default_rng(1)
+    b, k, v = 3, 5, 127
+    logits = jnp.asarray(rng.standard_normal((b, k, v)) * 3, jnp.float32)
+    draft = jnp.asarray(rng.integers(0, v, (b, k)), jnp.int32)
+    _, idx = jax.lax.top_k(logits, 2)
+    draft = draft.at[:, 0].set(idx[:, 0, 1])      # near-tie candidates
+    a = ops.mars_verify_stats(draft, logits, 0.9)
+    bvec = ops.mars_verify_stats(draft, logits, jnp.full((b,), 0.9))
+    for x, y in zip(a, bvec):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Verify layer: chain + tree, vector theta
+# ---------------------------------------------------------------------------
+
+def _chain_case(seed=2, b=4, k=3, v=61):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((b, k + 1, v)) * 2, jnp.float32)
+    # drafts: mix of top-1 (exact), top-2 (relaxable), and garbage
+    _, idx = jax.lax.top_k(logits[:, :k], 2)
+    draft = jnp.asarray(rng.integers(0, v, (b, k)), jnp.int32)
+    draft = draft.at[:, 0].set(idx[:, 0, 0]).at[:, 1].set(idx[:, 1, 1])
+    return draft, logits
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_chain_uniform_vector_theta_bitwise(use_kernel):
+    draft, logits = _chain_case()
+    b = draft.shape[0]
+    kw = dict(rule="mars", mode="greedy", temperature=0.0,
+              key=jax.random.PRNGKey(0), use_kernel=use_kernel)
+    r_scalar = V.verify_chain(draft, logits, theta=0.9, **kw)
+    r_vec = V.verify_chain(draft, logits, theta=jnp.full((b,), 0.9), **kw)
+    for f in r_scalar._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_scalar, f)), np.asarray(getattr(r_vec, f)),
+            err_msg=f"field {f}")
+
+
+def test_tree_uniform_vector_theta_bitwise():
+    tpl = make_caterpillar(k=2, branch=2)
+    v, b = 31, 3
+    n = len(tpl.depth)
+    rng = np.random.default_rng(4)
+    node_tokens = jnp.asarray(rng.integers(0, v, (b, n)), jnp.int32)
+    logits = jnp.asarray(rng.standard_normal((b, n, v)) * 2, jnp.float32)
+    kw = dict(rule="mars", mode="greedy", temperature=0.0,
+              key=jax.random.PRNGKey(1))
+    r_scalar = verify_tree(tpl, node_tokens, logits, theta=0.85, **kw)
+    r_vec = verify_tree(tpl, node_tokens, logits,
+                        theta=jnp.full((b,), 0.85), **kw)
+    for i, (x, y) in enumerate(zip(r_scalar, r_vec)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"output {i}")
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_mixed_theta_rows_are_independent(use_kernel):
+    """A batch row verified at theta_i must equal the same row verified
+    alone at theta_i — neighbours' thresholds can never leak across rows."""
+    draft, logits = _chain_case(seed=5)
+    b = draft.shape[0]
+    thetas = jnp.asarray([0.55, 0.8, 0.92, 0.99], jnp.float32)
+    kw = dict(rule="mars", mode="greedy", temperature=0.0,
+              key=jax.random.PRNGKey(0), use_kernel=use_kernel)
+    mixed = V.verify_chain(draft, logits, theta=thetas, **kw)
+    for i in range(b):
+        solo = V.verify_chain(draft[i:i + 1], logits[i:i + 1],
+                              theta=float(thetas[i]), **kw)
+        for f in mixed._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(mixed, f))[i:i + 1],
+                np.asarray(getattr(solo, f)),
+                err_msg=f"row {i} field {f}")
+
+
+def test_margin_sample_at_first_rejection():
+    """The per-cycle margin sample is the top-2 ratio at the first rejected
+    position, and -1 (no sample) on fully accepted rows."""
+    v = 16
+    logits = np.full((2, 3, v), -5.0, np.float32)
+    # row 0: draft rejected at pos 0 with a clean ratio 4.0/5.0 = 0.8
+    logits[0, 0, 3] = 5.0
+    logits[0, 0, 7] = 4.0
+    # row 1: both drafts are the argmax -> full accept
+    logits[1, 0, 2] = 5.0
+    logits[1, 1, 4] = 5.0
+    logits[1, 2, 1] = 5.0
+    draft = jnp.asarray([[9, 9], [2, 4]], jnp.int32)
+    res = V.verify_chain(draft, jnp.asarray(logits), rule="mars",
+                         mode="greedy", theta=0.95, temperature=0.0,
+                         key=jax.random.PRNGKey(0))
+    assert np.isclose(float(res.margin[0]), 0.8, atol=1e-6)
+    assert float(res.margin[1]) == -1.0
+
+
+# ---------------------------------------------------------------------------
+# Controller: monotone + clamped
+# ---------------------------------------------------------------------------
+
+def test_controller_pressure_monotone_and_clamped():
+    ctl = ThetaController(ControllerConfig(theta_min=0.6, theta_max=0.99))
+    theta = np.asarray([0.9, 0.8, 0.7])
+    share = np.asarray([0.25, 0.25, 0.25])      # exactly on budget
+    ema = np.zeros(3)                           # no margin signal
+    prev = ctl.update(theta, share, ema, pressure=0.0)
+    for p in (0.5, 1.0, 2.0, 10.0, 1000.0):
+        cur = ctl.update(theta, share, ema, pressure=p)
+        assert (cur <= prev + 1e-12).all(), f"pressure {p} raised theta"
+        assert (cur >= 0.6 - 1e-12).all() and (cur <= 0.99 + 1e-12).all()
+        prev = cur
+    # unbounded pressure pins every slot at the floor, never below
+    np.testing.assert_allclose(ctl.update(theta, share, ema, 1e6),
+                               np.full(3, 0.6))
+
+
+def test_controller_relaxed_overshoot_tightens():
+    ctl = ThetaController(ControllerConfig(relax_budget=0.25))
+    theta = np.full(4, 0.8)
+    ema = np.zeros(4)
+    lo = ctl.update(theta, np.full(4, 0.05), ema, pressure=0.0)
+    hi = ctl.update(theta, np.full(4, 0.9), ema, pressure=0.0)
+    assert (hi > lo).all()                      # overshoot => stricter
+    assert (hi > theta).all() and (lo < theta).all()
+
+
+def test_controller_margin_pull_and_validation():
+    ctl = ThetaController(ControllerConfig())
+    theta = np.asarray([0.9, 0.9])
+    share = np.asarray([0.25, 0.25])
+    # slot 0 sees near-ties at ratio 0.7: theta is pulled down toward it;
+    # slot 1 has no sample (EMA sentinel 0) and stays put
+    out = ctl.update(theta, share, np.asarray([0.7, 0.0]), pressure=0.0)
+    assert out[0] < theta[0] and np.isclose(out[1], 0.9)
+    with pytest.raises(ValueError, match="theta_min"):
+        ThetaController(ControllerConfig(theta_min=0.9, theta_max=0.8))
+
+
+# ---------------------------------------------------------------------------
+# Server: adaptive mode keeps the device-resident contract
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def server_setup():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
+                        n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=cfg.vocab_size, dtype="float32")
+    drf = build_model(d_cfg)
+    return (cfg, tgt, drf, tgt.init(jax.random.PRNGKey(1)),
+            drf.init(jax.random.PRNGKey(2)))
+
+
+def _server(setup, **scfg):
+    cfg, tgt, drf, t_params, d_params = setup
+    return SpecServer(
+        tgt, IndependentDrafter(drf, k=3, temperature=0.0),
+        t_params, d_params,
+        EngineConfig(k=3, rule="mars", mode="greedy", temperature=0.0,
+                     theta=0.9, guard="margin"),
+        ServerConfig(slots=2, max_len=96, max_prompt_len=12, **scfg))
+
+
+def _reqs(cfg, n=6, max_tokens=10, theta=None, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(3, cfg.vocab_size, 6).astype(np.int32),
+                    params=SamplingParams(max_tokens=max_tokens,
+                                          temperature=0.0, theta=theta))
+            for i in range(n)]
+
+
+def test_per_request_theta_lands_in_carry(server_setup):
+    cfg = server_setup[0]
+    srv = _server(server_setup)
+    reqs = _reqs(cfg, n=2)
+    reqs[0].params.theta = 0.7
+    reqs[1].params.theta = 0.95
+    for r in reqs:
+        srv.submit(r)
+    srv._admit()
+    carried = np.asarray(jax.device_get(srv.state.theta))
+    slots = {srv.slot_req[s].uid: s for s in range(2)}
+    assert np.isclose(carried[slots[0]], 0.7)
+    assert np.isclose(carried[slots[1]], 0.95)
+    srv.run()                                   # drain cleanly
+
+
+def test_adaptive_step_stays_sync_free(server_setup):
+    """With the controller on and a queue deeper than the slots (sustained
+    pressure -> real retunes), step() still performs zero device→host
+    transfers; the controller rides the sync-point poll only."""
+    cfg = server_setup[0]
+    srv = _server(server_setup, theta_mode="adaptive", theta_min=0.6,
+                  theta_max=0.99)
+    for r in _reqs(cfg, n=8, max_tokens=16):
+        srv.submit(r)
+
+    real_device_get = jax.device_get
+
+    def forbidden(*a, **kw):
+        raise AssertionError("device→host transfer inside step()")
+
+    for _ in range(10_000):
+        if not srv.queue and all(r is None for r in srv.slot_req):
+            break
+        srv._admit()
+        syncs_before = srv.host_syncs
+        jax.device_get = forbidden
+        try:
+            with jax.transfer_guard_device_to_host("disallow"):
+                srv.step()
+        finally:
+            jax.device_get = real_device_get
+        assert srv.host_syncs == syncs_before
+        srv.sync()
+    resps = srv.run()
+    assert sorted(r.uid for r in resps) == list(range(8))
+    assert srv.theta_retunes > 0                # the controller actually ran
+    assert (srv.slot_theta >= 0.6 - 1e-9).all()
+    assert (srv.slot_theta <= 0.99 + 1e-9).all()
+
+
+def test_adaptive_clamped_equals_fixed(server_setup):
+    """theta_min == theta_max == EngineConfig.theta: the controller runs
+    (its retune path is exercised) but can never move theta, so outputs
+    must be token-identical to fixed mode."""
+    cfg = server_setup[0]
+
+    def serve(mode):
+        kw = (dict(theta_mode="adaptive", theta_min=0.9, theta_max=0.9)
+              if mode == "adaptive" else {})
+        srv = _server(server_setup, **kw)
+        for r in _reqs(cfg, n=5, max_tokens=12, seed=3):
+            srv.submit(r)
+        return {r.uid: np.asarray(r.tokens) for r in srv.run()}
+
+    fixed = serve("fixed")
+    adaptive = serve("adaptive")
+    assert sorted(fixed) == sorted(adaptive)
+    for uid in fixed:
+        np.testing.assert_array_equal(adaptive[uid], fixed[uid],
+                                      err_msg=f"uid {uid}")
+
+
+def test_adaptive_k_width_buckets(server_setup):
+    """adaptive_k pre-jits a half-K program; with a random drafter (low
+    acceptance) the controller drops to the short bucket and the run still
+    completes every request exactly."""
+    cfg = server_setup[0]
+    srv = _server(server_setup, theta_mode="adaptive", adaptive_k=True)
+    assert srv.session_short is not None
+    assert srv.session_short.topology.commit_width == srv._k_short + 1
+    for r in _reqs(cfg, n=4, max_tokens=10, seed=5):
+        srv.submit(r)
+    resps = srv.run()
+    assert sorted(r.uid for r in resps) == list(range(4))
+    for r in resps:
+        assert len(r.tokens) == 10
+    # a random drafter keeps tau low -> the short bucket was selected
+    assert srv._k_bucket == srv._k_short
+
+
+def test_adaptive_k_requires_adaptive_chain(server_setup):
+    cfg, tgt, drf, t_params, d_params = server_setup
+    with pytest.raises(ValueError, match="adaptive"):
+        SpecServer(tgt, IndependentDrafter(drf, k=3), t_params, d_params,
+                   EngineConfig(k=3),
+                   ServerConfig(slots=2, adaptive_k=True))

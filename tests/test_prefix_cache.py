@@ -78,6 +78,53 @@ def test_sharded_pool_refcount_and_lru_stay_shard_local():
     assert pool.available(0) == pool.available(1) == 7
 
 
+def test_pool_cached_size_cap_evicts_oldest_first():
+    """max_cached bounds the parked LRU: insertion past the cap reclaims
+    oldest-first (to the free list, index notified), never live blocks."""
+    pool = BlockPool(12, max_cached=2)
+    evicted = []
+    pool.retain_cb = lambda b: True
+    pool.evict_cb = evicted.append
+    a = pool.alloc(4)
+    pool.free(a)                          # parks a[0..3]; cap forces 2 out
+    assert pool.n_cached == 2
+    assert evicted == a[:2]               # oldest (first-freed) went first
+    assert pool.available == 11           # reclaimed blocks are free again
+    got = pool.alloc(11)                  # the survivors still evict on
+    assert sorted(got) == list(range(1, 12))   # allocation pressure
+    assert sorted(evicted) == sorted(a)
+
+
+def test_pool_cached_ttl_expires_unused_blocks():
+    """ttl_s reclaims parked blocks that sat unused too long; the sweep
+    runs inside alloc() so no extra host hook is needed."""
+    t = [0.0]
+    pool = BlockPool(9, ttl_s=10.0, time_fn=lambda: t[0])
+    evicted = []
+    pool.retain_cb = lambda b: True
+    pool.evict_cb = evicted.append
+    a = pool.alloc(3)
+    pool.free(a)                          # parked at t=0
+    t[0] = 5.0
+    assert pool.sweep_expired() == 0      # young: survives
+    assert pool.n_cached == 3
+    t[0] = 11.0
+    got = pool.alloc(1)                   # alloc sweeps the expired first
+    assert pool.n_cached == 0 and sorted(evicted) == sorted(a)
+    pool.free(got)
+    assert pool.available == 8
+
+
+def test_sharded_pool_caps_split_per_shard():
+    pool = ShardedBlockPool(16, n_shards=2, max_cached=2)
+    pool.retain_cb = lambda b: True
+    a = pool.alloc(3, shard=0)
+    b = pool.alloc(3, shard=1)
+    pool.free(a + b)
+    # global cap of 2 splits to 1 per shard (ceil), enforced shard-locally
+    assert pool.n_cached(0) == 1 and pool.n_cached(1) == 1
+
+
 # ---------------------------------------------------------------------------
 # PrefixCache index (host side)
 # ---------------------------------------------------------------------------
@@ -152,7 +199,7 @@ def setup():
 
 
 def _server(setup, prefix="on", *, slots=4, pool_blocks=0, max_prompt=48,
-            max_len=96, k=3):
+            max_len=96, k=3, **extra):
     cfg, tgt, drf, t_params, d_params = setup
     return SpecServer(
         tgt, IndependentDrafter(drf, k=k, temperature=0.0),
@@ -160,7 +207,7 @@ def _server(setup, prefix="on", *, slots=4, pool_blocks=0, max_prompt=48,
         EngineConfig(k=k, rule="strict", mode="greedy", temperature=0.0),
         ServerConfig(slots=slots, max_len=max_len, max_prompt_len=max_prompt,
                      cache="paged", block_size=BS, pool_blocks=pool_blocks,
-                     prefix_cache=prefix))
+                     prefix_cache=prefix, **extra))
 
 
 def _serve(server, reqs):
@@ -262,6 +309,23 @@ def test_pool_leak_free_after_harvest_and_eviction(setup):
     assert srv.prefix.n_indexed == 0
     assert pool.available == pool.n_blocks - 1
     assert not pool._ref                              # zero live references
+
+
+def test_prefix_cache_max_blocks_bounds_parked_lru(setup):
+    """Serving with a parked-LRU cap: outputs stay cold-identical, the
+    pool never parks more than the cap, and the index never disagrees
+    with the pool about what is still cached."""
+    cfg = setup[0]
+    reqs = _reqs(cfg)
+    cold = _serve(_server(setup, "off"), reqs)
+    srv = _server(setup, "on", prefix_cache_max_blocks=2)
+    warm = _serve(srv, reqs)
+    for uid in cold:
+        np.testing.assert_array_equal(warm[uid], cold[uid],
+                                      err_msg=f"uid {uid}")
+    assert srv.pool.n_cached <= 2
+    assert srv.prefix.n_indexed == srv.pool.n_cached
+    assert srv.prefix.stats.evictions > 0      # the cap actually bit
 
 
 def test_prefix_flops_and_concurrency_acceptance(setup):

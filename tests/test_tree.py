@@ -39,7 +39,7 @@ def test_verify_tree_sibling_rescue():
     # sibling 7's successor: top1 = 3
     sib1 = 2
     logits[0, sib1, 3] = 5.0
-    out, n_commit, n_accept, n_rel = verify_tree(
+    out, n_commit, n_accept, n_rel, _margin = verify_tree(
         tpl, node_tokens, jnp.asarray(logits), rule="strict", mode="greedy",
         theta=0.9, temperature=0.0, key=jax.random.PRNGKey(0))
     assert int(n_accept[0]) == 1          # the rescued sibling
