@@ -646,6 +646,99 @@ def quantized_pool(target, t_params, draft, d_params, *, kv_dtype, k=3):
 
 
 # ---------------------------------------------------------------------------
+# Multi-arch paged smoke: every attention family through the block pool
+# ---------------------------------------------------------------------------
+
+def multi_arch_paged(*, k=3):
+    """Paged serving across attention families: a hybrid target (attention
+    sub-cache paged, recurrent leaves dense in the carry) and a
+    sliding-window target (window-bounded ring of blocks, wrapping), the
+    latter also through an int8 pool.  Each case asserts token parity with
+    the offline ``DecodeSession.generate`` reference for its own pool
+    dtype (the full 10-config matrix lives in tests/test_paged_archs.py;
+    this leg keeps tok/s and per-slot block counts on the perf
+    trajectory).  Returns CSV rows + the ``multi_arch`` summary."""
+    from repro.configs import get_smoke
+    from repro.core.session import DecodeSession
+    from repro.models.paging import PagedCacheConfig
+
+    bs = 4
+    win_cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32",
+                                  sliding_window=8)
+    cases = [
+        ("hybrid", dataclasses.replace(get_smoke("zamba2-2.7b"),
+                                       dtype="float32"), "bf16"),
+        ("sliding_window", win_cfg, "bf16"),
+        ("sliding_window_int8", win_cfg, "int8"),
+    ]
+    n_req, prompt_len, max_tokens = 4, 6, 8
+    rows, summary = [], {}
+    print(f"\nmulti-arch paged smoke (block {bs}):")
+    for name, cfg, kv in cases:
+        target = build_model(cfg)
+        d_cfg = ModelConfig(name="d", family="dense", n_layers=1,
+                            d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                            vocab_size=cfg.vocab_size, dtype="float32")
+        draft = build_model(d_cfg)
+        t_params = target.init(jax.random.PRNGKey(1))
+        d_params = draft.init(jax.random.PRNGKey(2))
+        ecfg = EngineConfig(k=k, rule="mars", mode="greedy",
+                            temperature=0.0)
+        rng = np.random.default_rng(5)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(3, cfg.vocab_size,
+                                            prompt_len).astype(np.int32),
+                        params=SamplingParams(max_tokens=max_tokens,
+                                              temperature=0.0))
+                for i in range(n_req)]
+        server = SpecServer(
+            target, IndependentDrafter(draft, k=k, temperature=0.0),
+            t_params, d_params, ecfg,
+            ServerConfig(slots=2, max_len=64, max_prompt_len=8,
+                         cache="paged", block_size=bs, kv_dtype=kv))
+        for r in reqs:
+            server.submit(dataclasses.replace(r))
+        t0 = time.time()
+        resps = server.run()
+        wall = time.time() - t0
+        toks = sum(len(r.tokens) for r in resps)
+
+        # parity against the offline reference through the SAME pool dtype
+        session = DecodeSession(target,
+                                IndependentDrafter(draft, k=k,
+                                                   temperature=0.0), ecfg)
+        paged_ref = (None if kv == "bf16"
+                     else PagedCacheConfig(bs, kv_dtype=kv))
+        for r in resps:
+            req = reqs[r.uid]
+            o = session.generate(t_params, d_params,
+                                 jnp.asarray(req.prompt)[None],
+                                 jnp.asarray([prompt_len], jnp.int32),
+                                 max_tokens, jax.random.PRNGKey(0),
+                                 paged=paged_ref)
+            ref = np.asarray(o["tokens"])[0, prompt_len:
+                                          prompt_len + max_tokens]
+            np.testing.assert_array_equal(
+                np.asarray(r.tokens), ref,
+                err_msg=f"multi-arch {name} req {r.uid} != offline")
+        if cfg.sliding_window:
+            ring = min(64, cfg.sliding_window)
+            assert server.max_blocks == -(-ring // bs), server.max_blocks
+        assert server.pool.available == server.pool.n_blocks - 1
+        print(f"  {name:19s} ({cfg.name}, kv={kv}): {toks / wall:8.1f} "
+              f"tok/s, {server.max_blocks} blocks/slot, outputs=offline")
+        rows.append((f"serving/multiarch_{name}", 0.0,
+                     f"tok_s={toks / wall:.1f};arch={cfg.name};kv={kv};"
+                     f"blocks_per_slot={server.max_blocks}"))
+        summary[name] = {"arch": cfg.name, "kv_dtype": kv,
+                         "tok_s": round(toks / wall, 1),
+                         "blocks_per_slot": int(server.max_blocks),
+                         "sliding_window": int(cfg.sliding_window or 0),
+                         "outputs": "offline_match"}
+    return rows, summary
+
+
+# ---------------------------------------------------------------------------
 # Adaptive verification under bursty load: fixed-theta sweep vs controller
 # ---------------------------------------------------------------------------
 
@@ -915,6 +1008,12 @@ def main():
                     help="add a mesh-sweep section: tok/s of the "
                          "(data, model)-partitioned server vs one device "
                          "(host devices are forced automatically)")
+    ap.add_argument("--multi-arch", action="store_true",
+                    help="paged only: add a multi-arch section serving a "
+                         "hybrid and a sliding-window config through the "
+                         "block pool (int8 included), asserting offline "
+                         "parity and recording tok/s + blocks/slot under "
+                         "'multi_arch' in BENCH_serving.json")
     ap.add_argument("--theta-mode", default="fixed",
                     choices=["fixed", "adaptive"],
                     help="adaptive: add a bursty open-loop section "
@@ -1015,6 +1114,12 @@ def main():
                                           cache=args.cache,
                                           kv_dtype=args.kv_dtype, k=args.k)
         rows += m_rows
+    multiarch_summary = None
+    if args.multi_arch:
+        if args.cache != "paged":
+            raise SystemExit("--multi-arch requires --cache paged")
+        ma_rows, multiarch_summary = multi_arch_paged(k=min(args.k, 3))
+        rows += ma_rows
     adaptive_summary = None
     if args.theta_mode == "adaptive":
         a_rows, adaptive_summary = adaptive_serving(target, t_params, draft,
@@ -1046,6 +1151,7 @@ def main():
         "prefix": prefix_summary,
         "quantized": quant_summary,
         "mesh": mesh_summary,
+        "multi_arch": multiarch_summary,
         "adaptive": adaptive_summary,
     }
     # merge, don't clobber: sections another invocation produced (e.g. the

@@ -561,9 +561,15 @@ class DecodeSession:
         b, s = prompt.shape
         l_buf = s + max_new + self.topology.buffer_margin
         block_rows = None
-        if paged is not None:
+        if paged is not None and self.target.cfg.family != "ssm":
+            # pure-ssm caches carry no pool/table leaves (zero-block
+            # layout), so the static assignment below would be meaningless
+            # there; everyone else gets a dense-equivalent table, bounded
+            # by the sliding window when the config has one (the table is
+            # then a ring of blocks that wraps).
             from repro.models.paging import full_tables
-            mb = paged.max_blocks(l_buf)
+            mb = paged.table_blocks(l_buf,
+                                    self.target.cfg.sliding_window or 0)
             paged = dataclasses.replace(paged, n_blocks=1 + b * mb)
             block_rows = full_tables(b, mb)
         state = self.init_state(t_params, d_params, b, l_buf, key=key,

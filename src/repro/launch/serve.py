@@ -128,8 +128,10 @@ def main():
         raise SystemExit("--prefix-cache on requires --cache paged "
                          "(prefix reuse shares physical KV blocks)")
     if args.cache == "paged":
-        # launcher-level fail-fast: name the arch and the sub-cache that
-        # cannot page instead of raising deep inside Model.init_cache
+        # launcher-level fail-fast, kept for any future family the paged
+        # layouts don't cover (every current family pages — hybrids page
+        # their attention sub-cache, sliding-window layers wrap a ring of
+        # blocks, pure-ssm routes through with a zero-block table)
         from repro.models.paging import paged_unsupported_reason
         reason = paged_unsupported_reason(cfg)
         if reason is not None:
@@ -137,6 +139,10 @@ def main():
                 f"--cache paged is incompatible with --arch {args.arch}: "
                 f"{reason}; use --cache dense")
     if args.kv_dtype != "bf16":
+        if cfg.family == "ssm":
+            raise SystemExit(f"--kv-dtype {args.kv_dtype} is unavailable "
+                             f"for --arch {args.arch}: a pure-ssm target "
+                             "has no attention KV pool to quantize")
         if args.cache != "paged":
             raise SystemExit(f"--kv-dtype {args.kv_dtype} requires --cache "
                              "paged (quantized storage lives in the block "

@@ -127,7 +127,11 @@ def _cache_spec_for_path(path: str, ndim: int, rules) -> P:
     # paged layout: the pool is partitioned under BOTH serving axes —
     # physical blocks across "data" (each data shard's slots reference only
     # the block range its per-shard free list owns), KV heads across
-    # "model"; tables and logical positions are slot-indexed like the carry
+    # "model"; tables and logical positions are slot-indexed like the carry.
+    # The same leaf names cover every paged family: a hybrid's attention
+    # sub-cache and a sliding-window ring-of-blocks table differ only in
+    # width, and pure-ssm caches simply have no pool/table leaves (their
+    # recurrent leaves match the mamba/mlstm/slstm patterns below)
     if path.endswith("k_pool") or path.endswith("v_pool"):
         return pad([rules.get("pool_blocks"), None, kvh, None])
     # quantized pool: the scale pool shards exactly like its parent —

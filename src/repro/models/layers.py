@@ -322,7 +322,13 @@ def make_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                          *, n_layers: Optional[int] = None) -> Params:
     """Ring-buffer KV cache.  If ``cfg.sliding_window`` > 0 the buffer holds
     only ``window`` slots; absolute positions are tracked in ``pos`` so a
-    single masking path serves both full and windowed attention."""
+    single masking path serves both full and windowed attention.
+
+    The paged layout mirrors this exactly: its windowed ring is a ring *of
+    blocks* wrapping at the same ``min(max_len, window)`` length (encoded
+    in its pos-row width), so speculative writes clobber the same
+    in-window entries in both layouts and rollback stays an index rewind —
+    see ``repro.models.paging.make_paged_attention_cache``."""
     length = max_len
     if cfg.sliding_window:
         length = min(max_len, cfg.sliding_window)

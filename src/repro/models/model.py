@@ -327,10 +327,13 @@ class Model:
         the dense per-slot KV ring for the shared block pool + per-slot
         block tables.  Only attention KV pages: recurrent state (mamba /
         xlstm) is O(1) per slot, and the whisper cross-KV is a fixed,
-        always-full encoder block — both stay dense.  Pure-ssm targets have
-        no KV to page, so ``paged`` is an error there.  ``paged_shards``
-        (the serving mesh's data-axis size) gives each slot a shard-local
-        trash block so masked paged writes never cross shards."""
+        always-full encoder block — both stay dense.  Pure-ssm targets
+        accept ``paged`` as a no-op (they have no attention KV, so the
+        cache carries no pool/table leaves at all — the zero-block
+        layout); sliding-window targets get a window-bounded ring of
+        blocks.  ``paged_shards`` (the serving mesh's data-axis size)
+        gives each slot a shard-local trash block so masked paged writes
+        never cross shards."""
         cfg = self.cfg
         fam = cfg.family
 
@@ -343,13 +346,6 @@ class Model:
             return L.make_attention_cache(cfg, batch, max_len,
                                           n_layers=n_layers)
 
-        if paged is not None:
-            from repro.models.paging import paged_unsupported_reason
-            reason = paged_unsupported_reason(cfg)
-            if reason is not None:
-                raise ValueError(
-                    f"paged KV cache does not support {cfg.name!r}: "
-                    f"{reason}")
         cache: Params = {"index": jnp.zeros((batch,), jnp.int32)}
         if fam in ("dense", "moe", "vlm"):
             cache["layers"] = attn_cache(cfg.n_layers)

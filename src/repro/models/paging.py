@@ -62,8 +62,27 @@ The cache therefore carries a per-slot ``trash`` block id
 partition — block 0 on one device), and ``paged_cache_write`` routes masked
 writes there.  A table entry equal to the slot's trash id means *unmapped*.
 
-``cfg.sliding_window`` targets keep the dense ring (the window already
-bounds their per-slot memory); requesting a paged cache for one is an error.
+Per-family layouts
+------------------
+Every architecture family routes through the paged server; what differs is
+which leaves page:
+
+* **attention families** (dense / moe / vlm / audio) page their KV exactly
+  as above; audio's cross-attention K/V stays dense (encoder-length, written
+  once at admission — nothing grows).
+* **``cfg.sliding_window``** layers get a *ring of blocks*: the table is
+  sized to the window, not the context (``PagedCacheConfig.table_blocks``),
+  and the write path's ``p % L`` wraps it — the same modulo that implements
+  the dense ring.  Because stored positions stay absolute and attention
+  masks by position, rollback remains an index rewind even across the wrap
+  (a *wrapped rewind*): rewound entries are invisible to queries either by
+  position or by having been overwritten, exactly the dense ring's rules.
+* **hybrid** models page only their attention sub-cache (``cache["attn"]``);
+  the recurrent leaves (conv/ssm state, O(1) per slot) stay dense in the
+  carry.
+* **pure-ssm** models have no attention KV at all: they route through the
+  paged server with a zero-block table — no pool, no table leaves, and
+  admission gated on slots only.
 
 Quantized pool (``PagedCacheConfig.kv_dtype``)
 ----------------------------------------------
@@ -198,20 +217,36 @@ class PagedCacheConfig:
         """Table width: logical blocks needed for a ``max_len`` slot."""
         return -(-max_len // self.block_size)
 
+    def ring_len(self, max_len: int, window: int = 0) -> int:
+        """Logical ring length of one slot: ``max_len``, bounded by the
+        sliding window when one is set — a windowed layer never needs to
+        keep more than ``window`` live entries, so its table wraps."""
+        return min(max_len, window) if window > 0 else max_len
+
+    def table_blocks(self, max_len: int, window: int = 0) -> int:
+        """Window-aware table width: logical blocks backing one slot's
+        ring.  Equals :meth:`max_blocks` when ``window`` is 0; a windowed
+        config's table (and so its per-slot pool footprint) is bounded by
+        the window, not the context length."""
+        return -(-self.ring_len(max_len, window) // self.block_size)
+
     def blocks_for(self, n_tokens: int) -> int:
         """Physical blocks a request writing ``n_tokens`` KV entries needs."""
         return -(-max(n_tokens, 1) // self.block_size)
 
     def request_blocks(self, prompt_len: int, max_tokens: int,
-                       margin: int, max_len: int) -> int:
+                       margin: int, max_len: int, window: int = 0) -> int:
         """Worst-case physical blocks one request reserves at admission:
         prompt + its (buffer-clamped) budget + the topology's speculative
-        overhang ``margin`` (``buffer_margin``).  Reserving the worst case
-        up front is what lets mid-flight rollback stay allocation-free."""
+        overhang ``margin`` (``buffer_margin``), capped at the slot's ring
+        size (a windowed ring wraps, so a request can never hold more than
+        its table width).  Reserving the worst case up front is what lets
+        mid-flight rollback stay allocation-free."""
+        mb = self.table_blocks(max_len, window)
         tokens = min(
             prompt_len + min(max_tokens, max_len - prompt_len) + margin,
-            self.max_blocks(max_len) * self.block_size)
-        return min(self.blocks_for(tokens), self.max_blocks(max_len))
+            mb * self.block_size)
+        return min(self.blocks_for(tokens), mb)
 
 
 class BlockPool:
@@ -480,16 +515,14 @@ def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
     """Why ``cfg`` cannot take a paged KV cache, or None when it can.
 
     The serving layer (``ServerConfig(cache="paged")`` validation) and the
-    launchers call this *before* any cache is built so the user gets one
-    actionable error naming the architecture and the offending sub-cache,
-    instead of a raise from deep inside ``Model.init_cache``."""
-    if cfg.family == "ssm":
-        return ("its recurrent state (mlstm/slstm sub-caches) is O(1) per "
-                "slot — there is no attention KV to page")
-    if cfg.sliding_window:
-        return (f"its sliding-window attention sub-cache (window="
-                f"{cfg.sliding_window}) already bounds per-slot memory "
-                "with the dense ring")
+    launchers call this *before* any cache is built so an unsupported
+    config would fail with one actionable error instead of a raise from
+    deep inside ``Model.init_cache``.  Every family currently supports the
+    paged server: attention families page their KV, sliding-window layers
+    get a window-bounded ring of blocks, hybrids page only their attention
+    sub-cache, and pure-ssm configs route through with a zero-block table
+    (see the per-family layouts in the module docstring)."""
+    del cfg
     return None
 
 
@@ -558,9 +591,14 @@ def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
 
         k_pool / v_pool   : (n_layers, n_blocks, block_size, Hkv, D)
         k_scale / v_scale : (n_layers, n_blocks, block_size, Hkv)  quantized
-        pos               : (n_layers, B, L + TRASH_SLOTS) logical, per slot
+        pos               : (n_layers, B, ring + TRASH_SLOTS) logical/slot
         table             : (n_layers, B, max_blocks)      physical block ids
         trash             : (n_layers, B)                  per-slot trash id
+
+    ``ring`` (= ``PagedCacheConfig.ring_len``) is ``max_len``, bounded by
+    ``cfg.sliding_window`` when one is set; the ``pos`` width encodes it so
+    the write path wraps at EXACTLY the dense ring's length (bit-identical
+    masking even when the window does not divide the block size).
 
     ``table`` and ``trash`` are logically layer-independent (the host writes
     the same rows to every layer); they carry the layer dim only so the
@@ -569,16 +607,16 @@ def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
     persist.  ``data_shards`` > 1 gives every slot the reserved first block
     of its own pool partition as trash (shard-local masked writes).
 
+    ``max_blocks`` is window-aware: a ``cfg.sliding_window`` config's table
+    covers ``min(max_len, window)`` tokens and wraps (a ring of blocks),
+    so its pool footprint is bounded by the window, not the context.
+
     ``kv_dtype`` overrides ``paged.kv_dtype``; quantized modes store the
     pools in the low-bit dtype and add the parallel scale pool (same
     physical block indexing, :data:`SCALE_DTYPE` elements).
     """
     from repro.models.layers import TRASH_SLOTS, _INVALID_POS
 
-    reason = paged_unsupported_reason(cfg)
-    if reason is not None:
-        raise ValueError(
-            f"paged KV cache does not support {cfg.name!r}: {reason}")
     if kv_dtype is not None:
         paged = dataclasses.replace(paged, kv_dtype=kv_dtype)
     reason = kv_dtype_unsupported_reason(paged.kv_dtype)
@@ -586,11 +624,20 @@ def make_paged_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
         raise ValueError(f"paged KV cache for {cfg.name!r} cannot use "
                          f"kv_dtype={paged.kv_dtype!r}: {reason}")
     bs = paged.block_size
-    mb = paged.max_blocks(max_len)
+    # A sliding-window config's table is a ring of blocks bounded by the
+    # window: paged_cache_write's `p % ring` wraps it, and positional
+    # masking keeps overwritten out-of-window entries invisible — the same
+    # rules the dense ring lives by, so rollback stays a (wrapped) index
+    # rewind.  The ring length rides in the pos width (ring + TRASH_SLOTS)
+    # so the wrap point matches the dense ring exactly, block-aligned or
+    # not.
+    window = cfg.sliding_window or 0
+    ring = paged.ring_len(max_len, window)
+    mb = paged.table_blocks(max_len, window)
     trash = slot_trash_blocks(batch, paged.n_blocks, data_shards)
     shape_pool = (paged.n_blocks, bs, cfg.n_kv_heads, cfg.head_dim)
     shape_scale = (paged.n_blocks, bs, cfg.n_kv_heads)
-    shape_pos = (batch, mb * bs + TRASH_SLOTS)
+    shape_pos = (batch, ring + TRASH_SLOTS)
     table = jnp.broadcast_to(trash[:, None], (batch, mb))
     if n_layers is not None:
         shape_pool = (n_layers,) + shape_pool
@@ -720,11 +767,18 @@ def paged_cache_write(cache: Params, new_k, new_v, positions) -> Params:
     b, t = positions.shape
     bs = k_pool.shape[-3]
     mb = table.shape[-1]
-    l = mb * bs
 
     trash = cache.get("trash")
     if trash is None:                       # hand-built test caches
         trash = jnp.full((b,), TRASH_BLOCK, jnp.int32)
+        l = mb * bs                         # pre-trash schema: block-aligned
+    else:
+        # the pos width encodes the slot's exact logical ring length
+        # (ring + TRASH_SLOTS): max_len, or the sliding window when the
+        # config has one — wrapping here is what makes the windowed table
+        # a ring of blocks, and matching the dense ring's wrap point
+        # exactly is what keeps the two layouts token-identical
+        l = pos_arr.shape[-1] - TRASH_SLOTS
     logical = jnp.where(positions >= 0, positions % l, 0)
     blk = logical // bs
     b_idx = jnp.arange(b)[:, None]
@@ -789,7 +843,18 @@ def paged_blockwise_attention(q: jnp.ndarray, cache: Params,
     # unmapped entry
     gb = max(1, min(chunk // bs, mb))
     n_steps = -(-mb // gb)
-    pos_l = pos_arr[:, :mb * bs]
+    # pool slot (blk, off) reads its position from pos[blk*bs + off].  A
+    # non-block-aligned ring (windowed, window % bs != 0) leaves the last
+    # block's tail slots unwritten; their pos indices land in the trash
+    # region (always _INVALID_POS -> masked) or past the row (padded
+    # invalid), so they can never contribute.
+    need = mb * bs
+    if pos_arr.shape[-1] >= need:
+        pos_l = pos_arr[:, :need]
+    else:
+        pos_l = jnp.pad(pos_arr, ((0, 0),
+                                  (0, need - pos_arr.shape[-1])),
+                        constant_values=_INVALID_POS)
     if n_steps * gb != mb:
         pad = n_steps * gb - mb
         table = jnp.pad(table, ((0, 0), (0, pad)))
@@ -837,8 +902,13 @@ def gather_dense_view(cache: Params) -> Params:
         v = dequantize_kv(v, cache["v_scale"][cache["table"]])
     b, mb, bs = k.shape[0], k.shape[1], k.shape[2]
     l = mb * bs
+    pos = cache["pos"]
+    if pos.shape[-1] < l:      # non-block-aligned ring: pad tail invalid
+        from repro.models.layers import _INVALID_POS
+        pos = jnp.pad(pos, ((0, 0), (0, l - pos.shape[-1])),
+                      constant_values=_INVALID_POS)
     return {
         "k": k.reshape(b, l, *k.shape[3:]),
         "v": v.reshape(b, l, *v.shape[3:]),
-        "pos": cache["pos"][:, :l],
+        "pos": pos[:, :l],
     }

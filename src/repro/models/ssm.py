@@ -15,6 +15,15 @@ Numerics note (DESIGN.md §7): the mLSTM input gate is stabilised by a running
 max carried across chunks at prefill and frozen during decode, a mild
 simplification of the exact xLSTM m-state that keeps the chunked form exact
 w.r.t. its own definition.
+
+Caching note: recurrent state (conv tap, SSD/mLSTM/sLSTM state) is a
+FIXED-SIZE per-slot carry — it never grows with sequence length, so the
+paged KV layout has nothing to page here.  Under ``--cache paged`` these
+leaves stay dense exactly as built below: a hybrid model pages only its
+attention sub-cache around them, and a pure-ssm model serves on the
+zero-block layout (no pool, admission gated on slots only) — see
+``repro.models.paging`` and docs/ARCHITECTURE.md "Paged layouts per
+attention family".
 """
 from __future__ import annotations
 

@@ -118,13 +118,19 @@ class PrefixCache:
     """
 
     def __init__(self, pool, block_size: int, *, n_shards: int = 1,
-                 min_match_blocks: int = 1):
+                 min_match_blocks: int = 1, kv_dtype: str = "bf16"):
         if min_match_blocks < 1:
             raise ValueError("min_match_blocks must be >= 1")
         self.pool = pool
         self.block_size = block_size
         self.n_shards = n_shards
         self.min_match_blocks = min_match_blocks
+        # the chain root folds the pool's storage dtype in, so replicas
+        # serving the same prompts at different kv_dtypes can never alias
+        # index entries: an int8 block's bytes are NOT a bf16 block's bytes,
+        # and a key must name the content it maps to
+        self.kv_dtype = kv_dtype
+        self._root = hashlib.sha1(_ROOT + kv_dtype.encode()).digest()
         # per-shard chain-key -> physical block
         self._index: List[Dict[bytes, int]] = [{} for _ in range(n_shards)]
         # per-shard parent-key -> child blocks (partial tail candidates)
@@ -178,7 +184,7 @@ class PrefixCache:
         usable = min(usable, len(tokens))
 
         blocks: List[int] = []
-        parent = _ROOT
+        parent = self._root
         j = 0
         while (j + 1) * bs <= usable:
             key = _chain_key(parent, tokens[j * bs:(j + 1) * bs])
@@ -241,7 +247,7 @@ class PrefixCache:
         bs = self.block_size
         tokens = np.asarray(tokens)
         n_full = min(len(tokens) // bs, len(table_blocks))
-        parent = _ROOT
+        parent = self._root
         published = 0
         for j in range(n_full):
             btoks = np.asarray(tokens[j * bs:(j + 1) * bs], np.int32)

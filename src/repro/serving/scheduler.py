@@ -248,9 +248,12 @@ class SpecServer:
             raise ValueError(f"unknown prefix_cache mode "
                              f"{cfg.prefix_cache!r} (off|on)")
         if cfg.cache == "paged":
-            # fail fast, BEFORE any device state is built: name the arch
-            # and the sub-cache that cannot page (the deep init_cache raise
-            # would otherwise surface mid-admission)
+            # fail fast, BEFORE any device state is built, should a future
+            # family ever be unsupported (every current family pages: see
+            # the per-family layouts in repro.models.paging — hybrids page
+            # their attention sub-cache, sliding-window layers get a
+            # window-bounded ring of blocks, pure-ssm routes through with
+            # a zero-block table)
             reason = paged_unsupported_reason(target.cfg)
             if reason is not None:
                 raise ValueError(
@@ -270,6 +273,12 @@ class SpecServer:
                 f"cache='paged': quantized storage lives in the shared "
                 f"block pool's scale-pool layout, which the dense per-slot "
                 f"ring does not have")
+        if cfg.kv_dtype != "bf16" and target.cfg.family == "ssm":
+            raise ValueError(
+                f"ServerConfig(kv_dtype={cfg.kv_dtype!r}) cannot serve "
+                f"arch {target.cfg.name!r}: a pure-ssm target has no "
+                f"attention KV pool to quantize (its recurrent state "
+                f"stays dense in the carry)")
         if cfg.prefix_cache == "on":
             if cfg.cache != "paged":
                 raise ValueError(
@@ -281,6 +290,13 @@ class SpecServer:
                     f"prefix_cache='on' is incompatible with arch "
                     f"{target.cfg.name!r}: its recurrent state cannot be "
                     "reconstructed from shared KV blocks")
+            if target.cfg.sliding_window:
+                raise ValueError(
+                    f"prefix_cache='on' is incompatible with arch "
+                    f"{target.cfg.name!r}: its sliding-window ring wraps "
+                    f"(window={target.cfg.sliding_window}), so a block's "
+                    "content is not a pure function of the token prefix — "
+                    "published entries could alias across requests")
 
         if cfg.theta_mode not in ("fixed", "adaptive"):
             raise ValueError(f"unknown theta_mode {cfg.theta_mode!r} "
@@ -317,9 +333,26 @@ class SpecServer:
             self.rules = serving_rules()
         self._slots_per_shard = b // self.data_shards
 
-        if cfg.cache == "paged":
-            n_blocks = (cfg.pool_blocks or
-                        1 + b * -(-cfg.max_len // cfg.block_size))
+        if cfg.cache == "paged" and target.cfg.family == "ssm":
+            # zero-block layout: a pure-ssm cache carries no pool/table
+            # leaves, so the paged server keeps the host pool empty and
+            # gates admission on free slots only — requests never wait on
+            # (nonexistent) pool headroom.  The dense-branch internals
+            # below are exactly the right host state for that.
+            self.paged = None
+            self.max_blocks = 1          # dummy block_rows width
+            self.pool = None
+            self.slot_blocks: List[List[int]] = [[] for _ in range(b)]
+            self.trash_ids = np.zeros((b,), np.int32)
+            self.prefix = None
+        elif cfg.cache == "paged":
+            # sliding-window configs wrap their tables modulo the window,
+            # so both the per-slot table width and the default pool size
+            # are bounded by the window, not the context length
+            window = target.cfg.sliding_window or 0
+            ring_blocks = PagedCacheConfig(
+                block_size=cfg.block_size).table_blocks(cfg.max_len, window)
+            n_blocks = cfg.pool_blocks or 1 + b * ring_blocks
             if not cfg.pool_blocks and cfg.kv_dtype != "bf16":
                 # size in BYTES for honest equal-HBM accounting: the
                 # dense-equivalent budget above, refitted at the quantized
@@ -335,7 +368,7 @@ class SpecServer:
             self.paged = PagedCacheConfig(block_size=cfg.block_size,
                                           n_blocks=n_blocks,
                                           kv_dtype=cfg.kv_dtype)
-            self.max_blocks = self.paged.max_blocks(cfg.max_len)
+            self.max_blocks = self.paged.table_blocks(cfg.max_len, window)
             # physical blocks currently owned by each slot (host ledger;
             # the device only ever sees them through the table rows).  On a
             # mesh the free list is per-data-shard so a slot's block ids
@@ -353,7 +386,8 @@ class SpecServer:
                 slot_trash_blocks(b, n_blocks, self.data_shards))
             self.prefix = (PrefixCache(self.pool, cfg.block_size,
                                        n_shards=self.data_shards,
-                                       min_match_blocks=cfg.min_match_blocks)
+                                       min_match_blocks=cfg.min_match_blocks,
+                                       kv_dtype=cfg.kv_dtype)
                            if cfg.prefix_cache == "on" else None)
         else:
             self.paged = None
@@ -772,7 +806,7 @@ class SpecServer:
         within what admission reserved."""
         need = self.paged.request_blocks(
             plen, max_tokens, self.session.topology.buffer_margin,
-            self.cfg.max_len)
+            self.cfg.max_len, self.target.cfg.sliding_window or 0)
         cap = (self.pool.shard_capacity
                if isinstance(self.pool, ShardedBlockPool)
                else self.pool.n_blocks - 1)

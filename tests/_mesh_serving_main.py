@@ -12,7 +12,10 @@ Asserts, for dense AND paged caches (prefix cache off and on) on real
   output to single-device offline ``DecodeSession.generate`` per request
   — including an int8-quantized paged case, whose offline reference
   decodes through the same quantized pool (scale pools shard like their
-  parent pools: blocks on ``data``, KV heads on ``model``);
+  parent pools: blocks on ``data``, KV heads on ``model``), a hybrid
+  target (attention sub-cache paged; mamba leaves stay dense, sharded
+  with the carry), and a sliding-window target whose 2-block ring wraps
+  repeatedly under the mesh;
 * ``step()`` performs zero device→host transfers under the mesh (the
   PR 2 sync-free contract is mesh-invariant) — guarded by patching
   ``jax.device_get``, checking the server's transfer counter, and running
@@ -42,10 +45,12 @@ from repro.core.session import DecodeSession
 from repro.models import build_model
 from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
 
+K = 3
+ECFG = EngineConfig(k=K, rule="mars", mode="greedy", temperature=0.0)
 
-def main():
-    assert len(jax.devices()) >= 8, jax.devices()
-    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+
+def make_setup(cfg):
+    """Target + tiny drafter + params + offline session for one config."""
     tgt = build_model(cfg)
     d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
                         n_heads=2, n_kv_heads=2, d_ff=128,
@@ -53,58 +58,133 @@ def main():
     drf = build_model(d_cfg)
     t_params = tgt.init(jax.random.PRNGKey(1))
     d_params = drf.init(jax.random.PRNGKey(2))
-    k = 3
-    ecfg = EngineConfig(k=k, rule="mars", mode="greedy", temperature=0.0)
+    session = DecodeSession(tgt, IndependentDrafter(drf, k=K,
+                                                    temperature=0.0), ECFG)
+    return tgt, drf, t_params, d_params, session
 
-    rng = np.random.default_rng(17)
+
+def make_requests(cfg, seed=17, n=6, shared_prefix=False):
+    rng = np.random.default_rng(seed)
     reqs = []
-    for i in range(6):
-        plen = int(rng.integers(4, 13))
+    shared = (rng.integers(3, cfg.vocab_size, 8).astype(np.int32)
+              if shared_prefix else None)
+    for i in range(n):
+        if shared_prefix:
+            tail = rng.integers(3, cfg.vocab_size, 4).astype(np.int32)
+            prompt = np.concatenate([shared, tail])
+        else:
+            plen = int(rng.integers(4, 13))
+            prompt = rng.integers(3, cfg.vocab_size, plen).astype(np.int32)
         reqs.append(Request(
-            uid=i,
-            prompt=rng.integers(3, cfg.vocab_size, plen).astype(np.int32),
+            uid=i, prompt=prompt,
             params=SamplingParams(max_tokens=[3, 7, 13][i % 3],
                                   temperature=0.0)))
-    # prefix-cache case: 6 requests sharing one 8-token system prefix, so
-    # later admissions map published blocks of earlier ones (per shard)
-    shared = rng.integers(3, cfg.vocab_size, 8).astype(np.int32)
-    shared_reqs = []
-    for i in range(6):
-        tail = rng.integers(3, cfg.vocab_size, 4).astype(np.int32)
-        shared_reqs.append(Request(
-            uid=i, prompt=np.concatenate([shared, tail]),
-            params=SamplingParams(max_tokens=[3, 7, 13][i % 3],
-                                  temperature=0.0)))
+    return reqs
 
-    # single-device offline reference, fixed prompt width (fewer compiles)
-    session = DecodeSession(tgt, IndependentDrafter(drf, k=k,
-                                                    temperature=0.0), ecfg)
 
-    def offline_ref(case_reqs, paged=None):
-        out = {}
-        for req in case_reqs:
-            plen, mt = len(req.prompt), req.params.max_tokens
-            padded = np.zeros((12,), np.int32)
-            padded[:plen] = req.prompt
-            o = session.generate(t_params, d_params,
-                                 jnp.asarray(padded)[None],
-                                 jnp.asarray([plen], jnp.int32), mt,
-                                 jax.random.PRNGKey(0), paged=paged)
-            out[req.uid] = np.asarray(o["tokens"])[0, plen:plen + mt]
-        return out
+def offline_ref(setup, case_reqs, paged=None):
+    """Single-device offline reference, fixed prompt width (fewer
+    compiles)."""
+    _, _, t_params, d_params, session = setup
+    out = {}
+    for req in case_reqs:
+        plen, mt = len(req.prompt), req.params.max_tokens
+        padded = np.zeros((12,), np.int32)
+        padded[:plen] = req.prompt
+        o = session.generate(t_params, d_params,
+                             jnp.asarray(padded)[None],
+                             jnp.asarray([plen], jnp.int32), mt,
+                             jax.random.PRNGKey(0), paged=paged)
+        out[req.uid] = np.asarray(o["tokens"])[0, plen:plen + mt]
+    return out
 
-    offline = offline_ref(reqs)
-    offline_shared = offline_ref(shared_reqs)
-    # the int8 reference must itself decode through an int8 pool: quantized
-    # serving is token-identical to quantized offline, not to f32 offline
-    from repro.models.paging import PagedCacheConfig
-    offline_int8 = offline_ref(reqs,
-                               paged=PagedCacheConfig(4, kv_dtype="int8"))
 
+def run_case(setup, mesh, cache, prefix, kv, case_reqs, ref, extra,
+             label=""):
+    tgt, drf, t_params, d_params, _ = setup
     real_device_get = jax.device_get
 
     def forbidden(*a, **kw):
         raise AssertionError("device→host transfer inside step() on mesh")
+
+    server = SpecServer(
+        tgt, IndependentDrafter(drf, k=K, temperature=0.0),
+        t_params, d_params, ECFG,
+        ServerConfig(slots=4, max_len=96, max_prompt_len=12,
+                     steps_per_sync=3, cache=cache, mesh=mesh,
+                     prefix_cache=prefix, block_size=4, kv_dtype=kv,
+                     **extra))
+    for r in case_reqs:
+        server.submit(dataclasses.replace(r))
+    for _ in range(10_000):
+        if not server.queue and all(r is None for r in server.slot_req):
+            break
+        server._admit()
+        if server.controller is not None:
+            # exercise the sharded retune entry point directly (the
+            # clamped controller's own updates are no-ops and skip the
+            # dispatch): writing the SAME thetas must preserve parity
+            server.state = server._set_theta(
+                server.state, server.slot_theta.astype(np.float32))
+        if server.pool is not None:
+            # no cross-shard paged traffic: every mapped block (shared
+            # prefix blocks included) and every trash target lives in
+            # the owning shard's pool partition
+            per = server.pool.per_shard
+            for s, blks in enumerate(server.slot_blocks):
+                sh = s // server._slots_per_shard
+                assert server.trash_ids[s] == sh * per, (mesh, cache, s)
+                assert all(sh * per <= blk < (sh + 1) * per
+                           for blk in blks), (mesh, cache, s, blks)
+        syncs_before = server.host_syncs
+        jax.device_get = forbidden
+        try:
+            with jax.transfer_guard_device_to_host("disallow"):
+                server.step()
+        finally:
+            jax.device_get = real_device_get
+        assert server.host_syncs == syncs_before, (mesh, cache)
+        server.sync()
+    resps = {r.uid: r for r in server.run()}
+    assert sorted(resps) == list(range(len(case_reqs))), (mesh, cache)
+    for req in case_reqs:
+        got = np.asarray(resps[req.uid].tokens)
+        np.testing.assert_array_equal(
+            got, ref[req.uid],
+            err_msg=f"mesh={mesh} cache={cache} prefix={prefix} "
+                    f"kv={kv} {label} req {req.uid}: sharded != offline")
+    note = f" [{label}]" if label else ""
+    if prefix == "on":
+        s = server.prefix.summary()
+        assert s["hits"] >= 1, s     # shared blocks actually rode in
+        note += (f", prefix hit rate {s['hit_rate']:.0%} "
+                 f"({s['blocks_shared']} shared mappings)")
+    if server.controller is not None:
+        assert (server.slot_theta == 0.9).all(), server.slot_theta
+        note += ", adaptive(theta clamped)"
+    print(f"  mesh={mesh} cache={cache} prefix={prefix} kv={kv}: "
+          f"token-identical, 0 in-tick syncs "
+          f"({server.host_syncs} at sync points){note}")
+    return server
+
+
+def main():
+    assert len(jax.devices()) >= 8, jax.devices()
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    setup = make_setup(cfg)
+
+    reqs = make_requests(cfg)
+    # prefix-cache case: 6 requests sharing one 8-token system prefix, so
+    # later admissions map published blocks of earlier ones (per shard)
+    shared_reqs = make_requests(cfg, shared_prefix=True)
+
+    offline = offline_ref(setup, reqs)
+    offline_shared = offline_ref(setup, shared_reqs)
+    # the int8 reference must itself decode through an int8 pool: quantized
+    # serving is token-identical to quantized offline, not to f32 offline
+    from repro.models.paging import PagedCacheConfig
+    offline_int8 = offline_ref(setup, reqs,
+                               paged=PagedCacheConfig(4, kv_dtype="int8"))
 
     # the adaptive case pins mesh-invariance of per-slot theta: a clamped
     # controller (theta_min == theta_max == EngineConfig.theta) can never
@@ -120,64 +200,23 @@ def main():
              ((2, 2), "paged", "off", "bf16", reqs, offline, adaptive),
              ((4, 2), "dense", "off", "bf16", reqs, offline, {})]
     for mesh, cache, prefix, kv, case_reqs, ref, extra in cases:
-        server = SpecServer(
-            tgt, IndependentDrafter(drf, k=k, temperature=0.0),
-            t_params, d_params, ecfg,
-            ServerConfig(slots=4, max_len=96, max_prompt_len=12,
-                         steps_per_sync=3, cache=cache, mesh=mesh,
-                         prefix_cache=prefix, block_size=4, kv_dtype=kv,
-                         **extra))
-        for r in case_reqs:
-            server.submit(dataclasses.replace(r))
-        for _ in range(10_000):
-            if not server.queue and all(r is None for r in server.slot_req):
-                break
-            server._admit()
-            if server.controller is not None:
-                # exercise the sharded retune entry point directly (the
-                # clamped controller's own updates are no-ops and skip the
-                # dispatch): writing the SAME thetas must preserve parity
-                server.state = server._set_theta(
-                    server.state, server.slot_theta.astype(np.float32))
-            if server.pool is not None:
-                # no cross-shard paged traffic: every mapped block (shared
-                # prefix blocks included) and every trash target lives in
-                # the owning shard's pool partition
-                per = server.pool.per_shard
-                for s, blks in enumerate(server.slot_blocks):
-                    sh = s // server._slots_per_shard
-                    assert server.trash_ids[s] == sh * per, (mesh, cache, s)
-                    assert all(sh * per <= blk < (sh + 1) * per
-                               for blk in blks), (mesh, cache, s, blks)
-            syncs_before = server.host_syncs
-            jax.device_get = forbidden
-            try:
-                with jax.transfer_guard_device_to_host("disallow"):
-                    server.step()
-            finally:
-                jax.device_get = real_device_get
-            assert server.host_syncs == syncs_before, (mesh, cache)
-            server.sync()
-        resps = {r.uid: r for r in server.run()}
-        assert sorted(resps) == list(range(len(case_reqs))), (mesh, cache)
-        for req in case_reqs:
-            got = np.asarray(resps[req.uid].tokens)
-            np.testing.assert_array_equal(
-                got, ref[req.uid],
-                err_msg=f"mesh={mesh} cache={cache} prefix={prefix} "
-                        f"kv={kv} req {req.uid}: sharded != offline")
-        note = ""
-        if prefix == "on":
-            s = server.prefix.summary()
-            assert s["hits"] >= 1, s     # shared blocks actually rode in
-            note = (f", prefix hit rate {s['hit_rate']:.0%} "
-                    f"({s['blocks_shared']} shared mappings)")
-        if server.controller is not None:
-            assert (server.slot_theta == 0.9).all(), server.slot_theta
-            note += ", adaptive(theta clamped)"
-        print(f"  mesh={mesh} cache={cache} prefix={prefix} kv={kv}: "
-              f"token-identical, 0 in-tick syncs "
-              f"({server.host_syncs} at sync points){note}")
+        run_case(setup, mesh, cache, prefix, kv, case_reqs, ref, extra)
+
+    # every-family paging on the full (2,2) mesh: the hybrid pages only
+    # its attention sub-cache (mamba leaves stay dense, sharded with the
+    # carry) and the sliding-window target wraps a window-bounded ring —
+    # ceil(8/4) = 2 blocks per slot instead of ceil(96/4) = 24
+    hyb_cfg = dataclasses.replace(get_smoke("zamba2-2.7b"), dtype="float32")
+    win_cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32",
+                                  sliding_window=8)
+    for label, acfg in (("hybrid", hyb_cfg), ("sliding-window", win_cfg)):
+        asetup = make_setup(acfg)
+        areqs = make_requests(acfg, seed=23)
+        aref = offline_ref(asetup, areqs)
+        server = run_case(asetup, (2, 2), "paged", "off", "bf16", areqs,
+                          aref, {}, label=label)
+        if label == "sliding-window":
+            assert server.max_blocks == 2, server.max_blocks
 
     print("MESH-PARITY-OK")
 

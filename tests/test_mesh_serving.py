@@ -68,23 +68,34 @@ def test_sharded_pool_rejects_bad_frees():
 # Fail-fast config validation (no deep init_cache raise)
 # ---------------------------------------------------------------------------
 
-def test_paged_server_fails_fast_on_ssm_arch():
+def test_every_arch_passes_paged_validation():
+    """The stale fail-fast is gone: every family pages (ssm via the
+    zero-block layout, sliding-window via the block ring), so
+    ``paged_unsupported_reason`` reports support across the whole config
+    registry — `tests/test_paged_archs.py` backs this with end-to-end
+    parity."""
+    from repro.configs import get_config, list_archs
+    for arch in list_archs():
+        assert paged_unsupported_reason(get_config(arch)) is None, arch
+
+
+def test_quantized_pool_rejected_on_pure_ssm():
+    # the one genuinely unsupported combination left: there is no KV pool
+    # on a pure-ssm target, so quantized storage has nothing to quantize
     cfg = dataclasses.replace(get_smoke("xlstm-1.3b"), dtype="float32")
     target = build_model(cfg)
-    with pytest.raises(ValueError) as e:
+    with pytest.raises(ValueError, match="no attention KV pool"):
         SpecServer(target, None, None, None, EngineConfig(k=2),
-                   ServerConfig(slots=2, cache="paged"))
-    msg = str(e.value)
-    assert cfg.name in msg and "mlstm/slstm" in msg and "dense" in msg
+                   ServerConfig(slots=2, cache="paged", kv_dtype="int8"))
 
 
-def test_paged_server_fails_fast_on_sliding_window():
+def test_prefix_cache_rejected_on_sliding_window():
     cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32",
                               sliding_window=8)
     target = build_model(cfg)
     with pytest.raises(ValueError) as e:
         SpecServer(target, None, None, None, EngineConfig(k=2),
-                   ServerConfig(slots=2, cache="paged"))
+                   ServerConfig(slots=2, cache="paged", prefix_cache="on"))
     assert "sliding-window" in str(e.value) and cfg.name in str(e.value)
 
 

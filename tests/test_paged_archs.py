@@ -1,0 +1,205 @@
+"""Cross-architecture paged-serving parity matrix.
+
+Every config in ``src/repro/configs/`` must serve under ``--cache paged``
+token-identically to the dense offline ``DecodeSession.generate`` path
+(greedy): dense families page their full KV, hybrids page only the
+attention sub-cache (conv/ssm leaves stay dense in the carry),
+sliding-window layers get a window-bounded ring of blocks with a wrapped
+rewind, audio targets carry their dense cross-KV alongside the paged
+self-KV, and pure-ssm configs route through the server on the zero-block
+layout (admission gated on slots only — there is no pool).
+
+Per family the matrix also pins:
+
+* rollback correctness — a random drafter rejects most drafts, so every
+  run rewinds constantly; parity with offline generate proves the rewind
+  (wrapped or not) restores exactly the committed history;
+* no pool leaks — after the last harvest every allocated block is back in
+  the free list (``free + cached == capacity``; trivially true for the
+  zero-block ssm layout, asserted as ``pool is None``);
+* window-bounded pools — a sliding-window config's per-slot table is
+  sized by ``min(max_len, window)``, not the context length, and wraps
+  mid-block when the window is not block-aligned.
+
+MoE capacity depends on tokens-per-call, so ``capacity_factor`` is raised
+until nothing drops — the offline reference decodes one request at a time
+while the server batches slots (see tests/test_models_smoke.py for the
+same idiom).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke, list_archs
+from repro.configs.base import ModelConfig
+from repro.core import EngineConfig, IndependentDrafter
+from repro.core.session import DecodeSession
+from repro.models import build_model
+from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
+
+K = 2
+MAX_PROMPT = 8
+
+
+def _tiny_drafter(cfg):
+    d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
+                        n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=cfg.vocab_size, dtype="float32")
+    return build_model(d_cfg)
+
+
+def _requests(cfg, n=3):
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, MAX_PROMPT + 1))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(3, cfg.vocab_size, plen).astype(np.int32),
+            params=SamplingParams(max_tokens=[4, 6, 8][i % 3],
+                                  temperature=0.0)))
+    return reqs
+
+
+def _offline_ref(session, t_params, d_params, reqs):
+    out = {}
+    for req in reqs:
+        plen, mt = len(req.prompt), req.params.max_tokens
+        padded = np.zeros((MAX_PROMPT,), np.int32)
+        padded[:plen] = req.prompt
+        o = session.generate(t_params, d_params, jnp.asarray(padded)[None],
+                             jnp.asarray([plen], jnp.int32), mt,
+                             jax.random.PRNGKey(0))
+        out[req.uid] = np.asarray(o["tokens"])[0, plen:plen + mt]
+    return out
+
+
+@pytest.fixture(scope="module", params=list_archs())
+def arch_run(request):
+    """One paged serving run + its dense offline reference per config."""
+    arch = request.param
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32",
+                              capacity_factor=8.0)
+    tgt = build_model(cfg)
+    drf = _tiny_drafter(cfg)
+    t_params = tgt.init(jax.random.PRNGKey(1))
+    d_params = drf.init(jax.random.PRNGKey(2))
+    ecfg = EngineConfig(k=K, rule="mars", mode="greedy", temperature=0.0)
+    reqs = _requests(cfg)
+
+    # offline dense reference: one request at a time, no paging anywhere
+    # (whisper runs encoder-free on both sides: the server never feeds
+    # encoder frames, so the reference must not either)
+    session = DecodeSession(tgt, IndependentDrafter(drf, k=K,
+                                                    temperature=0.0), ecfg)
+    offline = _offline_ref(session, t_params, d_params, reqs)
+
+    server = SpecServer(
+        tgt, IndependentDrafter(drf, k=K, temperature=0.0),
+        t_params, d_params, ecfg,
+        ServerConfig(slots=2, max_len=48, max_prompt_len=MAX_PROMPT,
+                     cache="paged", block_size=8))
+    for r in reqs:
+        server.submit(r)
+    resps = {r.uid: r for r in server.run()}
+    return dict(arch=arch, cfg=cfg, server=server, offline=offline,
+                resps=resps)
+
+
+def test_paged_server_matches_dense_offline(arch_run):
+    """The prize assertion: paged serving is bit-for-bit the dense offline
+    decode on every architecture family."""
+    offline, resps = arch_run["offline"], arch_run["resps"]
+    assert sorted(resps) == sorted(offline)
+    for uid in offline:
+        np.testing.assert_array_equal(
+            np.asarray(resps[uid].tokens), offline[uid],
+            err_msg=f"{arch_run['arch']} req {uid}: paged != dense offline")
+
+
+def test_rollback_exercised(arch_run):
+    """Parity is only meaningful if the rewind path actually ran: the
+    random drafter must have had drafts rejected (fewer than K accepted
+    draft tokens per cycle), forcing a rollback — index rewind for paged
+    attention (wrapped under a window), recompute for recurrent families
+    — in every serving run."""
+    resps = arch_run["resps"].values()
+    assert any(r.n_accepted < K * r.n_cycles for r in resps), (
+        arch_run["arch"],
+        [(r.n_accepted, r.n_cycles) for r in resps])
+
+
+def test_pool_drains_after_harvest(arch_run):
+    """No leaked blocks: after the last harvest the free list holds every
+    allocatable block again.  Pure-ssm runs have no pool at all — the
+    zero-block layout admits on slots only."""
+    server, cfg = arch_run["server"], arch_run["cfg"]
+    if cfg.family == "ssm":
+        assert server.pool is None
+        assert server.paged is None
+        assert all(not blks for blks in server.slot_blocks)
+    else:
+        assert server.pool is not None
+        assert server.pool.available == server.pool.n_blocks - 1
+
+
+def test_windowed_table_bounded_by_window(arch_run):
+    """A sliding-window config's block table is sized by the window, not
+    max_len; everyone else gets the full-context table."""
+    server, cfg = arch_run["server"], arch_run["cfg"]
+    if cfg.family == "ssm":
+        pytest.skip("zero-block layout has no table")
+    bs = 8
+    ring = min(48, cfg.sliding_window) if cfg.sliding_window else 48
+    assert server.max_blocks == -(-ring // bs)
+
+
+# ---------------------------------------------------------------------------
+# Wrapped rewind for real: a window small enough to wrap many times
+# ---------------------------------------------------------------------------
+
+def test_wrapping_window_serves_token_identical():
+    """A window far below the generated length forces the block ring to
+    wrap repeatedly — with window % block_size != 0, so the ring wraps
+    mid-block (the exact-ring contract, not the block-rounded one) — and
+    paged serving must still match the dense ring offline."""
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32",
+                              sliding_window=10)
+    tgt = build_model(cfg)
+    drf = _tiny_drafter(cfg)
+    t_params = tgt.init(jax.random.PRNGKey(1))
+    d_params = drf.init(jax.random.PRNGKey(2))
+    ecfg = EngineConfig(k=K, rule="mars", mode="greedy", temperature=0.0)
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(3, cfg.vocab_size, 6).astype(np.int32),
+                    params=SamplingParams(max_tokens=20, temperature=0.0))
+            for i in range(2)]
+
+    session = DecodeSession(tgt, IndependentDrafter(drf, k=K,
+                                                    temperature=0.0), ecfg)
+    offline = {}
+    for req in reqs:
+        o = session.generate(t_params, d_params,
+                             jnp.asarray(req.prompt)[None],
+                             jnp.asarray([6], jnp.int32), 20,
+                             jax.random.PRNGKey(0))
+        offline[req.uid] = np.asarray(o["tokens"])[0, 6:26]
+
+    server = SpecServer(
+        tgt, IndependentDrafter(drf, k=K, temperature=0.0),
+        t_params, d_params, ecfg,
+        ServerConfig(slots=2, max_len=96, max_prompt_len=8,
+                     cache="paged", block_size=4))
+    # the ring is ceil(10/4) = 3 blocks per slot, not ceil(96/4) = 24
+    assert server.max_blocks == 3
+    for r in reqs:
+        server.submit(r)
+    resps = {r.uid: np.asarray(r.tokens) for r in server.run()}
+    for uid in offline:
+        np.testing.assert_array_equal(resps[uid], offline[uid],
+                                      err_msg=f"wrap req {uid}")
+    assert server.pool.available == server.pool.n_blocks - 1

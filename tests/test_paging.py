@@ -156,19 +156,33 @@ def test_hybrid_attn_subcache_pages(rng):
                                rtol=1e-4, atol=1e-4)
 
 
-def test_ssm_rejects_paged(dense_model):
+def test_ssm_accepts_paged_as_zero_block(rng):
+    """Pure-ssm targets route through the paged server with a zero-block
+    layout: ``paged`` is accepted and the cache simply carries no
+    pool/table leaves — identical to the dense recurrent cache."""
     cfg = dataclasses.replace(get_smoke("xlstm-1.3b"), dtype="float32")
     model = build_model(cfg)
-    with pytest.raises(ValueError, match="no attention KV"):
-        model.init_cache(None, 1, 32, paged=PagedCacheConfig(8, 8))
+    params = model.init(rng)
+    paged = model.init_cache(params, 1, 32, paged=PagedCacheConfig(8, 8))
+    dense = model.init_cache(params, 1, 32)
+    assert not any("table" in str(p) for p in
+                   jax.tree_util.tree_flatten_with_path(paged)[0])
+    assert (jax.tree_util.tree_structure(paged)
+            == jax.tree_util.tree_structure(dense))
 
 
-def test_sliding_window_rejects_paged(dense_model):
+def test_sliding_window_pages_as_block_ring(dense_model):
+    """Sliding-window targets page through a window-bounded ring of
+    blocks: the table covers min(max_len, window) tokens, not max_len."""
     cfg, model, params = dense_model
     cfg_w = dataclasses.replace(cfg, sliding_window=8)
-    with pytest.raises(ValueError, match="sliding-window"):
-        build_model(cfg_w).init_cache(params, 1, 32,
-                                      paged=PagedCacheConfig(8, 8))
+    cache = build_model(cfg_w).init_cache(params, 1, 32,
+                                          paged=PagedCacheConfig(4, 8))
+    lay = cache["layers"]
+    assert lay["table"].shape[-1] == 2          # ceil(8 / 4) blocks
+    # logical positions cover the ring plus trash slots only
+    from repro.models.layers import TRASH_SLOTS
+    assert lay["pos"].shape[-1] == 2 * 4 + TRASH_SLOTS
 
 
 # ---------------------------------------------------------------------------

@@ -182,6 +182,32 @@ def test_duplicate_publish_keeps_first_block():
     assert pool.n_cached == 3
 
 
+def test_kv_dtype_keys_never_alias():
+    """Keys are kv-dtype-aware: an int8 pool's block bytes are not a bf16
+    pool's block bytes for the same tokens, so indexes built at different
+    storage dtypes must never return each other's chains — the dtype is
+    hashed into the key root, not bolted onto the query."""
+    toks = np.arange(100, 100 + 3 * BS, dtype=np.int32)
+    chains = {}
+    for kv in ("bf16", "int8", "fp8"):
+        pool = BlockPool(32)
+        pc = PrefixCache(pool, BS, kv_dtype=kv)
+        taken = pool.alloc(3)
+        pc.publish(toks, taken)
+        pool.free(taken)
+        chains[kv] = (pc, taken)
+        # each index still matches its own publications...
+        m = pc.match(toks, usable=3 * BS)
+        assert m.hit and m.blocks == taken, kv
+    # ...and the key roots differ per dtype, so the first-block keys (and
+    # every chained key after them) can never collide across indexes
+    roots = {kv: pc._root for kv, (pc, _) in chains.items()}
+    assert len(set(roots.values())) == 3, roots
+    from repro.serving.prefix_cache import _chain_key
+    first = {kv: _chain_key(root, toks[:BS]) for kv, root in roots.items()}
+    assert len(set(first.values())) == 3, first
+
+
 # ---------------------------------------------------------------------------
 # Serving lifecycle (device): parity, COW, rollback safety, leak checks
 # ---------------------------------------------------------------------------

@@ -109,6 +109,88 @@ def test_blockwise_attention_matches_naive(b, t, s, hkv, g, d, chunk, window,
 
 @settings(**SET)
 @given(
+    window=st.integers(3, 10),
+    bs=st.sampled_from([3, 4]),
+    ops=st.lists(st.tuples(st.integers(1, 4), st.integers(0, 4)),
+                 min_size=2, max_size=6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_windowed_block_ring_wrapped_rewind(window, bs, ops, seed):
+    """The sliding-window ring of blocks under arbitrary speculation.
+
+    A paged windowed cache and the dense windowed ring are driven through
+    the same random draft/accept/rollback sequence (rollback = index
+    rewind: the committed cursor moves back, stale entries stay until
+    overwritten).  With ``window % block_size`` free to be nonzero the
+    paged ring wraps mid-block — the exact-ring contract.  Every cycle
+    ends with the correction token committed at the rewind point (the
+    engine's ``n_commit == n_accept + 1``), whose self-key guarantees the
+    next read has a valid target.  After every op, reading at the
+    committed head must (a) give identical outputs in both layouts and
+    (b) never place attention mass outside ``(q_pos - window, q_pos]`` —
+    checked exactly by storing one-hot values, so the output IS the
+    per-absolute-position attention mass."""
+    from repro.models.layers import (TRASH_SLOTS, _INVALID_POS, _cache_write,
+                                     blockwise_attention)
+    from repro.models.paging import (full_tables, paged_blockwise_attention,
+                                     paged_cache_write)
+
+    rng = np.random.default_rng(seed)
+    d = 48                                   # >= max absolute position
+    ring = window                            # max_len far above the window
+    mb = -(-ring // bs)
+
+    dense = {
+        "k": jnp.zeros((1, ring + TRASH_SLOTS, 1, d), jnp.float32),
+        "v": jnp.zeros((1, ring + TRASH_SLOTS, 1, d), jnp.float32),
+        "pos": jnp.full((1, ring + TRASH_SLOTS), _INVALID_POS, jnp.int32),
+    }
+    paged = {
+        "k_pool": jnp.zeros((1 + mb, bs, 1, d), jnp.float32),
+        "v_pool": jnp.zeros((1 + mb, bs, 1, d), jnp.float32),
+        "table": full_tables(1, mb),
+        "pos": jnp.full((1, ring + TRASH_SLOTS), _INVALID_POS, jnp.int32),
+        "trash": jnp.zeros((1,), jnp.int32),
+    }
+
+    keys = rng.standard_normal((d, 1, d)).astype(np.float32)  # key per pos
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, d)), np.float32)
+
+    def write(c, j):
+        # j speculative tokens at absolute c..c+j-1 plus one masked lane
+        # (position -1 -> trash slot / trash block in either layout)
+        pos = np.concatenate([np.arange(c, c + j), [-1]])[None]
+        k_new = jnp.asarray(
+            np.concatenate([keys[c:c + j], keys[:1]])[None])
+        v_new = jnp.asarray(
+            np.concatenate([np.eye(d, dtype=np.float32)[c:c + j],
+                            np.zeros((1, d), np.float32)])[None, :, None])
+        return (_cache_write(dense, k_new, v_new, jnp.asarray(pos)),
+                paged_cache_write(paged, k_new, v_new, jnp.asarray(pos)))
+
+    c = 3                                    # committed prompt
+    dense, paged = write(0, c)
+    for j, a_raw in ops:
+        dense, paged = write(c, j)           # draft j tokens
+        c += min(a_raw, j)                   # accept a, rewind the rest
+        dense, paged = write(c, 1)           # correction token commits
+        c += 1
+        q_pos = jnp.asarray([[c - 1]], jnp.int32)
+        got_d = blockwise_attention(q, dense["k"], dense["v"], q_pos,
+                                    dense["pos"], window=window)
+        got_p = paged_blockwise_attention(q, paged, q_pos, window=window)
+        np.testing.assert_allclose(np.asarray(got_p), np.asarray(got_d),
+                                   rtol=1e-5, atol=1e-5)
+        # one-hot values: output coord i == mass attending absolute pos i
+        mass = np.asarray(got_p)[0, 0, 0]
+        in_win = np.zeros((d,), bool)
+        in_win[max(0, c - window):c] = True
+        assert mass[~in_win].max() < 1e-5, (c, mass)
+        np.testing.assert_allclose(mass[in_win].sum(), 1.0, rtol=1e-5)
+
+
+@settings(**SET)
+@given(
     chunk=st.sampled_from([4, 8, 32]),
     s=st.integers(5, 64),
     seed=st.integers(0, 2**31 - 1),
