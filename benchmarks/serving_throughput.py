@@ -904,6 +904,173 @@ def adaptive_serving(target, t_params, draft, d_params, *, quick, k=4):
 
 
 # ---------------------------------------------------------------------------
+# Pipelined tick: overlap + admission ring + prefill worker
+# ---------------------------------------------------------------------------
+
+def _serve_phased(server, reqs, max_tokens, *, fence):
+    """One pass driven by hand with per-phase wall splits.
+
+    ``fence=True`` inserts ``jax.block_until_ready`` after admission and
+    after the group dispatch, serialising the phases so each bucket
+    measures its own device time; ``fence=False`` times the pipelined
+    schedule as-is — the difference between the two walls is the work the
+    overlap actually hid."""
+    for r in reqs:
+        server.submit(dataclasses.replace(r))
+    phases = {"admit": 0.0, "dispatch": 0.0, "harvest": 0.0}
+    t_start = time.time()
+    for _ in range(10_000):
+        if (not server.queue and all(x is None for x in server.slot_req)
+                and not server._pending
+                and not (server._ring is not None and server._ring_staged)):
+            break
+        t0 = time.time()
+        server._admit()
+        if fence:
+            jax.block_until_ready(server.state)
+        t1 = time.time()
+        server.step()
+        if fence:
+            jax.block_until_ready(server.state)
+            if server._ring is not None:
+                jax.block_until_ready(server._ring)
+        t2 = time.time()
+        server.sync()
+        t3 = time.time()
+        phases["admit"] += t1 - t0
+        phases["dispatch"] += t2 - t1
+        phases["harvest"] += t3 - t2
+    if server._overlap and server._pending:
+        t0 = time.time()
+        server.sync(flush=True)
+        phases["harvest"] += time.time() - t0
+    wall = time.time() - t_start
+    resps, server._responses = server._responses, []
+    assert len(resps) == len(reqs)
+    toks = sum(min(len(r.tokens), max_tokens) for r in resps)
+    return resps, {"wall_s": wall, "tok_s": toks / wall,
+                   "phases": {k2: round(v, 3) for k2, v in phases.items()}}
+
+
+def pipelined(target, t_params, draft, d_params, *, quick, use_worker,
+              profile, k=3):
+    """Serial tick vs the pipelined tick (double-buffered overlap +
+    device-side admission ring, optionally + the disaggregated prefill
+    worker) on a prompt-heavy saturated queue.  Greedy, so the section
+    doubles as a parity gate: every variant must produce token-identical
+    responses.  With ``profile`` on, a fenced pass splits the wall into
+    admit / dispatch / harvest and the fenced-vs-pipelined delta measures
+    the drafter-compute-over-D2H overlap directly."""
+    from benchmarks import common as C
+    n_req, max_tokens, prompt_len, slots = ((10, 8, 48, 4) if quick
+                                            else (24, 12, 64, 4))
+    ecfg = EngineConfig(k=k, rule="mars", mode="greedy", temperature=0.0)
+    prompts = C.corpus().sample_batch(n_req, prompt_len, seed=11)
+    # ragged budgets: slots free mid-group, which is exactly the regime the
+    # admission ring targets (uniform budgets finish in lockstep and the
+    # host refills every slot at the sync anyway)
+    budgets = (max(max_tokens // 2, 2), max_tokens, 2 * max_tokens)
+    reqs = [Request(uid=i, prompt=np.asarray(prompts[i], np.int32),
+                    params=SamplingParams(max_tokens=budgets[i % 3],
+                                          temperature=0.0))
+            for i in range(n_req)]
+    max_tok_hi = max(budgets)
+
+    def mk(**kw):
+        return SpecServer(
+            target, IndependentDrafter(draft, k=k, temperature=0.0),
+            t_params, d_params, ecfg,
+            ServerConfig(slots=slots,
+                         max_len=prompt_len + max_tok_hi + k + 4,
+                         max_prompt_len=prompt_len, cache="paged", **kw))
+
+    servers = {"serving/pipeline_serial": mk(),
+               "serving/pipeline_overlap": mk(overlap=True,
+                                              ring_depth=slots)}
+    if use_worker:
+        servers["serving/pipeline_worker"] = mk(overlap=True,
+                                                ring_depth=slots,
+                                                prefill_worker=True)
+
+    # parity gate first (also the compile warm-up): all variants identical
+    base = None
+    for name, srv in servers.items():
+        for r in reqs:
+            srv.submit(dataclasses.replace(r))
+        out = {r.uid: np.asarray(r.tokens) for r in srv.run()}
+        assert sorted(out) == list(range(n_req)), name
+        if base is None:
+            base = out
+        else:
+            for uid in base:
+                np.testing.assert_array_equal(
+                    out[uid], base[uid],
+                    err_msg=f"{name} diverged from serial on req {uid}")
+
+    best = _measure(servers, reqs, max_tok_hi, repeats=2 if quick else 3)
+    serial = best["serving/pipeline_serial"]
+    over = best["serving/pipeline_overlap"]
+    uplift = over["tok_s"] / serial["tok_s"]
+    ov_srv = servers["serving/pipeline_overlap"]
+
+    print(f"\npipelined tick ({n_req} req x {min(budgets)}-{max_tok_hi} tok, "
+          f"prompt {prompt_len}, {slots} slots, paged, greedy):")
+    print(f"  serial         : {serial['tok_s']:8.1f} tok/s")
+    print(f"  overlap+ring   : {over['tok_s']:8.1f} tok/s  "
+          f"({uplift:.2f}x, {ov_srv.ring_refills} ring refills, "
+          f"{ov_srv.slot_idle_ticks} idle slot-ticks)")
+    rows = [("serving/pipeline_serial", 0.0,
+             f"tok_s={serial['tok_s']:.1f}"),
+            ("serving/pipeline_overlap", 0.0,
+             f"tok_s={over['tok_s']:.1f};uplift={uplift:.2f}")]
+    summary = {
+        "workload": {"requests": n_req, "budgets": list(budgets),
+                     "prompt_len": prompt_len, "slots": slots,
+                     "cache": "paged", "quick": bool(quick)},
+        "serial_tok_s": round(serial["tok_s"], 1),
+        "overlap_tok_s": round(over["tok_s"], 1),
+        "uplift": round(uplift, 2),
+        "ring_refills": int(ov_srv.ring_refills),
+        "slot_idle_ticks": int(ov_srv.slot_idle_ticks),
+        "token_parity": "identical",
+    }
+    if use_worker:
+        wrk = best["serving/pipeline_worker"]
+        wrk_srv = servers["serving/pipeline_worker"]
+        print(f"  +prefill worker: {wrk['tok_s']:8.1f} tok/s  "
+              f"({wrk_srv.worker.stats['fills']} fills, "
+              f"{wrk_srv.worker.stats['filled_tokens']} prompt tok off "
+              f"the decode path)")
+        rows.append(("serving/pipeline_worker", 0.0,
+                     f"tok_s={wrk['tok_s']:.1f};"
+                     f"fills={wrk_srv.worker.stats['fills']}"))
+        summary["worker_tok_s"] = round(wrk["tok_s"], 1)
+        summary["worker"] = {k2: int(v) for k2, v in
+                             wrk_srv.worker.stats.items()}
+    if profile:
+        # fenced pass: serialised per-phase device time; pipelined pass:
+        # the same server free-running.  fenced - pipelined = hidden work.
+        prof_srv = servers["serving/pipeline_overlap"]
+        _, fenced = _serve_phased(prof_srv, reqs, max_tok_hi, fence=True)
+        _, piped = _serve_phased(prof_srv, reqs, max_tok_hi, fence=False)
+        hidden = max(1.0 - piped["wall_s"] / max(fenced["wall_s"], 1e-9),
+                     0.0)
+        print(f"  phases (fenced): admit {fenced['phases']['admit']:.3f}s, "
+              f"dispatch {fenced['phases']['dispatch']:.3f}s, "
+              f"harvest {fenced['phases']['harvest']:.3f}s; "
+              f"pipelined wall {piped['wall_s']:.3f}s vs fenced "
+              f"{fenced['wall_s']:.3f}s -> {hidden:.0%} hidden")
+        rows.append(("serving/pipeline_phases", 0.0,
+                     f"fenced_s={fenced['wall_s']:.3f};"
+                     f"piped_s={piped['wall_s']:.3f};hidden={hidden:.2f}"))
+        summary["phases_fenced"] = fenced["phases"]
+        summary["fenced_wall_s"] = round(fenced["wall_s"], 3)
+        summary["pipelined_wall_s"] = round(piped["wall_s"], 3)
+        summary["overlap_hidden_frac"] = round(hidden, 2)
+    return rows, summary
+
+
+# ---------------------------------------------------------------------------
 # Mesh sweep: tok/s scaling of the partitioned tick vs one device
 # ---------------------------------------------------------------------------
 
@@ -932,21 +1099,30 @@ def mesh_sweep(draft, d_params, mesh_shape, *, cache, kv_dtype="bf16", k=4):
     from benchmarks import common as C
     reqs = _requests(n_req, max_tokens, prompt_len, C.corpus())
 
-    def mk(mesh, slots):
+    def mk(mesh, slots, **kw):
         return SpecServer(
             target, IndependentDrafter(draft, k=k), t_params, d_params,
             ecfg,
             ServerConfig(slots=slots, max_len=prompt_len + max_tokens + k + 4,
                          max_prompt_len=prompt_len, cache=cache, mesh=mesh,
-                         kv_dtype=kv_dtype))
+                         kv_dtype=kv_dtype, **kw))
 
     servers = {"serving/mesh_1dev": mk(None, per_shard_slots),
                f"serving/mesh_{data}x{model}": mk(mesh_shape,
-                                                  per_shard_slots * data)}
+                                                  per_shard_slots * data),
+               # stealing off: admission fills free slots in id order, so
+               # a drained shard waits on its own harvests even when the
+               # neighbour shard has headroom — the before/after pins what
+               # the load-aware order buys
+               "serving/mesh_nosteal": mk(mesh_shape,
+                                          per_shard_slots * data,
+                                          shard_steal=False)}
     best = _measure(servers, reqs, max_tokens, repeats=4)
     base = best["serving/mesh_1dev"]
     part = best[f"serving/mesh_{data}x{model}"]
+    nosteal = best["serving/mesh_nosteal"]
     scaling = part["tok_s"] / base["tok_s"]
+    steal_x = part["tok_s"] / max(nosteal["tok_s"], 1e-9)
 
     print(f"\nmesh sweep ({cache} cache, {per_shard_slots} slots/shard, "
           f"target {SWEEP_TARGET_CFG.n_layers}L/d{SWEEP_TARGET_CFG.d_model}):")
@@ -956,6 +1132,9 @@ def mesh_sweep(draft, d_params, mesh_shape, *, cache, kv_dtype="bf16", k=4):
           f"({per_shard_slots * data} slots, "
           f"{part['syncs_per_tick']:.2f} syncs/group)")
     print(f"  scaling    : {scaling:.2f}x from the data axis")
+    print(f"  stealing   : {nosteal['tok_s']:8.1f} tok/s without "
+          f"cross-shard work stealing ({steal_x:.2f}x from the "
+          f"load-aware admission order)")
     rows = [
         ("serving/mesh_1dev", 0.0,
          f"tok_s={base['tok_s']:.1f};slots={per_shard_slots}"),
@@ -963,6 +1142,8 @@ def mesh_sweep(draft, d_params, mesh_shape, *, cache, kv_dtype="bf16", k=4):
          f"tok_s={part['tok_s']:.1f};slots={per_shard_slots * data};"
          f"cache={cache}"),
         ("serving/mesh_scaling", 0.0, f"x={scaling:.2f}"),
+        ("serving/mesh_steal", 0.0,
+         f"off_tok_s={nosteal['tok_s']:.1f};x={steal_x:.2f}"),
     ]
     summary = {"shape": [data, model], "cache": cache,
                "kv_dtype": kv_dtype,
@@ -973,7 +1154,10 @@ def mesh_sweep(draft, d_params, mesh_shape, *, cache, kv_dtype="bf16", k=4):
                "mesh_slots": per_shard_slots * data,
                "mesh_host_syncs": int(part["host_syncs"]),
                "mesh_tick_groups": int(part["ticks"]),
-               "scaling": round(scaling, 2)}
+               "scaling": round(scaling, 2),
+               "steal": {"on_tok_s": round(part["tok_s"], 1),
+                         "off_tok_s": round(nosteal["tok_s"], 1),
+                         "uplift": round(steal_x, 2)}}
     return rows, summary
 
 
@@ -1014,6 +1198,21 @@ def main():
                          "block pool (int8 included), asserting offline "
                          "parity and recording tok/s + blocks/slot under "
                          "'multi_arch' in BENCH_serving.json")
+    ap.add_argument("--overlap", action="store_true",
+                    help="add a pipelined-tick section: serial tick vs "
+                         "double-buffered overlap + device-side admission "
+                         "ring on a saturated paged workload, with a "
+                         "token-parity gate (written to BENCH_serving.json "
+                         "under 'pipeline')")
+    ap.add_argument("--prefill-worker", action="store_true",
+                    help="with --overlap: add a third variant that also "
+                         "prefills cold prompts through the disaggregated "
+                         "worker program")
+    ap.add_argument("--profile-phases", action="store_true",
+                    help="with --overlap: fenced per-phase timing "
+                         "(admit/dispatch/harvest via block_until_ready) "
+                         "vs the free-running pipeline; the delta is the "
+                         "overlap-hidden fraction")
     ap.add_argument("--theta-mode", default="fixed",
                     choices=["fixed", "adaptive"],
                     help="adaptive: add a bursty open-loop section "
@@ -1120,6 +1319,14 @@ def main():
             raise SystemExit("--multi-arch requires --cache paged")
         ma_rows, multiarch_summary = multi_arch_paged(k=min(args.k, 3))
         rows += ma_rows
+    pipeline_summary = None
+    if args.overlap:
+        p_rows, pipeline_summary = pipelined(target, t_params, draft,
+                                             d_params, quick=args.quick,
+                                             use_worker=args.prefill_worker,
+                                             profile=args.profile_phases,
+                                             k=min(args.k, 3))
+        rows += p_rows
     adaptive_summary = None
     if args.theta_mode == "adaptive":
         a_rows, adaptive_summary = adaptive_serving(target, t_params, draft,
@@ -1152,6 +1359,7 @@ def main():
         "quantized": quant_summary,
         "mesh": mesh_summary,
         "multi_arch": multiarch_summary,
+        "pipeline": pipeline_summary,
         "adaptive": adaptive_summary,
     }
     # merge, don't clobber: sections another invocation produced (e.g. the

@@ -544,6 +544,32 @@ class DecodeSession:
                            last_token, key, stats, budget,
                            state.temperature, state.theta)
 
+    # -- fused multi-cycle group (jit-traceable) ------------------------------
+    def run_group(self, t_params, d_params, state: DecodeState,
+                  steps) -> DecodeState:
+        """Run up to ``steps`` cycles as one fused ``lax.while_loop``.
+
+        This is the body the serving tick dispatches: the carry is the
+        whole :class:`DecodeState`, so a jit wrapper can donate it and the
+        group runs device-side with zero host transfers.  The loop exits
+        early on-device once every slot is finished, so an oversized
+        ``steps`` costs nothing.  The scheduler's ring-refill variant
+        (:func:`repro.serving.admission_ring.fused_cycles_with_refill`)
+        wraps this same ``cycle`` with an in-loop masked prefill.
+        """
+        def cond(carry):
+            i, st = carry
+            return (i < steps) & (~DecodeState(*st).finished).any()
+
+        def body(carry):
+            i, st = carry
+            return i + 1, tuple(self.cycle(t_params, d_params,
+                                           DecodeState(*st)))
+
+        _, out = jax.lax.while_loop(cond, body,
+                                    (jnp.int32(0), tuple(state)))
+        return DecodeState(*out)
+
     # -- full generation ------------------------------------------------------
     def generate(self, t_params, d_params, prompt: jnp.ndarray,
                  prompt_len: jnp.ndarray, max_new: int, key,

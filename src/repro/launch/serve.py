@@ -108,6 +108,18 @@ def main():
                          "mesh: slots shard over data, target/drafter "
                          "tensor dims over model (needs data*model "
                          "devices; see docs/SERVING.md)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffer fused groups: keep two dispatches "
+                         "in flight and harvest each group one group late, "
+                         "overlapping drafter compute with the D2H read")
+    ap.add_argument("--ring-depth", type=int, default=0,
+                    help="admission-ring depth (0 = off): stage up to this "
+                         "many queued prompts on device so the fused group "
+                         "refills freed slots mid-group")
+    ap.add_argument("--prefill-worker", action="store_true",
+                    help="paged only: prefill cold prompts into pool "
+                         "blocks with a separate jitted worker program so "
+                         "admission decodes never widen for a cold admit")
     args = ap.parse_args()
 
     mesh_shape = None
@@ -201,7 +213,9 @@ def main():
                      theta_mode=args.theta_mode, theta_min=args.theta_min,
                      theta_max=args.theta_max,
                      relax_budget=args.relax_budget,
-                     adaptive_k=args.adaptive_k))
+                     adaptive_k=args.adaptive_k,
+                     overlap=args.overlap, ring_depth=args.ring_depth,
+                     prefill_worker=args.prefill_worker))
 
     # per-request sampling params ride the device carry: each request may
     # ask for its own temperature and token budget
@@ -224,6 +238,13 @@ def main():
               f"tau={r.tau:4.2f} latency={r.latency_s:5.2f}s")
     print(f"host syncs: {server.host_syncs} across {server.step_calls} "
           f"fused tick groups (tick loop itself is sync-free)")
+    if args.overlap or args.ring_depth or args.prefill_worker:
+        st = server.stats
+        worker_note = (f", worker fills={server.worker.stats['fills']}"
+                       if server.worker is not None else "")
+        print(f"pipeline: ring refills={st['ring_refills']}, slot idle "
+              f"ticks={st['slot_idle_ticks']}, harvest "
+              f"gathers={st['gather_calls']}{worker_note}")
     if server.controller is not None:
         print(f"theta controller: {server.theta_retunes} retune dispatches, "
               f"final slot thetas "

@@ -238,6 +238,16 @@ def param_shardings(params, mesh, rules):
     return tree_shardings(params, specs, mesh)
 
 
+def replicated_shardings(tree, mesh):
+    """Fully replicated NamedShardings mirroring ``tree`` — the plan for
+    host-facing serving side-cars that every shard must see whole: the
+    device-side admission ring (staged prompts are consumed by whichever
+    data shard owns the freed slot) and the pipelined tick's harvest
+    snapshots (the host reads them without a gather)."""
+    repl = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(lambda _: repl, tree)
+
+
 def build_case(arch: str, shape_name: str, *, multi_pod: bool,
                verify_tokens: int = 1, variant=None):
     """Returns (fn, arg_structs, in_specs, rules, meta)."""

@@ -737,6 +737,52 @@ def full_tables(batch: int, max_blocks: int) -> jnp.ndarray:
     return base + jnp.arange(max_blocks, dtype=jnp.int32)[None]
 
 
+def worker_cache_view(cache: Params, table_row: jnp.ndarray,
+                      trash_id: jnp.ndarray) -> Params:
+    """Batch-1 synthetic paged cache over the serving pool — the prefill
+    worker's half of the prefill/decode handoff.
+
+    The pool (and scale) leaves are shared *by reference* with the live
+    serving cache, so the worker's writes land in the same physical
+    blocks a decode slot will later map; the per-slot leaves (``pos``,
+    ``table``, ``trash``) are freshly built batch-1 arrays pointing at
+    ``table_row`` (max_blocks,), so the worker program never touches any
+    live slot's rows.  Merge the written pools back into the serving
+    carry with :func:`merge_worker_pool` — the per-slot view leaves are
+    discarded; the decode slot reconstructs positions itself via
+    :func:`seed_prefix_positions` at admission.
+    """
+    from repro.models.layers import _INVALID_POS
+    n_layers, _, width = cache["pos"].shape
+    mb = cache["table"].shape[-1]
+    trash = jnp.asarray(trash_id, jnp.int32)
+    view = {
+        "k_pool": cache["k_pool"],
+        "v_pool": cache["v_pool"],
+        "pos": jnp.full((n_layers, 1, width), _INVALID_POS, jnp.int32),
+        "table": jnp.broadcast_to(
+            table_row.astype(jnp.int32)[None, None], (n_layers, 1, mb)),
+        "trash": jnp.broadcast_to(trash.reshape(1, 1), (n_layers, 1)),
+    }
+    for leaf in ("k_scale", "v_scale"):
+        if leaf in cache:
+            view[leaf] = cache[leaf]
+    return view
+
+
+def merge_worker_pool(cache: Params, view: Params) -> Params:
+    """Fold a :func:`worker_cache_view`'s written pool leaves back into the
+    serving cache.  Only the shared pool/scale leaves move; every per-slot
+    leaf of ``cache`` (pos rows, block tables, trash ids, and on the
+    serving carry the whole drafter/recurrent side) is untouched, so a
+    worker fill can never perturb a live slot."""
+    new = dict(cache)
+    for leaf in ("k_pool", "v_pool", "k_scale", "v_scale"):
+        if leaf in cache:
+            new[leaf] = view[leaf]
+    return new
+
+
 # ---------------------------------------------------------------------------
 # Device-side write / attention paths (mirrors of layers._cache_write and
 # layers.blockwise_attention, indexing K/V through the block table)

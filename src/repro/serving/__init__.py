@@ -1,4 +1,6 @@
+from repro.serving.admission_ring import AdmissionRing
 from repro.serving.controller import ControllerConfig, ThetaController
+from repro.serving.prefill_worker import PrefillWorker
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch, PrefixStats
 from repro.serving.scheduler import (
     Request,
@@ -10,4 +12,5 @@ from repro.serving.scheduler import (
 
 __all__ = ["Request", "Response", "SamplingParams", "SpecServer",
            "ServerConfig", "PrefixCache", "PrefixMatch", "PrefixStats",
-           "ControllerConfig", "ThetaController"]
+           "ControllerConfig", "ThetaController", "AdmissionRing",
+           "PrefillWorker"]

@@ -1,0 +1,238 @@
+"""Device-side admission ring: staged prompts the fused tick refills from.
+
+The sync-free tick admits only at host syncs, so a slot that finishes in
+the middle of a fused group idles until the group ends even when the
+queue is full.  The admission ring closes that bubble: the host stages
+queued prompts (tokens, length, budget, temperature, theta, block-table
+row, cached-prefix start, COW pair) into a pre-allocated on-device ring,
+and the fused group body consumes one entry per loop iteration via a
+masked in-loop :meth:`DecodeSession.prefill` whenever a slot is free —
+no host round-trip, no idle ticks.
+
+Contract
+--------
+* The ring is a plain ``NamedTuple`` carry next to :class:`DecodeState`;
+  the fused program takes and returns both with donation, so staging and
+  refilling never copy the ring.
+* ``head`` is device-incremented (consumptions), ``tail`` is
+  host-incremented (:func:`ring_push` between groups).  Entries live at
+  ``index % depth``; the host never stages more than ``depth``
+  outstanding entries, so a push can never overwrite an unconsumed or
+  unharvested entry.
+* A refill *evicts* a finished occupant: the occupant's token buffer,
+  length, and stats are copied into the ring's harvest fields
+  (``h_buf``/``h_len``/``h_stats``/``h_slot``) *before* the masked
+  prefill resets the slot, so the host emits the response from the ring
+  when it processes the group's poll.
+* Which finished slots may be taken is the conjunction of two guards:
+  slots that *finish inside this group* (``~entry_finished``) are always
+  consumable — the device is first to know they freed — while slots
+  already finished at dispatch are consumable only if the host marked
+  them ``refillable`` (harvested; an unharvested row must stay frozen
+  for the host's lagged gather under double-buffering).
+* On a ``(data, model)`` mesh the ring is replicated; an entry is bound
+  to one data shard at staging (its blocks are shard-local) and the
+  candidate mask keeps the refill on that shard's slots.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.session import STAT_KEYS, DecodeState
+
+NO_COW = -1          # cow_src/cow_dst sentinel: nothing to clone
+
+
+class AdmissionRing(NamedTuple):
+    """On-device staging ring (all leaves pre-allocated, depth R)."""
+    tokens: jnp.ndarray         # (R, S)  staged prompt, right-padded
+    plen: jnp.ndarray           # (R,)    valid prompt length
+    budget: jnp.ndarray         # (R,)    max_tokens budget
+    temp: jnp.ndarray           # (R,)    verification temperature
+    theta: jnp.ndarray          # (R,)    MARS relaxation threshold
+    start: jnp.ndarray          # (R,)    cached-prefix divergence point
+    rows: jnp.ndarray           # (R, MB) block-table row (trash when dense)
+    cow_src: jnp.ndarray        # (R,)    COW clone source (NO_COW = none)
+    cow_dst: jnp.ndarray        # (R,)    COW clone destination
+    shard: jnp.ndarray          # (R,)    owning data shard
+    head: jnp.ndarray           # ()      consumed entries (device-side)
+    tail: jnp.ndarray           # ()      staged entries (host-side)
+    # harvest side: the evicted occupant of a consumed entry's slot
+    h_buf: jnp.ndarray          # (R, L+1) occupant token buffer
+    h_len: jnp.ndarray          # (R,)     occupant length
+    h_stats: Dict[str, jnp.ndarray]  # (R,) per stat key (+ margin_ema)
+    h_slot: jnp.ndarray         # (R,)     slot the consumption refilled
+
+
+def make_ring(depth: int, prompt_width: int, max_blocks: int,
+              buf_width: int) -> AdmissionRing:
+    """Allocate an empty ring: ``depth`` entries of ``prompt_width`` prompt
+    tokens, ``max_blocks``-wide table rows, and ``buf_width`` harvest
+    buffers (the slot buffer width, ``max_len + 1``)."""
+    stats = {k: jnp.zeros((depth,), jnp.int32) for k in STAT_KEYS}
+    stats["margin_ema"] = jnp.zeros((depth,), jnp.float32)
+    return AdmissionRing(
+        tokens=jnp.zeros((depth, prompt_width), jnp.int32),
+        plen=jnp.zeros((depth,), jnp.int32),
+        budget=jnp.zeros((depth,), jnp.int32),
+        temp=jnp.ones((depth,), jnp.float32),
+        theta=jnp.zeros((depth,), jnp.float32),
+        start=jnp.zeros((depth,), jnp.int32),
+        rows=jnp.zeros((depth, max_blocks), jnp.int32),
+        cow_src=jnp.full((depth,), NO_COW, jnp.int32),
+        cow_dst=jnp.full((depth,), NO_COW, jnp.int32),
+        shard=jnp.zeros((depth,), jnp.int32),
+        head=jnp.zeros((), jnp.int32),
+        tail=jnp.zeros((), jnp.int32),
+        h_buf=jnp.zeros((depth, buf_width), jnp.int32),
+        h_len=jnp.zeros((depth,), jnp.int32),
+        h_stats=stats,
+        h_slot=jnp.full((depth,), -1, jnp.int32),
+    )
+
+
+def ring_push(ring: AdmissionRing, tokens, plen, budget, temp, theta,
+              start, row, cow_src, cow_dst, shard) -> AdmissionRing:
+    """Stage one request at ``tail % depth`` — the host half of staging.
+
+    The operands ride the cheap host→device direction; jitted with the
+    ring donated, a push between groups mutates the ring in place and
+    (device execution being in submission order) lands after any
+    in-flight group that might still consume older entries.
+    """
+    e = ring.tail % ring.plen.shape[0]
+    return ring._replace(
+        tokens=ring.tokens.at[e].set(tokens),
+        plen=ring.plen.at[e].set(plen),
+        budget=ring.budget.at[e].set(budget),
+        temp=ring.temp.at[e].set(temp),
+        theta=ring.theta.at[e].set(theta),
+        start=ring.start.at[e].set(start),
+        rows=ring.rows.at[e].set(row),
+        cow_src=ring.cow_src.at[e].set(cow_src),
+        cow_dst=ring.cow_dst.at[e].set(cow_dst),
+        shard=ring.shard.at[e].set(shard),
+        tail=ring.tail + 1,
+    )
+
+
+def refill_candidates(state: DecodeState, ring: AdmissionRing,
+                      entry_finished: jnp.ndarray,
+                      refillable: jnp.ndarray,
+                      slots_per_shard: Optional[int]) -> jnp.ndarray:
+    """(B,) bool: slots the next staged entry may take *right now*.
+
+    ``entry_finished`` is the finished mask at group entry and
+    ``refillable`` the host's harvested-slot mask at dispatch — see the
+    module docstring for why both guards exist.  When staged entries
+    carry a shard binding, only that shard's slots qualify.
+    """
+    b = state.finished.shape[0]
+    cand = state.finished & (~entry_finished | refillable)
+    if slots_per_shard is not None:
+        e = ring.head % ring.plen.shape[0]
+        slot_shard = jnp.arange(b, dtype=jnp.int32) // slots_per_shard
+        cand = cand & (slot_shard == ring.shard[e])
+    return cand & (ring.tail > ring.head)
+
+
+def maybe_refill(session, t_params, d_params, state: DecodeState,
+                 ring: AdmissionRing, entry_finished, refillable,
+                 trash_ids: Optional[jnp.ndarray], *,
+                 slots_per_shard: Optional[int] = None,
+                 use_blocks: bool = True,
+                 use_start: bool = False):
+    """Consume at most one ring entry into a free slot (lax.cond-gated).
+
+    The do-branch (1) copies the evicted occupant's buffer/length/stats
+    into the harvest fields at ``head % depth``, (2) runs a slot-masked
+    ``session.prefill`` of the staged prompt into the chosen slot —
+    blocks via ``rows``, cached-prefix seeding via ``start``, COW via
+    the entry's pair (``NO_COW`` resolves to the slot's trash id) — and
+    (3) advances ``head``.  The no-branch is the identity, so groups
+    with nothing to refill pay one predicate only.
+    """
+    cand = refill_candidates(state, ring, entry_finished, refillable,
+                             slots_per_shard)
+
+    def consume(args):
+        st, rg = args
+        depth = rg.plen.shape[0]
+        b = st.finished.shape[0]
+        e = rg.head % depth
+        slot = jnp.argmax(cand).astype(jnp.int32)
+        smask = jnp.arange(b, dtype=jnp.int32) == slot
+        # harvest record FIRST: the prefill below resets the slot's row
+        rg = rg._replace(
+            h_buf=rg.h_buf.at[e].set(st.buf[slot]),
+            h_len=rg.h_len.at[e].set(st.lengths[slot]),
+            h_stats={k: v.at[e].set(st.stats[k][slot])
+                     for k, v in rg.h_stats.items()},
+            h_slot=rg.h_slot.at[e].set(slot),
+            head=rg.head + 1,
+        )
+        prompt = jnp.broadcast_to(rg.tokens[e][None],
+                                  (b, rg.tokens.shape[1]))
+        plen = jnp.broadcast_to(rg.plen[e], (b,))
+        kw = {}
+        if use_blocks:
+            kw["block_rows"] = jnp.broadcast_to(
+                rg.rows[e][None], (b, rg.rows.shape[1]))
+        if use_start:
+            kw["start_pos"] = jnp.where(smask, rg.start[e], 0)
+            kw["cow_src"] = jnp.where(smask & (rg.cow_src[e] != NO_COW),
+                                      rg.cow_src[e], trash_ids)
+            kw["cow_dst"] = jnp.where(smask & (rg.cow_dst[e] != NO_COW),
+                                      rg.cow_dst[e], trash_ids)
+        st = session.prefill(t_params, d_params, st, prompt, plen,
+                             slot_mask=smask, budget=rg.budget[e],
+                             temperature=rg.temp[e], theta=rg.theta[e],
+                             **kw)
+        return st, rg
+
+    return jax.lax.cond(cand.any(), consume, lambda args: args,
+                        (state, ring))
+
+
+def fused_cycles_with_refill(session, t_params, d_params,
+                             state: DecodeState, ring: AdmissionRing,
+                             refillable, steps, *,
+                             trash_ids: Optional[jnp.ndarray] = None,
+                             slots_per_shard: Optional[int] = None,
+                             use_blocks: bool = True,
+                             use_start: bool = False):
+    """Ring-aware fused group: ``steps`` cycles with one possible ring
+    consumption per iteration, refill-before-cycle so a slot freed at
+    group entry (or by the previous iteration) decodes immediately.
+
+    The loop keeps running — past every live slot finishing — while
+    staged entries remain consumable, so a group sized for the staged
+    backlog drains the ring without host involvement.  Returns the new
+    ``(state, ring)`` pair; jit wrappers donate both.
+    """
+    entry_finished = state.finished
+
+    def cond(carry):
+        i, st, rg = carry
+        st = DecodeState(*st)
+        more = (~st.finished).any()
+        can = refill_candidates(st, rg, entry_finished, refillable,
+                                slots_per_shard).any()
+        return (i < steps) & (more | can)
+
+    def body(carry):
+        i, st, rg = carry
+        st, rg = maybe_refill(session, t_params, d_params,
+                              DecodeState(*st), rg, entry_finished,
+                              refillable, trash_ids,
+                              slots_per_shard=slots_per_shard,
+                              use_blocks=use_blocks, use_start=use_start)
+        st = session.cycle(t_params, d_params, st)
+        return i + 1, tuple(st), rg
+
+    _, out, ring = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), tuple(state), ring))
+    return DecodeState(*out), ring

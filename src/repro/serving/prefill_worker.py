@@ -1,0 +1,136 @@
+"""Disaggregated prefill: fill pool blocks for cold prompts off the
+decode path.
+
+The prefix cache stopped *cached* prompts from paying cold prefills, but
+one genuinely cold admit still widens the admission decode window for
+every warm sibling sharing the pass (``prefill_window_ratio`` in
+``BENCH_serving.json``).  The prefill worker kills that coupling: before
+a cold request enters the batched admission prefill, its own jitted
+program — separate from the tick program, optionally pinned to a
+dedicated mesh slice via ``ServerConfig.prefill_mesh`` — decodes the
+prompt body into the slot's freshly allocated pool blocks through a
+batch-1 :func:`repro.models.paging.worker_cache_view`.  The admission
+pass then treats those positions exactly like a cached prefix: blocks
+ride in via the table row, positions are seeded valid, and the decode
+window shrinks to the pending tail (the final prompt token, plus the
+feature-grounding token for feature-carrying drafters).
+
+Handoff contract
+----------------
+* The worker writes only blocks the host just allocated for the target
+  slot — never a live slot's rows, never shared (refcounted > 1) prefix
+  blocks: a partially matching shared tail is COW-cloned *inside the
+  worker program* before any write lands.
+* Device dispatches execute in submission order, so the admission (or
+  ring-refill) program that maps the blocks is queued after the fill
+  and reads complete KV — no fence, no host sync.
+* The worker is decode-cache only: the drafter's prompt prefill still
+  runs in the admission pass (it is recurrent over the whole prompt and
+  cheap by construction).
+* Eligibility: paged cache, non-recurrent family, no sliding window
+  (a wrapped ring is not reconstructible from a seeded position row),
+  no encoder cross-attention leaves.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.models.paging import merge_worker_pool, worker_cache_view
+
+
+def worker_unsupported_reason(target: Model, cache: str) -> Optional[str]:
+    """Why the prefill worker cannot serve this config (None = it can)."""
+    if cache != "paged":
+        return ("prefill disaggregation hands off physical pool blocks, "
+                "which the dense per-slot ring does not have")
+    if target.is_recurrent:
+        return ("recurrent state is order-dependent and lives in the "
+                "carry, so a detached prefill cannot hand it off")
+    if target.cfg.sliding_window:
+        return ("a sliding-window block ring wraps, so seeded positions "
+                "cannot reconstruct the worker's write layout")
+    if target.cfg.family == "audio":
+        return ("encoder cross-attention leaves are per-request and "
+                "outside the block pool")
+    return None
+
+
+class PrefillWorker:
+    """One jitted fill program over the serving carry's pool leaves.
+
+    ``fill()`` decodes prompt positions ``[start, usable)`` of one cold
+    request into the blocks of ``row`` and returns the carry with the
+    written pools merged back; every per-slot leaf (and the whole
+    drafter side) passes through untouched, so a fill can run while the
+    previous tick group is still in flight.
+    """
+
+    def __init__(self, target: Model, prompt_width: int, *, mesh=None,
+                 state_shardings=None, t_shardings=None):
+        self.target = target
+        self.prompt_width = int(prompt_width)
+        self.fills = 0              # worker dispatches
+        self.filled_tokens = 0      # prompt positions taken off decode
+
+        def _fill(tp, state, tokens, row, start, usable,
+                  cow_src, cow_dst, trash_id):
+            cache = state.t_cache
+            view = {"index": jnp.zeros((1,), jnp.int32),
+                    "layers": worker_cache_view(cache["layers"], row,
+                                                trash_id)}
+            # COW before any write: a partially matching shared tail
+            # block is cloned into the slot's first private block
+            # (trash -> trash when there is nothing to clone)
+            view = target.clone_blocks(view,
+                                       jnp.reshape(cow_src, (1,)),
+                                       jnp.reshape(cow_dst, (1,)))
+            # cached positions [0, start) rode in shared: mark them
+            # valid so the fill's attention sees the whole prefix
+            view = target.seed_prefix(view, jnp.ones((1,), bool),
+                                      jnp.reshape(start, (1,)))
+            s = tokens.shape[0]
+            pos = jnp.arange(s, dtype=jnp.int32)[None]
+            tmask = (pos >= start) & (pos < usable)
+            _, view = target.decode(tp, tokens[None], pos, view,
+                                    token_mask=tmask)
+            new_cache = {**cache,
+                         "layers": merge_worker_pool(cache["layers"],
+                                                     view["layers"])}
+            return state._replace(t_cache=new_cache)
+
+        if mesh is None:
+            self._fill = jax.jit(_fill, donate_argnums=(1,))
+        else:
+            repl = NamedSharding(mesh, P())
+            self._fill = jax.jit(
+                _fill, donate_argnums=(1,),
+                in_shardings=(t_shardings, state_shardings,
+                              repl, repl, repl, repl, repl, repl, repl),
+                out_shardings=state_shardings)
+
+    def fill(self, t_params, state, tokens: np.ndarray, row: np.ndarray,
+             start: int, usable: int, cow_src: int, cow_dst: int,
+             trash_id: int):
+        """Dispatch one fill (host half).  ``tokens`` is the padded
+        (prompt_width,) prompt row; positions ``[start, usable)`` are
+        written.  Returns the new carry; the caller still owns response
+        assembly and the admission prefill of the ``[usable, plen)``
+        tail."""
+        self.fills += 1
+        self.filled_tokens += max(int(usable) - int(start), 0)
+        return self._fill(t_params, state,
+                          np.asarray(tokens, np.int32),
+                          np.asarray(row, np.int32),
+                          np.int32(start), np.int32(usable),
+                          np.int32(cow_src), np.int32(cow_dst),
+                          np.int32(trash_id))
+
+    @property
+    def stats(self) -> dict:
+        return {"fills": self.fills, "filled_tokens": self.filled_tokens}

@@ -128,6 +128,10 @@ from repro.models.paging import (BlockPool, PagedCacheConfig,
                                  kv_dtype_unsupported_reason,
                                  paged_unsupported_reason, pool_block_bytes,
                                  slot_trash_blocks)
+from repro.serving.admission_ring import (NO_COW, fused_cycles_with_refill,
+                                          make_ring, ring_push)
+from repro.serving.prefill_worker import (PrefillWorker,
+                                          worker_unsupported_reason)
 from repro.serving.prefix_cache import PrefixCache
 from repro.sharding import axis_rules, serving_rules
 
@@ -162,6 +166,23 @@ class Response:
     @property
     def tau(self) -> float:
         return self.n_committed / max(self.n_cycles, 1)
+
+
+@dataclasses.dataclass
+class _StagedEntry:
+    """Host twin of one on-device admission-ring entry (FIFO with the
+    ring: entry ``i`` of this deque is ring index ``head_host + i``).
+    Everything the host must re-learn when the device consumes the entry
+    lives here — the Request for response assembly, the block table the
+    slot inherits, and the ledger values admission would have written."""
+    req: Request
+    ptoks: np.ndarray          # (max_prompt_len,) padded prompt row
+    plen: int
+    blocks: List[int]          # shared + private physical blocks
+    shard: int
+    match_start: int           # cached-prefix tokens (ledger/accounting)
+    theta: float
+    t0: float
 
 
 @dataclasses.dataclass
@@ -230,6 +251,35 @@ class ServerConfig:
     # controller pick the width bucket per group from observed
     # accepts-per-cycle — low-acceptance phases stop paying full-K drafts.
     adaptive_k: bool = False
+    # Pipelined tick (docs/ARCHITECTURE.md "Pipelined tick"):
+    # ``overlap=True`` double-buffers the dispatch pipeline — step() keeps
+    # up to two in-flight fused groups (the donated carry alternates
+    # between the two buffer generations) plus a non-donated snapshot of
+    # each group's harvest view, and sync() only blocks on the OLDER
+    # group, so group N+1's drafter compute overlaps group N's harvest
+    # D2H.  Token-identical to the serial tick under greedy decoding.
+    overlap: bool = False
+    # Device-side admission ring depth (0 = off): the host stages up to
+    # ``ring_depth`` queued prompts on device and the fused group body
+    # refills freed slots mid-group via a masked in-loop prefill
+    # (repro.serving.admission_ring) — no slot idles waiting for a sync.
+    ring_depth: int = 0
+    # Disaggregated prefill (paged, non-recurrent, non-windowed): a
+    # separate jitted PrefillWorker program fills a cold prompt's pool
+    # blocks BEFORE the admission pass, which then maps them like a
+    # cached prefix — one cold admit no longer widens the batched decode
+    # window for every warm sibling in the pass.
+    prefill_worker: bool = False
+    # Mesh slice for the worker's fill program; today it must equal
+    # ``mesh`` (the pool leaves live on the serving mesh), but the knob
+    # keeps the placement explicit and future-proofs a dedicated slice.
+    prefill_mesh: Optional[Tuple[int, int]] = None
+    # Cross-shard work stealing (mesh admission): order free slots by
+    # their shard's live-request load (then pool headroom), so a drained
+    # shard's slots take head-of-queue requests that would otherwise wait
+    # on a loaded shard.  FIFO over requests is preserved — stealing only
+    # reorders which SLOT admits next, never which request.
+    shard_steal: bool = True
 
 
 class SpecServer:
@@ -316,6 +366,25 @@ class SpecServer:
             if engine_cfg.topology != "chain":
                 raise ValueError("adaptive_k supports the chain topology "
                                  "only (tree templates bake their own K)")
+        if cfg.ring_depth < 0:
+            raise ValueError(f"ring_depth={cfg.ring_depth} must be >= 0 "
+                             f"(0 = device-side admission off)")
+        if cfg.prefill_worker:
+            reason = worker_unsupported_reason(target, cfg.cache)
+            if reason is not None:
+                raise ValueError(
+                    f"ServerConfig(prefill_worker=True) cannot serve arch "
+                    f"{target.cfg.name!r}: {reason}")
+        if cfg.prefill_mesh is not None:
+            if not cfg.prefill_worker:
+                raise ValueError("ServerConfig(prefill_mesh=...) requires "
+                                 "prefill_worker=True")
+            if tuple(cfg.prefill_mesh) != tuple(cfg.mesh or (1, 1)):
+                raise ValueError(
+                    f"prefill_mesh={tuple(cfg.prefill_mesh)} must equal "
+                    f"mesh={tuple(cfg.mesh or (1, 1))}: the worker writes "
+                    f"the serving pool's own leaves, so its program must "
+                    f"run where they live")
 
         # -- serving mesh (tentpole): partition the tick over (data, model)
         mesh_shape = tuple(cfg.mesh) if cfg.mesh else (1, 1)
@@ -425,6 +494,49 @@ class SpecServer:
             self.d_params = jax.device_put(d_params, self._d_shardings)
             self.state = jax.device_put(self.state, self._state_shardings)
 
+        # -- pipelined tick state (overlap / ring / worker) ----------------
+        self._overlap = cfg.overlap
+        # snapshots of in-flight groups' harvest views, oldest first; with
+        # overlap on, sync() drains all but the newest (still-running) one
+        self._pending: deque = deque()
+        self._stepped = False      # a group was dispatched since last sync
+        self.gather_calls = 0      # finished-row gathers dispatched
+        # ticks x slots that sat idle while admissible work was waiting
+        # (queued or staged) — the ring exists to pin this at zero
+        self.slot_idle_ticks = 0
+        self.ring_refills = 0      # device-side slot refills consumed
+        self._ring = None
+        self._ring_shardings = None
+        self._ring_staged: deque = deque()   # host twins of staged entries
+        self._ring_head_host = 0             # consumptions processed
+        # slots the newest dispatched-but-unprocessed group may refill from
+        # the ring: host admission must not race the device for them (the
+        # double-claim would overwrite the refilled occupant's row)
+        self._refill_inflight: set = set()
+        # per-slot activation epoch: the dispatch index whose group first
+        # ran the slot's CURRENT occupant.  A lagged snapshot (dispatch
+        # idx < activation) predates the occupant — its rows belong to a
+        # predecessor, so the harvest/refresh paths must skip the slot
+        self._step_idx = 0
+        self._slot_active_from = np.zeros((b,), np.int64)
+        if cfg.ring_depth:
+            self._ring = make_ring(cfg.ring_depth, cfg.max_prompt_len,
+                                   self.max_blocks,
+                                   int(self.state.buf.shape[1]))
+            if self.mesh is not None:
+                from repro.launch.shardplan import replicated_shardings
+                self._ring_shardings = replicated_shardings(self._ring,
+                                                            self.mesh)
+                self._ring = jax.device_put(self._ring, self._ring_shardings)
+        self.worker = None
+        if cfg.prefill_worker:
+            self.worker = PrefillWorker(
+                target, cfg.max_prompt_len, mesh=self.mesh,
+                state_shardings=(self._state_shardings
+                                 if self.mesh is not None else None),
+                t_shardings=(self._t_shardings
+                             if self.mesh is not None else None))
+
         self.queue: deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * b
         self.slot_t0 = np.zeros((b,), np.float64)
@@ -472,45 +584,55 @@ class SpecServer:
                 return contextlib.nullcontext()
             return axis_rules(self.rules, mesh=self.mesh)
 
+        # which entries need the cached-prefix machinery (start_pos / COW /
+        # seeded positions): prefix hits, and worker-filled prompts (their
+        # KV arrives exactly like a cached prefix)
+        use_start = self.prefix is not None or self.worker is not None
+        self._use_start = use_start
+        ring_use_start = use_start
+        trash_row = np.asarray(self.trash_ids, np.int32)
+        ring_sps = (self._slots_per_shard if self.data_shards > 1 else None)
+
         def _make_fused(session):
             def _fused_cycles(tp, dp, state, steps):
                 # dynamic trip count: group size varies tick to tick
                 # without recompilation, and the loop exits early
                 # on-device once every slot is finished (a mis-sized
                 # group never burns dead cycles)
-                def cond(carry):
-                    i, st = carry
-                    return (i < steps) & (~DecodeState(*st).finished).any()
-
-                def body(carry):
-                    i, st = carry
-                    return i + 1, tuple(session.cycle(tp, dp,
-                                                      DecodeState(*st)))
-
                 with _rules_ctx():
-                    _, out = jax.lax.while_loop(cond, body,
-                                                (jnp.int32(0),
-                                                 tuple(state)))
-                return DecodeState(*out)
+                    return session.run_group(tp, dp, state, steps)
             return _fused_cycles
 
-        _fused_cycles = _make_fused(self.session)
+        def _make_fused_ring(session):
+            def _fused_ring(tp, dp, state, ring, refillable, steps):
+                # ring-aware group: same fused cycles, plus at most one
+                # device-side slot refill per loop iteration (see
+                # repro.serving.admission_ring for the two-guard contract)
+                with _rules_ctx():
+                    return fused_cycles_with_refill(
+                        session, tp, dp, state, ring, refillable, steps,
+                        trash_ids=jnp.asarray(trash_row),
+                        slots_per_shard=ring_sps,
+                        use_start=ring_use_start)
+            return _fused_ring
+
+        make_cycle = (_make_fused_ring if self._ring is not None
+                      else _make_fused)
+        _fused_cycles = make_cycle(self.session)
 
         def _set_theta_row(state, theta):
             # controller retune: ONE host→device write into the carry's
             # theta row; every other field passes through untouched
             return DecodeState(*state)._replace(theta=theta)
 
-        use_prefix = self.prefix is not None
-
         def _admit_all(tp, dp, state, prompts, plens, smask, budgets, temps,
                        thetas, block_rows, starts, cow_src, cow_dst,
                        win_tokens, win_off):
             kw = {}
-            if use_prefix:
-                # cached-prefix admission: map shared blocks read-only,
-                # COW-clone the partially matching tail, decode only the
-                # un-cached window
+            if use_start:
+                # cached-prefix (or worker-filled) admission: map shared
+                # blocks read-only, COW-clone the partially matching tail,
+                # decode only the un-cached window
                 kw = dict(start_pos=starts, cow_src=cow_src,
                           cow_dst=cow_dst, decode_tokens=win_tokens,
                           decode_off=win_off)
@@ -520,10 +642,39 @@ class SpecServer:
                                             temperature=temps, theta=thetas,
                                             block_rows=block_rows, **kw)
 
-        def _gather_rows(state, idx):
-            return {"buf": state.buf[idx],
-                    "lengths": state.lengths[idx],
-                    "stats": {k: v[idx] for k, v in state.stats.items()}}
+        def _gather_rows(state):
+            # full slot-indexed rows; the host slices the finished slots.
+            # (The old padded-index gather shipped the same bytes — a pad
+            # to ``slots`` rows of buf width — with an extra dispatch axis.)
+            return {"buf": state.buf, "lengths": state.lengths,
+                    "stats": dict(state.stats)}
+
+        def _poll_fields(state):
+            f = {"finished": state.finished, "lengths": state.lengths,
+                 "cycles": state.stats["cycles"],
+                 "commits": state.stats["commits"]}
+            if self.controller is not None:
+                f.update(accepts=state.stats["accepts"],
+                         relaxed=state.stats["relaxed"],
+                         margin=state.stats["margin_ema"])
+            return f
+
+        # overlap snapshots: a NON-donated program whose outputs must be
+        # fresh buffers — jnp.copy on every leaf, because returning the
+        # carry's own arrays would alias buffers the NEXT donated dispatch
+        # deletes, and the host reads snapshots one group late
+        def _snap_state(state):
+            return jax.tree_util.tree_map(jnp.copy, {
+                "poll": _poll_fields(state), "rows": _gather_rows(state)})
+
+        def _snap_ring(state, ring):
+            return jax.tree_util.tree_map(jnp.copy, {
+                "poll": {**_poll_fields(state), "ring_head": ring.head},
+                "rows": _gather_rows(state),
+                "ring": {"h_buf": ring.h_buf, "h_len": ring.h_len,
+                         "h_stats": ring.h_stats, "h_slot": ring.h_slot}})
+
+        _snap = _snap_state if self._ring is None else _snap_ring
 
         # the carry is donated: the jitted program reuses its buffers
         # in place of allocating a fresh carry every dispatch.  On a mesh
@@ -531,28 +682,45 @@ class SpecServer:
         # keeps one stable sharding tree across dispatches, host-built
         # admission arrays (prompts, masks, budgets) land pre-split on
         # "data", and harvest gathers to a replicated (host-readable) tree.
+        # The ring (and every snapshot leaf) is replicated: staged entries
+        # are consumed by whichever shard owns the freed slot.
         if self.mesh is None:
-            self._cycle = jax.jit(_fused_cycles, donate_argnums=(2,))
+            donate = (2,) if self._ring is None else (2, 3)
+            self._cycle = jax.jit(_fused_cycles, donate_argnums=donate)
             self._cycle_short = (
-                jax.jit(_make_fused(self.session_short),
-                        donate_argnums=(2,))
+                jax.jit(make_cycle(self.session_short),
+                        donate_argnums=donate)
                 if self.session_short is not None else None)
             self._prefill = jax.jit(_admit_all, donate_argnums=(2,))
             self._set_theta = jax.jit(_set_theta_row, donate_argnums=(0,))
             self._gather = jax.jit(_gather_rows)
+            self._push = jax.jit(ring_push, donate_argnums=(0,))
+            self._snapshot = jax.jit(_snap)
         else:
             repl = NamedSharding(self.mesh, P())
             row = NamedSharding(self.mesh, P("data"))
             mat = NamedSharding(self.mesh, P("data", None))
-            cycle_shardings = dict(
-                in_shardings=(self._t_shardings, self._d_shardings,
-                              self._state_shardings, repl),
-                out_shardings=self._state_shardings)
-            self._cycle = jax.jit(_fused_cycles, donate_argnums=(2,),
+            if self._ring is None:
+                cycle_shardings = dict(
+                    in_shardings=(self._t_shardings, self._d_shardings,
+                                  self._state_shardings, repl),
+                    out_shardings=self._state_shardings)
+                donate = (2,)
+                snap_in = (self._state_shardings,)
+            else:
+                cycle_shardings = dict(
+                    in_shardings=(self._t_shardings, self._d_shardings,
+                                  self._state_shardings,
+                                  self._ring_shardings, row, repl),
+                    out_shardings=(self._state_shardings,
+                                   self._ring_shardings))
+                donate = (2, 3)
+                snap_in = (self._state_shardings, self._ring_shardings)
+            self._cycle = jax.jit(_fused_cycles, donate_argnums=donate,
                                   **cycle_shardings)
             self._cycle_short = (
-                jax.jit(_make_fused(self.session_short),
-                        donate_argnums=(2,), **cycle_shardings)
+                jax.jit(make_cycle(self.session_short),
+                        donate_argnums=donate, **cycle_shardings)
                 if self.session_short is not None else None)
             self._prefill = jax.jit(
                 _admit_all, donate_argnums=(2,),
@@ -566,8 +734,14 @@ class SpecServer:
                 out_shardings=self._state_shardings)
             self._gather = jax.jit(
                 _gather_rows,
-                in_shardings=(self._state_shardings, repl),
+                in_shardings=(self._state_shardings,),
                 out_shardings=repl)
+            self._push = jax.jit(
+                ring_push, donate_argnums=(0,),
+                in_shardings=(self._ring_shardings,) + (repl,) * 10,
+                out_shardings=self._ring_shardings)
+            self._snapshot = jax.jit(_snap, in_shardings=snap_in,
+                                     out_shardings=repl)
 
     # -- host snapshots of the carry (debug/inspection views).  The carry
     # is donated on every dispatch, so these return fresh host copies — a
@@ -587,7 +761,15 @@ class SpecServer:
 
     @property
     def stats(self):
-        return self._device_get(self.state.stats)
+        d = dict(self._device_get(self.state.stats))
+        # host-side pipeline counters ride along for reporting: idle
+        # slot-ticks while work waited (the ring's zero-idle claim),
+        # finished-row gathers (the sync-gate regression), and device-side
+        # refills consumed
+        d["slot_idle_ticks"] = self.slot_idle_ticks
+        d["gather_calls"] = self.gather_calls
+        d["ring_refills"] = self.ring_refills
+        return d
 
     def _device_get(self, tree):
         """Single funnel for device→host transfers (counted)."""
@@ -637,6 +819,36 @@ class SpecServer:
         return False
 
     def _admit(self):
+        """Admission pass: fill refillable slots host-side (one batched
+        prefill), then — with the device-side ring on — stage head-of-queue
+        requests on device so mid-group finishers refill without waiting
+        for the next sync."""
+        self._admit_free_slots()
+        if self._ring is not None:
+            self._stage_ring()
+
+    def _free_slot_order(self, free: List[int]) -> List[int]:
+        """Cross-shard work stealing (``shard_steal``): visit free slots in
+        order of their shard's live-request load (fewest first), breaking
+        ties toward more pool headroom, then slot id.  A data shard whose
+        requests all drained early therefore takes the head of the queue
+        even when the request would "belong" to a loaded shard — FIFO over
+        requests is untouched, only the admitting slot changes.  Off (or
+        single-shard), admission scans slots in id order exactly as
+        before."""
+        if not self.cfg.shard_steal or self.data_shards <= 1:
+            return free
+        live = [0] * self.data_shards
+        for s in range(self.cfg.slots):
+            if self.slot_req[s] is not None and not self._finished_host[s]:
+                live[s // self._slots_per_shard] += 1
+        avail = [self.pool.available(sh) if self.pool is not None else 0
+                 for sh in range(self.data_shards)]
+        return sorted(free, key=lambda s: (
+            live[s // self._slots_per_shard],
+            -avail[s // self._slots_per_shard], s))
+
+    def _admit_free_slots(self):
         """Admit queued requests into refillable slots with ONE slot-masked
         prefill call (no per-request dispatch, no host reads: refillable
         slots are known from the last sync's ``finished`` poll).
@@ -657,9 +869,11 @@ class SpecServer:
         published immediately after the dispatch."""
         b = self.cfg.slots
         free = [s for s in range(b)
-                if self._finished_host[s] and self.slot_req[s] is None]
+                if self._finished_host[s] and self.slot_req[s] is None
+                and s not in self._refill_inflight]
         if not free or not self.queue:
             return
+        free = self._free_slot_order(free)
         if len(free) < min(len(self.queue), b):
             active = [int(self.slot_remaining[s]) for s in range(b)
                       if self.slot_req[s] is not None
@@ -682,6 +896,10 @@ class SpecServer:
         rows = np.tile(self.trash_ids.astype(np.int32)[:, None],
                        (1, self.max_blocks))
         starts = np.zeros((b,), np.int32)
+        # device starts vs ledger starts diverge under the prefill worker:
+        # the device seeds everything the worker wrote (narrow window), the
+        # ledgers keep counting only the SHARED tokens as skipped work
+        match_starts = np.zeros((b,), np.int32)
         cow_src = self.trash_ids.astype(np.int32).copy()
         cow_dst = self.trash_ids.astype(np.int32).copy()
         pending: dict = {}             # shard -> [(ptoks, plen)] cold this pass
@@ -717,7 +935,7 @@ class SpecServer:
                         # shared blocks are counted ONCE in pool headroom:
                         # they are referenced, not allocated
                         self.pool.acquire(shared)
-                blocks = self._pool_alloc(need - len(shared), slot)
+                blocks = self._pool_alloc(need - len(shared), shard)
                 if blocks is None:
                     if shared:
                         self.pool.free(shared)
@@ -729,6 +947,7 @@ class SpecServer:
                 rows[slot, :len(table)] = table
                 if match is not None and match.hit:
                     starts[slot] = match.tokens
+                    match_starts[slot] = match.tokens
                     if match.cow is not None:
                         # first write into the shared tail block must not
                         # land: clone it into the slot's first private
@@ -740,6 +959,26 @@ class SpecServer:
                     self.prefix.record_admission(match, usable)
                     pending.setdefault(shard, []).append((ptoks, plen))
                     admitted.append((slot, ptoks, plen, shard))
+                if self.worker is not None:
+                    # disaggregated prefill: fill [starts, usable) into the
+                    # slot's blocks with the worker program BEFORE the
+                    # admission pass, then hand the warm table over exactly
+                    # like a cached prefix — the batched decode window no
+                    # longer widens for this cold prompt.  The worker owns
+                    # the COW clone, so admission must NOT re-clone (it
+                    # would overwrite the worker's rows in that block).
+                    w_usable = self._usable_prefix(plen)
+                    if w_usable > int(starts[slot]):
+                        tok_row = np.zeros((s_len,), np.int32)
+                        tok_row[:plen] = req.prompt[:plen]
+                        self.state = self.worker.fill(
+                            self.t_params, self.state, tok_row, rows[slot],
+                            int(starts[slot]), w_usable,
+                            int(cow_src[slot]), int(cow_dst[slot]),
+                            int(self.trash_ids[slot]))
+                        starts[slot] = w_usable
+                        cow_src[slot] = self.trash_ids[slot]
+                        cow_dst[slot] = self.trash_ids[slot]
             self.queue.popleft()
             prompts[slot, :plen] = req.prompt[:plen]
             plens[slot] = plen
@@ -759,8 +998,13 @@ class SpecServer:
                 req.params.max_tokens,
                 self.cfg.max_len - plen)       # buffer-room bound
             self._finished_host[slot] = False
-            self.slot_start[slot] = int(starts[slot])
-            self.prefill_tokens += max(plen - 1 - int(starts[slot]), 0)
+            # active from the NEXT dispatch: snapshots of earlier groups
+            # predate this occupant
+            self._slot_active_from[slot] = self._step_idx
+            self.slot_start[slot] = int(match_starts[slot])
+            # useful positions decoded for this request (worker-filled
+            # positions count: they are decoded, just off the batched pass)
+            self.prefill_tokens += max(plen - 1 - int(match_starts[slot]), 0)
             # prefill resets the admitted rows' device stats to zero
             self._last_cycles[slot] = 0
             self._last_commits[slot] = 0
@@ -768,7 +1012,7 @@ class SpecServer:
             return                       # pool exhausted before any admit
         # decode window: the un-cached tail across all admitted rows,
         # width-bucketed (multiples of 32) to bound jit specialisations
-        if self.prefix is not None:
+        if self._use_start:
             min_start = min(int(starts[s]) for s in range(b) if smask[s])
             w = min(s_len, max(-(-(s_len - min_start) // 32) * 32, 1))
             off = s_len - w
@@ -790,12 +1034,133 @@ class SpecServer:
             self.prefix.publish(ptoks[:plen - 1], self.slot_blocks[slot],
                                 shard)
 
-    def _pool_alloc(self, n: int, slot: int):
-        """Allocate ``n`` blocks for ``slot`` — from the data shard that
-        owns the slot when the pool is sharded (carry rows are partitioned
-        contiguously, so the owning shard is ``slot // slots_per_shard``)."""
+    def _stage_shard(self) -> int:
+        """Data shard the next staged entry binds to: fewest outstanding
+        staged entries first (the ring drains round-robin under balanced
+        load), then most pool headroom — the stealing policy again, applied
+        to staging."""
+        if self.data_shards == 1:
+            return 0
+        counts = [0] * self.data_shards
+        for ent in self._ring_staged:
+            counts[ent.shard] += 1
+        avail = [self.pool.available(sh) if self.pool is not None else 0
+                 for sh in range(self.data_shards)]
+        return min(range(self.data_shards),
+                   key=lambda sh: (counts[sh], -avail[sh], sh))
+
+    def _stage_ring(self):
+        """Stage head-of-queue requests into the device-side admission ring
+        (host half): allocate their blocks NOW (worst-case reservation, so
+        a mid-group refill never allocates), prefix-match against the
+        published index, optionally worker-fill the prompt body, and push
+        the entry on-device.  The fused group consumes entries into freed
+        slots mid-group; the host learns about each consumption from the
+        polled ring head and finishes the bookkeeping in ``sync``.
+
+        Staged entries match only ALREADY-published prefixes — two staged
+        siblings cannot share blocks with each other (publication happens
+        at consumption), so a shared-prefix burst deeper than the free
+        slots pays a duplicate cold prefill instead of deferring.  FIFO
+        over requests is preserved: the queue head is staged first."""
+        depth = self.cfg.ring_depth
+        s_len = self.cfg.max_prompt_len
+        while self.queue and len(self._ring_staged) < depth:
+            req = self.queue[0]
+            plen = min(len(req.prompt), s_len)
+            shard = self._stage_shard()
+            start = 0              # device start (seeded positions)
+            match_start = 0        # shared tokens (ledger)
+            cow_src = cow_dst = NO_COW
+            table: List[int] = []
+            if self.pool is not None:
+                need = self._blocks_needed(plen, req.params.max_tokens)
+                shared: List[int] = []
+                match = None
+                ptoks = np.asarray(req.prompt[:plen], np.int32)
+                usable = self._usable_prefix(plen)
+                if self.prefix is not None:
+                    match = self.prefix.match(ptoks, usable, shard)
+                    shared = list(match.blocks)
+                    if shared:
+                        self.pool.acquire(shared)
+                blocks = self._pool_alloc(need - len(shared), shard)
+                if blocks is None and self.data_shards > 1:
+                    # stealing, staging flavour: the preferred shard is
+                    # short — retry the others (most headroom first)
+                    for alt in sorted(
+                            range(self.data_shards),
+                            key=lambda sh: -self.pool.available(sh)):
+                        if alt == shard:
+                            continue
+                        blocks = self._pool_alloc(need - len(shared), alt)
+                        if blocks is not None and self.prefix is not None:
+                            # shared blocks are shard-local: re-match on
+                            # the shard that actually has room
+                            if shared:
+                                self.pool.free(shared)
+                            match = self.prefix.match(ptoks, usable, alt)
+                            shared = list(match.blocks)
+                            if shared:
+                                self.pool.acquire(shared)
+                        if blocks is not None:
+                            shard = alt
+                            break
+                if blocks is None:
+                    if shared:
+                        self.pool.free(shared)
+                    break          # pool-starved: keep FIFO, stop staging
+                table = shared + blocks
+                if match is not None and match.hit:
+                    start = match_start = match.tokens
+                    if match.cow is not None:
+                        assert blocks, "COW needs a private block"
+                        cow_src = int(match.cow[0])
+                        cow_dst = int(blocks[0])
+                if self.prefix is not None:
+                    self.prefix.record_admission(match, usable)
+            tok_row = np.zeros((s_len,), np.int32)
+            tok_row[:plen] = req.prompt[:plen]
+            if self.worker is not None:
+                usable = self._usable_prefix(plen)
+                if usable > start:
+                    trash = int(self.trash_ids[shard
+                                               * self._slots_per_shard])
+                    row_np = np.full((self.max_blocks,), trash, np.int32)
+                    row_np[:len(table)] = table
+                    self.state = self.worker.fill(
+                        self.t_params, self.state, tok_row, row_np, start,
+                        usable,
+                        cow_src if cow_src != NO_COW else trash,
+                        cow_dst if cow_dst != NO_COW else trash, trash)
+                    start = usable
+                    cow_src = cow_dst = NO_COW
+            th = (req.params.theta if req.params.theta is not None
+                  else self.ecfg.theta)
+            if self.controller is not None:
+                th = self.controller.clamp(th)
+            trash = int(self.trash_ids[shard * self._slots_per_shard])
+            row_np = np.full((self.max_blocks,), trash, np.int32)
+            row_np[:len(table)] = table
+            self._ring = self._push(
+                self._ring, tok_row, np.int32(plen),
+                np.int32(req.params.max_tokens),
+                np.float32(req.params.temperature), np.float32(th),
+                np.int32(start), row_np, np.int32(cow_src),
+                np.int32(cow_dst), np.int32(shard))
+            self._ring_staged.append(_StagedEntry(
+                req=req, ptoks=tok_row, plen=plen, blocks=table,
+                shard=shard, match_start=match_start, theta=float(th),
+                t0=time.time()))
+            self.prefill_tokens += max(plen - 1 - match_start, 0)
+            self.queue.popleft()
+
+    def _pool_alloc(self, n: int, shard: int):
+        """Allocate ``n`` blocks from ``shard``'s pool partition (the data
+        shard owning the admitting slot: ``slot // slots_per_shard``), so a
+        slot only ever references shard-local blocks."""
         if self.data_shards > 1:
-            return self.pool.alloc(n, slot // self._slots_per_shard)
+            return self.pool.alloc(n, shard)
         return self.pool.alloc(n)
 
     def _blocks_needed(self, plen: int, max_tokens: int) -> int:
@@ -832,11 +1197,22 @@ class SpecServer:
         active = [int(self.slot_remaining[s])
                   for s in range(self.cfg.slots)
                   if self.slot_req[s] is not None and not self._finished_host[s]]
+        staged_n = len(self._ring_staged) if self._ring is not None else 0
+        if staged_n:
+            # staged entries join the group mid-flight: size for them too
+            # (each refill consumes one loop iteration before its cycles)
+            active += [min(ent.req.params.max_tokens,
+                           self.cfg.max_len - ent.plen)
+                       for ent in self._ring_staged]
         if not active:
             return 1
         tau = min(max(self._tau_est, 1.0), float(w))
-        steps = max(1, int(np.ceil(min(active) / tau)))
-        if self.ecfg.eos_token is not None:
+        steps = max(1, int(np.ceil(min(active) / tau))) + staged_n
+        if self.ecfg.eos_token is not None and staged_n == 0:
+            # the on-device "earliest possible EOS" logic inverts the old
+            # cap: with entries staged, an early EOS frees a slot the ring
+            # refills immediately, so the group may fuse PAST
+            # steps_per_sync — the host has nothing to do at the boundary
             steps = min(steps, max(1, self.cfg.steps_per_sync))
         return steps
 
@@ -853,20 +1229,76 @@ class SpecServer:
         """One scheduler tick: dispatch one fused group of verify cycles
         (adaptively sized, see :meth:`_group_size`).  Budget exhaustion,
         EOS, and buffer limits all flip ``finished`` inside the jitted
-        program — no device→host transfer happens here."""
-        if all(r is None for r in self.slot_req):
+        program — no device→host transfer happens here (with ``overlap``
+        on, not even implicitly: the harvest snapshot is dispatched, held
+        as device handles, and read one group later in ``sync``)."""
+        staged_n = len(self._ring_staged) if self._ring is not None else 0
+        if all(r is None for r in self.slot_req) and staged_n == 0:
             return                      # nothing in flight: no dispatch
+        # idle accounting: slots that enter this group empty while
+        # admissible work is waiting.  With the ring on, up to ``staged_n``
+        # of them are refilled by the device at the group's first
+        # iteration, so only the excess idles.
+        if self.queue or staged_n:
+            empty = sum(1 for r in self.slot_req if r is None)
+            self.slot_idle_ticks += max(0, empty - staged_n)
         self.step_calls += 1
+        idx = self._step_idx
+        self._step_idx += 1
         cycle = (self._cycle if self._active_session() is self.session
                  else self._cycle_short)
-        self.state = cycle(self.t_params, self.d_params, self.state,
-                           np.int32(self._group_size()))
+        steps = np.int32(self._group_size())
+        if self._ring is None:
+            self.state = cycle(self.t_params, self.d_params, self.state,
+                               steps)
+        else:
+            # harvested (host-processed) slots are safe for the device to
+            # refill from iteration 0; unharvested finished slots stay
+            # frozen until the lagged snapshot that holds them is read
+            refillable = np.array([r is None for r in self.slot_req], bool)
+            # under overlap this dispatch outlives the next _admit: the
+            # device owns every refillable slot until its snapshot is
+            # processed, so host admission must skip them (no double-claim)
+            self._refill_inflight = (
+                set(np.flatnonzero(refillable).tolist())
+                if self._overlap and staged_n else set())
+            self.state, self._ring = cycle(self.t_params, self.d_params,
+                                           self.state, self._ring,
+                                           refillable, steps)
+        if self._overlap:
+            snap = dict(self._snapshot(self.state) if self._ring is None
+                        else self._snapshot(self.state, self._ring))
+            snap["idx"] = idx
+            self._pending.append(snap)
+            self._stepped = True
 
-    def sync(self):
-        """The only point where the host observes the carry: one poll of
-        the finished flags + lengths (refreshing the group-sizing bounds),
-        then harvest all newly finished rows with a single gathered
-        ``device_get``."""
+    def sync(self, *, flush: bool = False):
+        """The only point where the host observes the carry.
+
+        Serial mode: one poll of the finished flags + lengths (refreshing
+        the group-sizing bounds), then — only when something finished — a
+        single gathered ``device_get`` of the full slot rows.
+
+        Overlap mode: ``step()`` left one snapshot per dispatched group in
+        ``_pending``; this drains every snapshot EXCEPT the newest one
+        when a group was just dispatched (``flush=True`` drains that too).
+        Reading a snapshot's poll blocks only until ITS group completed —
+        the newer in-flight group keeps the drafter busy while the older
+        harvest crosses to the host.  Finished rows frozen by the cycle
+        stay bit-stable, so a one-group-late harvest reads the same
+        tokens the serial tick would have."""
+        if self._overlap:
+            keep = 1 if (self._stepped and not flush) else 0
+            self._stepped = False
+            while len(self._pending) > keep:
+                snap = self._pending.popleft()
+                poll = self._device_get(snap["poll"])
+                self._apply_poll(
+                    poll, lambda: self._device_get(snap["rows"]),
+                    (lambda: self._device_get(snap["ring"]))
+                    if "ring" in snap else None,
+                    idx=snap["idx"])
+            return
         fields = {"finished": self.state.finished,
                   "lengths": self.state.lengths,
                   "cycles": self.state.stats["cycles"],
@@ -876,10 +1308,40 @@ class SpecServer:
             fields.update(accepts=self.state.stats["accepts"],
                           relaxed=self.state.stats["relaxed"],
                           margin=self.state.stats["margin_ema"])
+        if self._ring is not None:
+            fields["ring_head"] = self._ring.head
         poll = self._device_get(fields)
+        self._apply_poll(
+            poll, lambda: self._device_get(self._gather(self.state)),
+            (lambda: self._device_get(
+                {"h_buf": self._ring.h_buf, "h_len": self._ring.h_len,
+                 "h_stats": self._ring.h_stats,
+                 "h_slot": self._ring.h_slot}))
+            if self._ring is not None else None,
+            idx=self._step_idx - 1)
+
+    def _apply_poll(self, poll, fetch_rows, fetch_ring, *, idx):
+        """Process the completed poll of the group dispatched at ``idx``:
+        ring consumptions first (they re-seat slots, so the per-slot
+        refresh below sees the NEW occupants), then the tau/remaining
+        refresh, then harvest of finished rows via ``fetch_rows`` (one
+        lazy transfer, dispatched only when >= 1 slot finished), then the
+        controller retune.  Slots whose occupant activated AFTER ``idx``
+        are skipped everywhere: the snapshot's rows and stats belong to a
+        harvested predecessor, not to them."""
         self._finished_host = np.array(poll["finished"])  # writable copy
+        if fetch_ring is not None:
+            self._consume_ring(poll, fetch_ring, idx)
+        fresh = [self._slot_active_from[s] <= idx
+                 for s in range(self.cfg.slots)]
         d_cycles = d_commits = 0
         for s in range(self.cfg.slots):
+            if not fresh[s]:
+                # the occupant postdates this snapshot: it is still
+                # running whatever the stale finished flag says
+                if self.slot_req[s] is not None:
+                    self._finished_host[s] = False
+                continue
             if self.slot_req[s] is not None:
                 req = self.slot_req[s]
                 produced = int(poll["lengths"][s]) - int(self.slot_base_len[s])
@@ -895,26 +1357,26 @@ class SpecServer:
             obs = d_commits / d_cycles
             self._tau_est = 0.5 * self._tau_est + 0.5 * max(obs, 0.1)
         done = [s for s in range(self.cfg.slots)
-                if self._finished_host[s] and self.slot_req[s] is not None]
+                if fresh[s] and self._finished_host[s]
+                and self.slot_req[s] is not None]
         if not done:
-            self._retune(poll)
+            # no finisher: the gather (and its D2H bytes) is skipped
+            self._retune(poll, fresh)
             return
-        # fixed-size index (pad with the first entry) so the gather has one
-        # shape for any number of finished slots — a single compiled program
-        pad = done + [done[0]] * (self.cfg.slots - len(done))
-        rows = self._device_get(
-            self._gather(self.state, np.asarray(pad, np.int32)))
+        rows = fetch_rows()
+        self.gather_calls += 1
         now = time.time()
-        for j, slot in enumerate(done):
+        for slot in done:
             req = self.slot_req[slot]
             base = int(self.slot_base_len[slot])
-            toks = rows["buf"][j, base:int(rows["lengths"][j])]
+            length = int(rows["lengths"][slot])
+            toks = rows["buf"][slot, base:length]
             self._responses.append(Response(
                 uid=req.uid, tokens=np.asarray(toks),
-                n_cycles=int(rows["stats"]["cycles"][j]),
-                n_committed=int(rows["stats"]["commits"][j]),
+                n_cycles=int(rows["stats"]["cycles"][slot]),
+                n_committed=int(rows["stats"]["commits"][slot]),
                 latency_s=now - self.slot_t0[slot],
-                n_accepted=int(rows["stats"]["accepts"][j])))
+                n_accepted=int(rows["stats"]["accepts"][slot])))
             self.slot_req[slot] = None
             if self.pool is not None and self.slot_blocks[slot]:
                 if self.prefix is not None:
@@ -923,9 +1385,8 @@ class SpecServer:
                     # committed chain's KV (the pending token and any
                     # rejected-draft stale rows lie beyond), so only those
                     # full blocks are content-addressable
-                    length = int(rows["lengths"][j])
                     committed = np.asarray(
-                        rows["buf"][j, :max(length - 1, 0)], np.int32)
+                        rows["buf"][slot, :max(length - 1, 0)], np.int32)
                     self.prefix.publish(committed, self.slot_blocks[slot],
                                         slot // self._slots_per_shard)
                 # block-list truncate at its terminal point: the finished
@@ -935,21 +1396,89 @@ class SpecServer:
                 # admission)
                 self.pool.free(self.slot_blocks[slot])
                 self.slot_blocks[slot] = []
-        self._retune(poll)
+        self._retune(poll, fresh)
 
-    def _retune(self, poll):
+    def _consume_ring(self, poll, fetch_ring, idx):
+        """Finish the host half of every ring consumption this poll
+        reveals: emit the evicted occupant's response from the harvest
+        record the device wrote at refill time, release its blocks, then
+        install the staged request in the slot's host ledgers and publish
+        its prompt blocks (the poll proves the refill prefill completed,
+        so the blocks hold committed content)."""
+        consumed = int(poll["ring_head"]) - self._ring_head_host
+        if consumed <= 0:
+            return
+        ring = fetch_ring()
+        now = time.time()
+        depth = self.cfg.ring_depth
+        b = self.cfg.slots
+        for _ in range(consumed):
+            e = self._ring_head_host % depth
+            ent = self._ring_staged.popleft()
+            slot = int(ring["h_slot"][e])
+            old = self.slot_req[slot]
+            if old is not None:
+                # evicted occupant: response + publish + free, all from
+                # the device-written harvest record (the slot's live row
+                # now belongs to the staged request)
+                h_len = int(ring["h_len"][e])
+                base = int(self.slot_base_len[slot])
+                self._responses.append(Response(
+                    uid=old.uid,
+                    tokens=np.asarray(ring["h_buf"][e, base:h_len]),
+                    n_cycles=int(ring["h_stats"]["cycles"][e]),
+                    n_committed=int(ring["h_stats"]["commits"][e]),
+                    latency_s=now - self.slot_t0[slot],
+                    n_accepted=int(ring["h_stats"]["accepts"][e])))
+                if self.pool is not None and self.slot_blocks[slot]:
+                    if self.prefix is not None:
+                        committed = np.asarray(
+                            ring["h_buf"][e, :max(h_len - 1, 0)], np.int32)
+                        self.prefix.publish(committed,
+                                            self.slot_blocks[slot],
+                                            slot // self._slots_per_shard)
+                    self.pool.free(self.slot_blocks[slot])
+                    self.slot_blocks[slot] = []
+            # seat the staged request (device side already prefilled it);
+            # the refill happened inside THIS snapshot's group, so the
+            # occupant is fresh for this very poll (harvestable now if it
+            # also finished in-group)
+            self._slot_active_from[slot] = idx
+            self.slot_req[slot] = ent.req
+            self.slot_blocks[slot] = ent.blocks
+            self.slot_t0[slot] = ent.t0
+            self.slot_base_len[slot] = ent.plen
+            self.slot_remaining[slot] = min(ent.req.params.max_tokens,
+                                            self.cfg.max_len - ent.plen)
+            self.slot_start[slot] = ent.match_start
+            self.slot_theta[slot] = ent.theta
+            self._last_cycles[slot] = 0
+            self._last_commits[slot] = 0
+            # the in-loop refill decodes the full (slots, max_prompt_len)
+            # masked window — count the batched compute honestly
+            self.prefill_window_tokens += b * self.cfg.max_prompt_len
+            if self.prefix is not None:
+                self.prefix.publish(ent.ptoks[:ent.plen - 1], ent.blocks,
+                                    ent.shard)
+            self._ring_head_host += 1
+            self.ring_refills += 1
+
+    def _retune(self, poll, fresh=None):
         """Controller pass at the sync boundary: retune every live slot's
         theta from stats the poll already transferred, then (only when
         something actually moved) dispatch ONE host→device write into the
         carry's theta row.  Runs strictly between fused groups, so the
         sync-free tick contract is untouched — ``step()`` still performs
         zero device→host transfers, and ``host_syncs`` does not grow here
-        (the retune is a host→device scatter, the cheap direction)."""
+        (the retune is a host→device scatter, the cheap direction).
+        ``fresh`` masks out slots whose occupant postdates the poll (their
+        stats rows belong to a predecessor)."""
         if self.controller is None:
             return
         live = [s for s in range(self.cfg.slots)
                 if self.slot_req[s] is not None
-                and not self._finished_host[s]]
+                and not self._finished_host[s]
+                and (fresh is None or fresh[s])]
         if self.session_short is not None:
             # width bucket for the NEXT group: commits/cycle ~ accepts/cycle
             # + 1 correction token, so tau-1 estimates draft acceptance
@@ -976,10 +1505,14 @@ class SpecServer:
 
     def run(self, *, max_ticks: int = 10_000) -> List[Response]:
         for _ in range(max_ticks):
-            if not self.queue and all(r is None for r in self.slot_req):
+            if (not self.queue and all(r is None for r in self.slot_req)
+                    and not self._pending
+                    and not (self._ring is not None and self._ring_staged)):
                 break
             self._admit()
             self.step()
             self.sync()
+        if self._overlap and self._pending:
+            self.sync(flush=True)       # drain the final in-flight group
         out, self._responses = self._responses, []
         return out

@@ -202,6 +202,16 @@ def main():
     for mesh, cache, prefix, kv, case_reqs, ref, extra in cases:
         run_case(setup, mesh, cache, prefix, kv, case_reqs, ref, extra)
 
+    # the full pipelined tick on the full mesh: double-buffered overlap,
+    # replicated admission ring (entries bound to one data shard each),
+    # and the disaggregated prefill worker, all under the same zero-
+    # transfer guard and offline parity bar as the serial cases
+    pipelined = {"overlap": True, "ring_depth": 4, "prefill_worker": True}
+    pipe_srv = run_case(setup, (2, 2), "paged", "on", "bf16", shared_reqs,
+                        offline_shared, pipelined, label="pipelined")
+    assert pipe_srv.ring_refills >= 1, pipe_srv.ring_refills
+    assert pipe_srv.worker.stats["fills"] >= 1, pipe_srv.worker.stats
+
     # every-family paging on the full (2,2) mesh: the hybrid pages only
     # its attention sub-cache (mamba leaves stay dense, sharded with the
     # carry) and the sliding-window target wraps a window-bounded ring —

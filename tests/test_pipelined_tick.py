@@ -1,0 +1,226 @@
+"""Pipelined-tick tests: overlap, admission ring, prefill worker.
+
+The pipelined tick (``docs/ARCHITECTURE.md``, "Pipelined tick") changes
+WHEN work happens — groups double-buffered, slots refilled on device
+mid-group, cold prompts prefilled by a detached worker program — but
+must never change WHAT is produced: every configuration below is
+checked token-identical against the serial tick (greedy).  The
+remaining tests pin the host-visible wins: no device→host transfer in
+``step()`` even with snapshots in flight, zero idle slot-ticks under a
+saturated queue, harvest gathers skipped when no slot finished, and an
+admission decode window that no longer widens for cold prompts.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.core import (EagleDrafter, EngineConfig, IndependentDrafter,
+                        init_eagle_params)
+from repro.models import build_model
+from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
+                        n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=cfg.vocab_size, dtype="float32")
+    drf = build_model(d_cfg)
+    return (cfg, tgt, drf, tgt.init(jax.random.PRNGKey(1)),
+            drf.init(jax.random.PRNGKey(2)))
+
+
+def _requests(cfg, n, seed=17, budgets=(3, 7, 13), plen_hi=13):
+    """Mixed prompts with budgets % (K+1) != 0, so slots finish mid-cycle
+    and the commit rollback (index rewind) runs on every path."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, plen_hi))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(3, cfg.vocab_size,
+                                size=plen).astype(np.int32),
+            params=SamplingParams(max_tokens=int(budgets[i % len(budgets)]))))
+    return reqs
+
+
+def _serve(setup, reqs, *, topology="chain", k=3, slots=2,
+           max_prompt_len=12, **scfg):
+    cfg, tgt, drf, tp, dp = setup
+    if topology == "tree":
+        drafter = EagleDrafter(tgt, k=k, temperature=0.0)
+        dp = init_eagle_params(cfg, jax.random.PRNGKey(2))
+    else:
+        drafter = IndependentDrafter(drf, k=k, temperature=0.0)
+    server = SpecServer(
+        tgt, drafter, tp, dp,
+        EngineConfig(k=k, rule="mars", mode="greedy", temperature=0.0,
+                     topology=topology),
+        ServerConfig(slots=slots, max_len=96,
+                     max_prompt_len=max_prompt_len, steps_per_sync=3,
+                     **scfg))
+    for r in reqs:
+        server.submit(r)
+    out = {r.uid: r for r in server.run()}
+    assert sorted(out) == sorted(r.uid for r in reqs)
+    return server, out
+
+
+def _assert_parity(piped, serial):
+    for uid in sorted(serial):
+        np.testing.assert_array_equal(piped[uid].tokens, serial[uid].tokens,
+                                      err_msg=f"req {uid}")
+
+
+@pytest.mark.parametrize("variant", [
+    pytest.param(dict(topology="chain"), id="chain-dense"),
+    pytest.param(dict(topology="chain", cache="paged"), id="chain-paged"),
+    pytest.param(dict(topology="chain", cache="paged", kv_dtype="int8"),
+                 id="chain-paged-int8"),
+    pytest.param(dict(topology="tree", cache="paged"), id="tree-paged"),
+])
+def test_overlap_ring_matches_serial(setup, variant):
+    """Double-buffered overlap + device-side ring refill vs the serial
+    tick: token-identical per request on dense, paged, quantized-paged,
+    and tree-topology configurations (greedy)."""
+    reqs = _requests(setup[0], 8)
+    _, serial = _serve(setup, reqs, **variant)
+    srv, piped = _serve(setup, reqs, overlap=True, ring_depth=3, **variant)
+    _assert_parity(piped, serial)
+    assert srv.ring_refills > 0          # the ring actually carried admits
+
+
+def test_step_transfer_free_under_overlap(setup):
+    """With double-buffering on, ``step()`` must still perform zero
+    device→host transfers: the harvest snapshot is dispatched and held as
+    device handles, never read inside the tick."""
+    cfg = setup[0]
+    reqs = _requests(cfg, 10, seed=23)
+    _, serial = _serve(setup, reqs, slots=2)
+
+    cfg_, tgt, drf, tp, dp = setup
+    server = SpecServer(
+        tgt, IndependentDrafter(drf, k=3, temperature=0.0), tp, dp,
+        EngineConfig(k=3, rule="mars", mode="greedy", temperature=0.0),
+        ServerConfig(slots=2, max_len=96, max_prompt_len=12,
+                     steps_per_sync=3, overlap=True, ring_depth=3))
+    for r in reqs:
+        server.submit(r)
+
+    real_device_get = jax.device_get
+
+    def forbidden(*a, **kw):
+        raise AssertionError("device→host transfer inside step()")
+
+    for _ in range(10_000):
+        if (not server.queue and all(r is None for r in server.slot_req)
+                and not server._pending and not server._ring_staged):
+            break
+        server._admit()
+        syncs_before = server.host_syncs
+        jax.device_get = forbidden
+        try:
+            with jax.transfer_guard_device_to_host("disallow"):
+                server.step()
+        finally:
+            jax.device_get = real_device_get
+        assert server.host_syncs == syncs_before
+        server.sync()
+    if server._pending:
+        server.sync(flush=True)
+    piped = {r.uid: r for r in server.run()}
+    _assert_parity(piped, serial)
+
+
+def test_ring_saturation_no_idle_slots(setup):
+    """16 requests over 4 slots with the ring staged ahead: every slot
+    freed mid-group is refilled by the device in the same group, so no
+    tick ever runs with an empty slot while work is queued — and the
+    small mixed budgets exercise rollback-after-refill (a refilled slot
+    rewinds its fresh cache indices on rejected drafts)."""
+    reqs = _requests(setup[0], 16, seed=31)
+    _, serial = _serve(setup, reqs, slots=4)
+    srv, piped = _serve(setup, reqs, slots=4, overlap=True, ring_depth=4)
+    _assert_parity(piped, serial)
+    assert srv.ring_refills > 0
+    assert srv.slot_idle_ticks == 0
+    assert srv.stats["slot_idle_ticks"] == 0
+
+
+def test_prefill_worker_handoff_parity(setup):
+    """Disaggregated prefill: the worker fills pool blocks off the decode
+    path and hands the warm table to admission like a cached prefix.
+    Tokens must match the serial no-worker server exactly, every cold
+    admit must route through the worker, and the batched admission decode
+    window must be NARROWER than the no-worker run (it covers only the
+    pending tail, not the whole cold prompt)."""
+    cfg = setup[0]
+    rng = np.random.default_rng(41)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(3, cfg.vocab_size,
+                                        size=40).astype(np.int32),
+                    params=SamplingParams(max_tokens=8))
+            for i in range(2)]
+    base_srv, base = _serve(setup, reqs, cache="paged", max_prompt_len=48)
+    wrk_srv, out = _serve(setup, reqs, cache="paged", max_prompt_len=48,
+                          prefill_worker=True)
+    _assert_parity(out, base)
+    assert wrk_srv.worker is not None
+    assert wrk_srv.worker.stats["fills"] == len(reqs)
+    assert wrk_srv.worker.stats["filled_tokens"] > 0
+    # same admissions, narrower window: the worker took the prompt body
+    # off the batched pass
+    assert wrk_srv.prefill_window_tokens < base_srv.prefill_window_tokens
+
+
+def test_worker_rejected_off_paged(setup):
+    """The worker hands off physical pool blocks; a dense cache has none,
+    so the config must be rejected at construction, not at runtime."""
+    cfg, tgt, drf, tp, dp = setup
+    with pytest.raises(ValueError, match="prefill"):
+        SpecServer(
+            tgt, IndependentDrafter(drf, k=3, temperature=0.0), tp, dp,
+            EngineConfig(k=3, rule="mars", mode="greedy", temperature=0.0),
+            ServerConfig(slots=2, max_len=96, max_prompt_len=12,
+                         prefill_worker=True))
+
+
+def test_gather_only_when_finished(setup):
+    """Regression for the unconditional-harvest transfer: ``sync`` must
+    dispatch the full-row gather only when the poll shows >= 1 finished
+    occupant.  A no-finisher sync pays the poll alone."""
+    cfg, tgt, drf, tp, dp = setup
+    server = SpecServer(
+        tgt, IndependentDrafter(drf, k=3, temperature=0.0), tp, dp,
+        EngineConfig(k=3, rule="mars", mode="greedy", temperature=0.0,
+                     eos_token=1),       # caps groups at steps_per_sync
+        ServerConfig(slots=2, max_len=96, max_prompt_len=12,
+                     steps_per_sync=2))
+    for r in _requests(cfg, 4, seed=53, budgets=(13, 9)):
+        server.submit(r)
+    n_syncs = harvesting_syncs = 0
+    for _ in range(10_000):
+        if not server.queue and all(r is None for r in server.slot_req):
+            break
+        server._admit()
+        server.step()
+        before_gather = server.gather_calls
+        before_resp = len(server._responses)
+        server.sync()
+        n_syncs += 1
+        grew = len(server._responses) > before_resp
+        # the gather runs exactly when the sync harvested something
+        assert (server.gather_calls - before_gather) == (1 if grew else 0)
+        harvesting_syncs += int(grew)
+    assert server.gather_calls == harvesting_syncs
+    # groups are EOS-capped below the budget bound, so some syncs MUST
+    # have polled without harvesting — i.e. the gather was skipped
+    assert server.gather_calls < n_syncs
+    assert len(server.run()) == 4
