@@ -1071,6 +1071,120 @@ def pipelined(target, t_params, draft, d_params, *, quick, use_worker,
 
 
 # ---------------------------------------------------------------------------
+# Telemetry overhead: the observability stack must ride the existing polls
+# ---------------------------------------------------------------------------
+
+def telemetry_overhead(target, t_params, draft, d_params, *, quick, k=3,
+                       metrics_out=None, trace_out=None, events_out=None):
+    """Same saturated pipelined workload served with telemetry off vs on
+    (lifecycle tracer + metrics registry + tick spans).  The contract under
+    test: telemetry reads ONLY rows the harvest poll already transfers, so
+    host syncs are identical and the tok/s overhead must stay under 2% —
+    asserted here, recorded under ``observability`` in BENCH_serving.json.
+    A final fresh-telemetry pass writes the Prometheus / Chrome-trace /
+    JSONL artifacts (fresh so the files hold exactly one lifecycle per
+    uid; the measurement passes reuse uids across repeats)."""
+    from benchmarks import common as C
+    from repro.obs import ServerTelemetry
+    n_req, max_tokens, prompt_len, slots = ((10, 8, 48, 4) if quick
+                                            else (24, 12, 64, 4))
+    ecfg = EngineConfig(k=k, rule="mars", mode="greedy", temperature=0.0,
+                        guard="margin")
+    prompts = C.corpus().sample_batch(n_req, prompt_len, seed=13)
+    budgets = (max(max_tokens // 2, 2), max_tokens, 2 * max_tokens)
+    reqs = [Request(uid=i, prompt=np.asarray(prompts[i], np.int32),
+                    params=SamplingParams(max_tokens=budgets[i % 3],
+                                          temperature=0.0))
+            for i in range(n_req)]
+    max_tok_hi = max(budgets)
+
+    def mk(telemetry=None):
+        # adaptive + overlap + ring: the config where every telemetry hook
+        # fires (retune spans, ring-staged lifecycles, in-flight counter)
+        return SpecServer(
+            target, IndependentDrafter(draft, k=k, temperature=0.0),
+            t_params, d_params, ecfg,
+            ServerConfig(slots=slots,
+                         max_len=prompt_len + max_tok_hi + k + 4,
+                         max_prompt_len=prompt_len, cache="paged",
+                         overlap=True, ring_depth=slots,
+                         theta_mode="adaptive"),
+            telemetry=telemetry)
+
+    servers = {"serving/telemetry_off": mk(),
+               "serving/telemetry_on": mk(ServerTelemetry())}
+
+    # parity + warm-up: telemetry must not perturb a single token, and the
+    # zero-transfer contract means host syncs match exactly
+    outs, syncs = {}, {}
+    for name, srv in servers.items():
+        for r in reqs:
+            srv.submit(dataclasses.replace(r))
+        outs[name] = {r.uid: np.asarray(r.tokens) for r in srv.run()}
+        syncs[name] = srv.host_syncs
+    for uid in outs["serving/telemetry_off"]:
+        np.testing.assert_array_equal(
+            outs["serving/telemetry_on"][uid],
+            outs["serving/telemetry_off"][uid],
+            err_msg=f"telemetry changed tokens on req {uid}")
+    assert syncs["serving/telemetry_on"] == syncs["serving/telemetry_off"], (
+        "telemetry added device->host transfers: "
+        f"{syncs['serving/telemetry_on']} syncs vs "
+        f"{syncs['serving/telemetry_off']}")
+
+    best = _measure(servers, reqs, max_tok_hi, repeats=3 if quick else 4)
+    off, on = best["serving/telemetry_off"], best["serving/telemetry_on"]
+    overhead = max(1.0 - on["tok_s"] / off["tok_s"], 0.0)
+    assert overhead < 0.02, (
+        f"telemetry overhead {overhead:.1%} >= 2% "
+        f"({on['tok_s']:.1f} vs {off['tok_s']:.1f} tok/s)")
+
+    # artifact pass: fresh server + fresh telemetry, one submission per uid
+    tel = ServerTelemetry()
+    srv = mk(tel)
+    for r in reqs:
+        srv.submit(dataclasses.replace(r))
+    srv.run()
+    tel.write(metrics_out, trace_out, events_out)
+    ts = tel.summary()
+
+    def _ms(v):
+        return round(v * 1e3, 2) if v is not None else None
+
+    print(f"\ntelemetry ({n_req} req, adaptive theta, overlap+ring, paged):")
+    print(f"  off: {off['tok_s']:8.1f} tok/s   on: {on['tok_s']:8.1f} tok/s "
+          f"({overhead:.1%} overhead, < 2% asserted)")
+    print(f"  {ts['finished']} lifecycles, {ts['span_events']} span events, "
+          f"{ts['theta_retunes']} retunes; TTFT p50 {_ms(ts['ttft_p50_s'])}ms")
+    for flag, path in (("--metrics-out", metrics_out),
+                       ("--trace-out", trace_out),
+                       ("--events-out", events_out)):
+        if path:
+            print(f"  wrote {flag[2:]}: {path}")
+    rows = [("serving/telemetry_off", 0.0, f"tok_s={off['tok_s']:.1f}"),
+            ("serving/telemetry_on", 0.0,
+             f"tok_s={on['tok_s']:.1f};overhead={overhead:.3f}")]
+    summary = {
+        "workload": {"requests": n_req, "budgets": list(budgets),
+                     "prompt_len": prompt_len, "slots": slots,
+                     "cache": "paged", "overlap": True,
+                     "theta_mode": "adaptive", "quick": bool(quick)},
+        "off_tok_s": round(off["tok_s"], 1),
+        "on_tok_s": round(on["tok_s"], 1),
+        "overhead_frac": round(overhead, 4),
+        "host_syncs_match": True,
+        "token_parity": "identical",
+        "finished_lifecycles": int(ts["finished"]),
+        "trace_events": int(ts["span_events"]),
+        "theta_retunes": int(ts["theta_retunes"]),
+        "ttft_p50_ms": _ms(ts["ttft_p50_s"]),
+        "ttft_p99_ms": _ms(ts["ttft_p99_s"]),
+        "itl_p50_ms": _ms(ts["itl_p50_s"]),
+    }
+    return rows, summary
+
+
+# ---------------------------------------------------------------------------
 # Mesh sweep: tok/s scaling of the partitioned tick vs one device
 # ---------------------------------------------------------------------------
 
@@ -1221,6 +1335,16 @@ def main():
                          "and greedy-token agreement vs strict "
                          "verification (written to BENCH_serving.json "
                          "under 'adaptive')")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="telemetry section: write Prometheus text metrics "
+                         "here (any of the three --*-out flags enables the "
+                         "telemetry-overhead section; docs/OBSERVABILITY.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="telemetry section: write the Perfetto-loadable "
+                         "Chrome trace of tick spans here")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="telemetry section: write the per-request "
+                         "lifecycle JSONL here")
     args = ap.parse_args()
 
     mesh_shape = None
@@ -1334,6 +1458,13 @@ def main():
                                                     quick=args.quick,
                                                     k=min(args.k, 3))
         rows += a_rows
+    obs_summary = None
+    if args.metrics_out or args.trace_out or args.events_out:
+        o_rows, obs_summary = telemetry_overhead(
+            target, t_params, draft, d_params, quick=args.quick,
+            k=min(args.k, 3), metrics_out=args.metrics_out,
+            trace_out=args.trace_out, events_out=args.events_out)
+        rows += o_rows
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -1361,6 +1492,7 @@ def main():
         "multi_arch": multiarch_summary,
         "pipeline": pipeline_summary,
         "adaptive": adaptive_summary,
+        "observability": obs_summary,
     }
     # merge, don't clobber: sections another invocation produced (e.g. the
     # prefix or quantized CI legs) survive runs that don't exercise them

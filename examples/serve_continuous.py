@@ -48,6 +48,7 @@ from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
 
 
 def serve(server, n_req=12, max_tokens=48, label="", temperatures=(1.0,)):
+    telemetry = getattr(server, "obs", None)
     cor = C.corpus()
     for i in range(n_req):
         prompt = cor.sample_batch(1, 24, seed=100 + i)[0]
@@ -71,7 +72,16 @@ def serve(server, n_req=12, max_tokens=48, label="", temperatures=(1.0,)):
           f"(tokens committed per verify cycle; >1 == speculative win)")
     print(f"host syncs: {server.host_syncs} across {server.step_calls} "
           f"fused tick groups — the tick loop itself never touches the "
-          f"host\n")
+          f"host")
+    if telemetry is not None:
+        ts = telemetry.summary()
+
+        def _ms(v):
+            return f"{v * 1e3:.1f}ms" if v is not None else "n/a"
+        print(f"telemetry: TTFT p50={_ms(ts['ttft_p50_s'])} "
+              f"p99={_ms(ts['ttft_p99_s'])}, ITL p50={_ms(ts['itl_p50_s'])} "
+              f"— all from polls the sync already pays for")
+    print()
 
 
 def serve_system_prompt(target, t_params, draft, d_params, *, slots,
@@ -136,6 +146,13 @@ def main():
                          "hit rate and blocks saved")
     ap.add_argument("--system-len", type=int, default=64,
                     help="--system-prompt: shared prefix length in tokens")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus text metrics at the end of the "
+                         "chain-topology pass (docs/OBSERVABILITY.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the tick-span Chrome trace (Perfetto) here")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the per-request lifecycle JSONL here")
     args = ap.parse_args()
     mesh = None
     if args.mesh:
@@ -160,6 +177,11 @@ def main():
                         cache=args.cache, mesh=mesh,
                         kv_dtype=args.kv_dtype)
 
+    telemetry = None
+    if args.metrics_out or args.trace_out or args.events_out:
+        from repro.obs import ServerTelemetry
+        telemetry = ServerTelemetry()
+
     # chain topology: independent small-LM drafter, sampling verification,
     # a different per-request temperature riding each slot's carry
     serve(SpecServer(
@@ -167,8 +189,10 @@ def main():
         t_params, d_params,
         EngineConfig(k=4, rule="mars", mode="sample", temperature=1.0,
                      guard="margin"),
-        scfg),
+        scfg, telemetry=telemetry),
         label="chain", temperatures=(0.5, 1.0, 2.0))
+    if telemetry is not None:
+        telemetry.write(args.metrics_out, args.trace_out, args.events_out)
 
     # tree topology: EAGLE-style head, caterpillar tree, greedy + MARS —
     # same scheduler, same session core, different draft topology

@@ -1,7 +1,7 @@
-"""Acceptance / speedup metrics for speculative decoding."""
+"""Acceptance / speedup / latency metrics for speculative decoding."""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -44,3 +44,26 @@ def flops_cost_ratio(draft_params: int, target_params: int) -> float:
     """Per-token draft/target cost proxy from active parameter counts
     (decode is memory-bound; bytes moved ∝ params)."""
     return draft_params / max(target_params, 1)
+
+
+def ttft(submit_s: Optional[float],
+         first_commit_s: Optional[float]) -> Optional[float]:
+    """Time to first token: submit → first host-observed commit.
+
+    None when either endpoint was never observed. Clamped at zero so
+    clock jitter can never report a negative latency. Shared by the
+    serving benchmark and `repro.obs` so latency math lives in one place.
+    """
+    if submit_s is None or first_commit_s is None:
+        return None
+    return max(first_commit_s - submit_s, 0.0)
+
+
+def itl(first_commit_s: Optional[float], finish_s: Optional[float],
+        tokens_after_first: int) -> Optional[float]:
+    """Mean inter-token latency: (finish - first_commit) / tokens after the
+    first commit. None when the request never spanned more than one
+    host-observed commit (the interval is then unmeasurable, not zero)."""
+    if first_commit_s is None or finish_s is None or tokens_after_first <= 0:
+        return None
+    return max(finish_s - first_commit_s, 0.0) / tokens_after_first

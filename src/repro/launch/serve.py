@@ -120,6 +120,18 @@ def main():
                     help="paged only: prefill cold prompts into pool "
                          "blocks with a separate jitted worker program so "
                          "admission decodes never widen for a cold admit")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus text-exposition metrics here at "
+                         "the end of the run (enables telemetry; see "
+                         "docs/OBSERVABILITY.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace-event "
+                         "JSON of the tick spans (admit/dispatch/harvest/"
+                         "retune/gather) here")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the per-request lifecycle event log "
+                         "(JSONL: submit/staged/admitted/first_commit/"
+                         "retune/finish) here")
     args = ap.parse_args()
 
     mesh_shape = None
@@ -195,6 +207,11 @@ def main():
                                      temperature=args.temperature)
         d_params = draft.init(jax.random.PRNGKey(1))
 
+    telemetry = None
+    if args.metrics_out or args.trace_out or args.events_out:
+        from repro.obs import ServerTelemetry
+        telemetry = ServerTelemetry()
+
     server = SpecServer(
         target, drafter, t_params, d_params,
         EngineConfig(k=args.k, rule=args.rule, theta=args.theta,
@@ -215,7 +232,8 @@ def main():
                      relax_budget=args.relax_budget,
                      adaptive_k=args.adaptive_k,
                      overlap=args.overlap, ring_depth=args.ring_depth,
-                     prefill_worker=args.prefill_worker))
+                     prefill_worker=args.prefill_worker),
+        telemetry=telemetry)
 
     # per-request sampling params ride the device carry: each request may
     # ask for its own temperature and token budget
@@ -255,6 +273,26 @@ def main():
               f"{s['tokens_reused']}/{s['tokens_total']} prompt tokens "
               f"reused, {s['blocks_shared']} shared block mappings, "
               f"{s['cow_clones']} COW clones")
+    if telemetry is not None:
+        telemetry.write(args.metrics_out, args.trace_out, args.events_out)
+        ts = telemetry.summary()
+
+        def _ms(v):
+            return f"{v * 1e3:.1f}ms" if v is not None else "n/a"
+        print(f"telemetry: {ts['finished']} finished, TTFT "
+              f"p50={_ms(ts['ttft_p50_s'])} p99={_ms(ts['ttft_p99_s'])}, "
+              f"ITL p50={_ms(ts['itl_p50_s'])}, "
+              f"{ts['span_events']} span events")
+        if server.controller is not None:
+            cs = server.controller.summary()
+            print(f"  controller: {cs['updates']} updates, "
+                  f"{cs['slots_tightened']} slot-steps tightened, "
+                  f"{cs['slots_relaxed']} relaxed")
+        for flag, path in (("--metrics-out", args.metrics_out),
+                           ("--trace-out", args.trace_out),
+                           ("--events-out", args.events_out)):
+            if path:
+                print(f"  wrote {flag[2:]}: {path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,35 @@
+"""Serving observability: lifecycle traces, metrics, and tick spans.
+
+Three pillars, all fed exclusively from device→host transfers the server
+already pays for (the sync poll and the finished-row gather) — telemetry
+never adds a transfer, so the sync-free tick contract is untouched:
+
+* :mod:`repro.obs.trace`    — per-request lifecycle records
+  (:class:`RequestTrace`) with monotonic host timestamps for
+  submit → staged → admitted → first commit → finish/cancel, plus the
+  device stats harvested at finish; honest TTFT / inter-token latency.
+* :mod:`repro.obs.registry` — a dependency-free metrics registry
+  (counters, gauges, windowed histograms; pure numpy) with a Prometheus
+  text-exposition writer in :mod:`repro.obs.export`.
+* :mod:`repro.obs.spans`    — tick-phase spans (admit / dispatch /
+  harvest / retune / gather) exported as Chrome trace-event JSON,
+  loadable in Perfetto, including the overlap pipeline's in-flight
+  snapshot depth as a counter track.
+
+:class:`ServerTelemetry` bundles all three behind the hook interface
+``SpecServer`` calls; see docs/OBSERVABILITY.md.
+"""
+from repro.obs.export import (chrome_trace_json, prometheus_text,
+                              write_chrome_trace, write_events_jsonl,
+                              write_prometheus)
+from repro.obs.registry import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.spans import SpanRecorder
+from repro.obs.telemetry import ServerTelemetry
+from repro.obs.trace import RequestTrace, RequestTracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "RequestTrace", "RequestTracer", "SpanRecorder", "ServerTelemetry",
+    "prometheus_text", "write_prometheus", "chrome_trace_json",
+    "write_chrome_trace", "write_events_jsonl",
+]

@@ -1,0 +1,84 @@
+"""Writers: Prometheus text exposition, Chrome trace JSON, JSONL events.
+
+All writers are pure functions of the in-memory objects; file variants
+create parent directories and write atomically enough for CI consumption
+(single write, then close).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Iterable
+
+from repro.obs.registry import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.spans import SpanRecorder
+
+
+def _fmt(v: float) -> str:
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def prometheus_text(registry: MetricsRegistry) -> str:
+    """Render the registry in Prometheus text exposition format 0.0.4."""
+    lines = []
+    for m in registry.metrics():
+        if m.help:
+            lines.append(f"# HELP {m.name} {m.help}")
+        lines.append(f"# TYPE {m.name} {m.kind}")
+        if isinstance(m, (Counter, Gauge)):
+            lines.append(f"{m.name} {_fmt(m.value)}")
+        elif isinstance(m, Histogram):
+            for bound, cum in zip(list(m.bounds) + [math.inf],
+                                  m.bucket_counts.tolist()):
+                lines.append(f'{m.name}_bucket{{le="{_fmt(bound)}"}} {cum}')
+            lines.append(f"{m.name}_sum {_fmt(m.sum)}")
+            lines.append(f"{m.name}_count {m.count}")
+        else:  # pragma: no cover - registry only creates the three kinds
+            raise TypeError(f"unknown metric kind: {type(m).__name__}")
+    return "\n".join(lines) + "\n"
+
+
+def _ensure_parent(path: str) -> None:
+    parent = os.path.dirname(os.path.abspath(path))
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+
+
+def write_prometheus(registry: MetricsRegistry, path: str) -> None:
+    _ensure_parent(path)
+    with open(path, "w") as f:
+        f.write(prometheus_text(registry))
+
+
+def chrome_trace_json(spans: SpanRecorder) -> str:
+    return json.dumps(spans.chrome_trace(), indent=None, separators=(",", ":"))
+
+
+def write_chrome_trace(spans: SpanRecorder, path: str) -> None:
+    _ensure_parent(path)
+    with open(path, "w") as f:
+        f.write(chrome_trace_json(spans))
+
+
+def write_events_jsonl(events: Iterable[dict], path: str) -> None:
+    _ensure_parent(path)
+    with open(path, "w") as f:
+        for ev in events:
+            f.write(json.dumps(ev, separators=(",", ":")) + "\n")
+
+
+def read_events_jsonl(path: str):
+    """Round-trip helper (used by tests and tools/check_trace.py)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

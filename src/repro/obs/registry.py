@@ -1,0 +1,153 @@
+"""Dependency-free metrics registry: counters, gauges, windowed histograms.
+
+Pure numpy + stdlib — no prometheus_client, no OpenTelemetry. Instruments
+are created through :class:`MetricsRegistry` (get-or-create, insertion
+order preserved) and rendered to Prometheus text exposition by
+:func:`repro.obs.export.prometheus_text`.
+
+Histograms keep two views of the same observations: cumulative
+fixed-bucket counts (what Prometheus expects) and a bounded ring of the
+most recent raw values so the host can report windowed quantiles
+(p50/p99 TTFT) without a time-series database.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Latency-flavored default buckets (seconds): 1 ms .. 60 s, roughly 2.5x apart.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+    0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
+
+
+class Counter:
+    """Monotonically non-decreasing float counter."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = "") -> None:
+        self.name = name
+        self.help = help
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name}: negative increment {amount}")
+        self.value += amount
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = "") -> None:
+        self.name = name
+        self.help = help
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+
+class Histogram:
+    """Fixed-bucket cumulative histogram plus a recent-values window.
+
+    ``bucket_counts[i]`` counts observations ``<= bounds[i]`` (cumulative,
+    Prometheus ``le`` semantics, with an implicit ``+Inf`` final bucket).
+    ``window`` bounds the raw-value ring used for :meth:`percentile`.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Sequence[float] = DEFAULT_BUCKETS,
+                 window: int = 2048) -> None:
+        self.name = name
+        self.help = help
+        self.bounds: Tuple[float, ...] = tuple(sorted(float(b) for b in buckets))
+        if not self.bounds:
+            raise ValueError(f"histogram {self.name}: needs at least one bucket")
+        self.bucket_counts = np.zeros(len(self.bounds) + 1, dtype=np.int64)
+        self.sum = 0.0
+        self.count = 0
+        self._ring = np.zeros(max(int(window), 1), dtype=np.float64)
+        self._ring_n = 0  # total observations ever pushed into the ring
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        if math.isnan(v):
+            return
+        idx = int(np.searchsorted(self.bounds, v, side="left"))
+        self.bucket_counts[idx:] += 1
+        self.sum += v
+        self.count += 1
+        self._ring[self._ring_n % self._ring.size] = v
+        self._ring_n += 1
+
+    def window_values(self) -> np.ndarray:
+        n = min(self._ring_n, self._ring.size)
+        return self._ring[:n].copy()
+
+    def percentile(self, q: float) -> Optional[float]:
+        """Windowed percentile (q in [0, 100]); None with no observations."""
+        vals = self.window_values()
+        if vals.size == 0:
+            return None
+        return float(np.percentile(vals, q))
+
+
+class MetricsRegistry:
+    """Insertion-ordered instrument store with get-or-create semantics.
+
+    ``namespace`` is prefixed onto every instrument name at creation
+    (``mars_`` by default), so export needs no further name mangling.
+    Thread-safe creation; instrument mutation is single-writer by design
+    (the scheduler's host thread).
+    """
+
+    def __init__(self, namespace: str = "mars") -> None:
+        self.namespace = namespace
+        self._metrics: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _full(self, name: str) -> str:
+        return f"{self.namespace}_{name}" if self.namespace else name
+
+    def _get_or_create(self, cls, name: str, help: str, **kw):
+        full = self._full(name)
+        with self._lock:
+            m = self._metrics.get(full)
+            if m is None:
+                m = cls(full, help, **kw)
+                self._metrics[full] = m
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {full} already registered as {type(m).__name__}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_create(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = DEFAULT_BUCKETS,
+                  window: int = 2048) -> Histogram:
+        return self._get_or_create(Histogram, name, help,
+                                   buckets=buckets, window=window)
+
+    def metrics(self) -> List[object]:
+        with self._lock:
+            return list(self._metrics.values())
+
+    def get(self, full_name: str) -> Optional[object]:
+        return self._metrics.get(full_name)

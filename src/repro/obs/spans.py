@@ -1,0 +1,102 @@
+"""Tick-phase spans as Chrome trace events, loadable in Perfetto.
+
+:class:`SpanRecorder` generalizes the benchmark-only ``--profile-phases``
+fenced timings into an always-available recorder: the scheduler wraps
+its tick phases (admit / dispatch / harvest / retune / gather) in
+:meth:`span`, and the overlap pipeline publishes its in-flight snapshot
+depth through :meth:`counter` so double-buffer occupancy is a visible
+counter track.
+
+Spans measure *host wall time around the call* — for async dispatch that
+is enqueue cost, not device compute (the benchmark's fenced mode remains
+the ground truth for device phase split). Each span also opens a
+``jax.profiler.TraceAnnotation`` when available, so the same names show
+up inside a full XLA profiler trace.
+
+Export format is the Chrome trace-event JSON array flavor
+(``{"traceEvents": [...]}``): ``ph: "X"`` complete events with
+microsecond ``ts``/``dur``, ``ph: "C"`` counter events.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Callable, List, Optional
+
+try:  # TraceAnnotation is optional — numpy-only consumers never import jax.
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except Exception:  # pragma: no cover - jax always present in this repo
+    _TraceAnnotation = None
+
+
+class SpanRecorder:
+    """Bounded in-memory recorder for Chrome trace events.
+
+    ``max_events`` caps memory for long serves; overflow drops newest
+    events and is reported in :attr:`dropped` and the export metadata —
+    never silently.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 *, process_name: str = "mars-server",
+                 max_events: int = 200_000, annotate: bool = True) -> None:
+        self._clock = clock
+        self.t0 = clock()
+        self.process_name = process_name
+        self.max_events = max_events
+        self.events: List[dict] = []
+        self.dropped = 0
+        self._annotate = annotate and _TraceAnnotation is not None
+
+    def _now_us(self) -> float:
+        return (self._clock() - self.t0) * 1e6
+
+    def _push(self, ev: dict) -> None:
+        if len(self.events) >= self.max_events:
+            self.dropped += 1
+            return
+        self.events.append(ev)
+
+    @contextmanager
+    def span(self, name: str, tid: int = 0, **args):
+        """Record a complete ("X") event around the enclosed block."""
+        ann = _TraceAnnotation(name) if self._annotate else None
+        if ann is not None:
+            ann.__enter__()
+        t0 = self._now_us()
+        try:
+            yield
+        finally:
+            t1 = self._now_us()
+            if ann is not None:
+                ann.__exit__(None, None, None)
+            ev = {"name": name, "ph": "X", "ts": t0, "dur": t1 - t0,
+                  "pid": 1, "tid": tid}
+            if args:
+                ev["args"] = args
+            self._push(ev)
+
+    def counter(self, name: str, value: float) -> None:
+        """Record a counter ("C") sample, rendered as a track in Perfetto."""
+        self._push({"name": name, "ph": "C", "ts": self._now_us(),
+                    "pid": 1, "tid": 0, "args": {name: value}})
+
+    def instant(self, name: str, **args) -> None:
+        ev = {"name": name, "ph": "i", "ts": self._now_us(),
+              "pid": 1, "tid": 0, "s": "t"}
+        if args:
+            ev["args"] = args
+        self._push(ev)
+
+    def span_names(self) -> List[str]:
+        return sorted({e["name"] for e in self.events if e.get("ph") == "X"})
+
+    def chrome_trace(self) -> dict:
+        """Full trace object: events plus process-name metadata."""
+        meta = [{"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+                 "args": {"name": self.process_name}}]
+        out = {"traceEvents": meta + list(self.events),
+               "displayTimeUnit": "ms"}
+        if self.dropped:
+            out["metadata"] = {"dropped_events": self.dropped}
+        return out

@@ -1,0 +1,174 @@
+"""ServerTelemetry: the bundle SpecServer talks to.
+
+One object wires the three pillars together — a :class:`RequestTracer`
+(lifecycle), a :class:`MetricsRegistry` (Prometheus-exportable
+instruments), and a :class:`SpanRecorder` (tick spans) — behind the
+narrow hook interface the scheduler calls. Every hook consumes only
+host-resident values (python ints/floats/numpy rows the sync poll
+already transferred); none triggers a device→host transfer, so passing
+``telemetry=`` to ``SpecServer`` cannot violate the sync-free tick
+contract.
+
+All hooks are cheap dict/list appends; the scheduler guards each call
+site with ``if self.obs is not None`` so ``telemetry=None`` stays
+zero-cost.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import nullcontext
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.obs.export import (write_chrome_trace, write_events_jsonl,
+                              write_prometheus)
+from repro.obs.registry import MetricsRegistry
+from repro.obs.spans import SpanRecorder
+from repro.obs.trace import RequestTrace, RequestTracer
+
+# Theta lives in [0, 1]; latency buckets make no sense for it.
+_THETA_BUCKETS = tuple(x / 20 for x in range(1, 21))
+_TOKEN_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+class ServerTelemetry:
+    """Lifecycle + metrics + spans for one server, on one shared clock."""
+
+    def __init__(self, *, namespace: str = "mars",
+                 clock: Callable[[], float] = time.perf_counter,
+                 max_span_events: int = 200_000, annotate: bool = True) -> None:
+        self.clock = clock
+        self.tracer = RequestTracer(clock=clock)
+        self.registry = MetricsRegistry(namespace=namespace)
+        self.spans = SpanRecorder(clock=clock, max_events=max_span_events,
+                                  annotate=annotate)
+        r = self.registry
+        self.submitted = r.counter("requests_submitted_total", "Requests submitted")
+        self.admitted = r.counter("requests_admitted_total", "Requests seated in a slot")
+        self.finished = r.counter("requests_finished_total", "Requests finished")
+        self.canceled = r.counter("requests_canceled_total", "Requests canceled while queued")
+        self.ring_staged = r.counter("requests_ring_staged_total", "Requests staged in the admission ring")
+        self.tokens = r.counter("tokens_committed_total", "Tokens committed across finished requests")
+        self.accepts = r.counter("draft_accepts_total", "Draft tokens accepted (strict + relaxed)")
+        self.relaxed = r.counter("relaxed_accepts_total", "Draft tokens accepted via theta relaxation")
+        self.cycles = r.counter("verify_cycles_total", "Verify cycles across finished requests")
+        self.retunes = r.counter("theta_retunes_total", "Controller theta retune dispatches")
+        self.syncs = r.counter("sync_polls_total", "Harvest polls applied")
+        self.queue_depth = r.gauge("queue_depth", "Requests waiting in the host queue")
+        self.slots_active = r.gauge("slots_active", "Slots currently decoding")
+        self.inflight = r.gauge("inflight_snapshots", "Overlap pipeline snapshots in flight")
+        self.margin_mean = r.gauge("margin_ema_mean", "Mean margin EMA over live slots at last poll")
+        self.ttft = r.histogram("ttft_seconds", "Time to first committed token (host-observed)")
+        self.itl = r.histogram("itl_seconds", "Mean inter-token latency after first commit")
+        self.latency = r.histogram("request_latency_seconds", "Submit-to-finish latency")
+        self.req_tokens = r.histogram("request_tokens", "Committed tokens per finished request",
+                                      buckets=_TOKEN_BUCKETS)
+        self.theta = r.histogram("theta_applied", "Theta values applied (admission + retunes)",
+                                 buckets=_THETA_BUCKETS)
+
+    # -- spans -------------------------------------------------------------
+
+    def span(self, name: str, **args):
+        return self.spans.span(name, **args)
+
+    # -- lifecycle hooks (called by SpecServer) ----------------------------
+
+    def on_submit(self, uid: int, prompt_len: int, max_tokens: int) -> None:
+        self.tracer.on_submit(uid, prompt_len, max_tokens)
+        self.submitted.inc()
+
+    def on_cancel(self, uid: int) -> None:
+        self.tracer.on_cancel(uid)
+        self.canceled.inc()
+
+    def on_staged(self, uid: int, shard: Optional[int] = None) -> None:
+        self.tracer.on_staged(uid, shard=shard)
+        self.ring_staged.inc()
+
+    def on_admitted(self, uid: int, slot: int, *, theta: float,
+                    prefix_hit_tokens: int = 0, blocks_held: int = 0,
+                    via_ring: bool = False) -> None:
+        self.tracer.on_admitted(uid, slot, theta=theta,
+                                prefix_hit_tokens=prefix_hit_tokens,
+                                blocks_held=blocks_held, via_ring=via_ring)
+        self.admitted.inc()
+        self.theta.observe(theta)
+
+    def on_prefill_handoff(self, uid: int, tokens: int) -> None:
+        self.tracer.on_prefill_handoff(uid, tokens)
+
+    def on_first_commit(self, uid: int, tokens: int) -> None:
+        self.tracer.on_first_commit(uid, tokens)
+
+    def on_retune(self, pairs: Sequence[Tuple[int, float]]) -> None:
+        for uid, theta in pairs:
+            self.tracer.on_retune(uid, theta)
+            self.theta.observe(theta)
+        self.retunes.inc()
+
+    def on_finish(self, uid: int, *, n_tokens: int, n_cycles: int,
+                  n_accepted: int, n_relaxed: int, margin_ema: float,
+                  theta: float, blocks_held: int) -> None:
+        self.tracer.on_finish(uid, n_tokens=n_tokens, n_cycles=n_cycles,
+                              n_accepted=n_accepted, n_relaxed=n_relaxed,
+                              margin_ema=margin_ema, theta=theta,
+                              blocks_held=blocks_held)
+        self.finished.inc()
+        self.tokens.inc(n_tokens)
+        self.accepts.inc(n_accepted)
+        self.relaxed.inc(n_relaxed)
+        self.cycles.inc(n_cycles)
+        self.req_tokens.observe(n_tokens)
+        tr = self.tracer.traces[uid]
+        if tr.ttft_s is not None:
+            self.ttft.observe(tr.ttft_s)
+        if tr.itl_s is not None:
+            self.itl.observe(tr.itl_s)
+        if tr.latency_s is not None:
+            self.latency.observe(tr.latency_s)
+
+    def on_sync(self, *, queue_depth: int, slots_active: int,
+                inflight: int, margin_mean: Optional[float] = None) -> None:
+        self.syncs.inc()
+        self.queue_depth.set(queue_depth)
+        self.slots_active.set(slots_active)
+        self.inflight.set(inflight)
+        if margin_mean is not None:
+            self.margin_mean.set(margin_mean)
+
+    def on_inflight(self, depth: int) -> None:
+        """Overlap pipeline depth — both a gauge and a Perfetto counter track."""
+        self.inflight.set(depth)
+        self.spans.counter("inflight_snapshots", depth)
+
+    # -- views / export ----------------------------------------------------
+
+    def finished_traces(self) -> List[RequestTrace]:
+        return self.tracer.finished()
+
+    def write(self, metrics_out: Optional[str] = None,
+              trace_out: Optional[str] = None,
+              events_out: Optional[str] = None) -> None:
+        if metrics_out:
+            write_prometheus(self.registry, metrics_out)
+        if trace_out:
+            write_chrome_trace(self.spans, trace_out)
+        if events_out:
+            write_events_jsonl(self.tracer.events, events_out)
+
+    def summary(self) -> dict:
+        """Small human-facing rollup (printed by launchers)."""
+        return {
+            "finished": int(self.finished.value),
+            "tokens": int(self.tokens.value),
+            "ttft_p50_s": self.ttft.percentile(50),
+            "ttft_p99_s": self.ttft.percentile(99),
+            "itl_p50_s": self.itl.percentile(50),
+            "latency_p50_s": self.latency.percentile(50),
+            "theta_retunes": int(self.retunes.value),
+            "span_events": len(self.spans.events),
+        }
+
+
+def null_span(*_a, **_k):
+    """Module-level no-op context for telemetry-off paths."""
+    return nullcontext()

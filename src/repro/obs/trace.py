@@ -1,0 +1,196 @@
+"""Per-request lifecycle traces.
+
+One :class:`RequestTrace` per uid records the host-observed lifecycle
+(submit → ring-staged → admitted → prefill handoff → first commit →
+finish/cancel) on a monotonic clock, plus the device stats the harvest
+poll already carries (cycles, accepts, relaxed, margin EMA, theta
+trajectory, blocks held, prefix hits).
+
+Timestamps are *host observation* times: the device may commit a token
+mid-group, but the host can only see it at the next ``sync()`` poll, so
+first-commit (and therefore TTFT) is quantized to sync granularity —
+honest for a serving system, since that is exactly when a streaming API
+could first emit the token. Under ``overlap`` the poll is additionally
+one dispatch group late by construction.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import metrics as _metrics
+
+
+@dataclass
+class RequestTrace:
+    """Lifecycle record for one request uid. All times are seconds on the
+    tracer's monotonic clock (``t0`` = tracer construction)."""
+
+    uid: int
+    prompt_len: int = 0
+    max_tokens: int = 0
+    submit_s: Optional[float] = None
+    staged_s: Optional[float] = None          # pushed into the AdmissionRing
+    admitted_s: Optional[float] = None        # seated in a slot (host or device side)
+    prefill_handoff_s: Optional[float] = None  # routed through PrefillWorker
+    first_commit_s: Optional[float] = None    # first poll showing committed tokens
+    finish_s: Optional[float] = None
+    cancel_s: Optional[float] = None
+    slot: Optional[int] = None
+    shard: Optional[int] = None
+    staged_via_ring: bool = False
+    prefix_hit_tokens: int = 0
+    blocks_held: int = 0
+    tokens_at_first_commit: int = 0
+    # Device stats harvested at finish.
+    n_tokens: int = 0
+    n_cycles: int = 0
+    n_accepted: int = 0
+    n_relaxed: int = 0
+    margin_ema: float = 0.0
+    # (time_s, theta) — admission theta plus every controller retune.
+    theta_path: List[Tuple[float, float]] = field(default_factory=list)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return _metrics.ttft(self.submit_s, self.first_commit_s)
+
+    @property
+    def itl_s(self) -> Optional[float]:
+        return _metrics.itl(self.first_commit_s, self.finish_s,
+                            self.n_tokens - self.tokens_at_first_commit)
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.submit_s is None or self.finish_s is None:
+            return None
+        return self.finish_s - self.submit_s
+
+    @property
+    def done(self) -> bool:
+        return self.finish_s is not None or self.cancel_s is not None
+
+
+class RequestTracer:
+    """Owns the trace table and the structured event log.
+
+    Every lifecycle transition appends one JSON-able event dict (kind
+    ``event``: submit/staged/admitted/prefill_handoff/first_commit/
+    retune/finish/cancel) to :attr:`events`; finished traces stay in
+    :attr:`traces` for end-of-run reporting.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter) -> None:
+        self._clock = clock
+        self.t0 = clock()
+        self.wall_t0 = time.time()
+        self.traces: Dict[int, RequestTrace] = {}
+        self.events: List[dict] = []
+
+    def now(self) -> float:
+        return self._clock() - self.t0
+
+    def _event(self, kind: str, uid: int, t: float, **extra) -> None:
+        ev = {"event": kind, "uid": uid, "t_s": round(t, 9),
+              "wall_s": round(self.wall_t0 + t, 6)}
+        ev.update(extra)
+        self.events.append(ev)
+
+    def _get(self, uid: int) -> RequestTrace:
+        tr = self.traces.get(uid)
+        if tr is None:
+            tr = RequestTrace(uid=uid)
+            self.traces[uid] = tr
+        return tr
+
+    # -- lifecycle hooks ---------------------------------------------------
+
+    def on_submit(self, uid: int, prompt_len: int, max_tokens: int) -> None:
+        t = self.now()
+        tr = self._get(uid)
+        tr.submit_s = t
+        tr.prompt_len = prompt_len
+        tr.max_tokens = max_tokens
+        self._event("submit", uid, t, prompt_len=prompt_len, max_tokens=max_tokens)
+
+    def on_staged(self, uid: int, shard: Optional[int] = None) -> None:
+        t = self.now()
+        tr = self._get(uid)
+        tr.staged_s = t
+        tr.staged_via_ring = True
+        if shard is not None:
+            tr.shard = shard
+        self._event("staged", uid, t, shard=shard)
+
+    def on_admitted(self, uid: int, slot: int, *, theta: float,
+                    prefix_hit_tokens: int = 0, blocks_held: int = 0,
+                    via_ring: bool = False) -> None:
+        t = self.now()
+        tr = self._get(uid)
+        tr.admitted_s = t
+        tr.slot = slot
+        tr.prefix_hit_tokens = prefix_hit_tokens
+        tr.blocks_held = blocks_held
+        tr.staged_via_ring = tr.staged_via_ring or via_ring
+        tr.theta_path.append((t, float(theta)))
+        self._event("admitted", uid, t, slot=slot, theta=float(theta),
+                    prefix_hit_tokens=prefix_hit_tokens,
+                    blocks_held=blocks_held, via_ring=via_ring)
+
+    def on_prefill_handoff(self, uid: int, tokens: int) -> None:
+        t = self.now()
+        self._get(uid).prefill_handoff_s = t
+        self._event("prefill_handoff", uid, t, tokens=tokens)
+
+    def on_first_commit(self, uid: int, tokens: int) -> None:
+        """First sync poll whose lengths show committed tokens for this uid.
+        Idempotent — later polls do not move the timestamp."""
+        tr = self._get(uid)
+        if tr.first_commit_s is not None:
+            return
+        t = self.now()
+        tr.first_commit_s = t
+        tr.tokens_at_first_commit = tokens
+        self._event("first_commit", uid, t, tokens=tokens)
+
+    def on_retune(self, uid: int, theta: float) -> None:
+        t = self.now()
+        self._get(uid).theta_path.append((t, float(theta)))
+        self._event("retune", uid, t, theta=float(theta))
+
+    def on_finish(self, uid: int, *, n_tokens: int, n_cycles: int,
+                  n_accepted: int, n_relaxed: int, margin_ema: float,
+                  theta: float, blocks_held: int) -> None:
+        t = self.now()
+        tr = self._get(uid)
+        tr.finish_s = t
+        tr.n_tokens = n_tokens
+        tr.n_cycles = n_cycles
+        tr.n_accepted = n_accepted
+        tr.n_relaxed = n_relaxed
+        tr.margin_ema = float(margin_ema)
+        tr.blocks_held = blocks_held
+        # A request that finished within its very first harvested group has
+        # its first commit observed in the same poll as its finish; if even
+        # that was missed (device-side admission + in-group finish), pin
+        # first-commit to finish so TTFT degrades to full latency — an
+        # honest upper bound — rather than going unreported.
+        if tr.first_commit_s is None:
+            tr.first_commit_s = t
+            tr.tokens_at_first_commit = n_tokens
+        self._event("finish", uid, t, n_tokens=n_tokens, n_cycles=n_cycles,
+                    n_accepted=n_accepted, n_relaxed=n_relaxed,
+                    margin_ema=round(float(margin_ema), 6),
+                    theta=float(theta), blocks_held=blocks_held,
+                    ttft_s=tr.ttft_s, itl_s=tr.itl_s, latency_s=tr.latency_s)
+
+    def on_cancel(self, uid: int) -> None:
+        t = self.now()
+        self._get(uid).cancel_s = t
+        self._event("cancel", uid, t)
+
+    # -- views -------------------------------------------------------------
+
+    def finished(self) -> List[RequestTrace]:
+        return [tr for tr in self.traces.values() if tr.finish_s is not None]

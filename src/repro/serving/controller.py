@@ -70,6 +70,13 @@ class ThetaController:
             raise ValueError(
                 f"need 0 < theta_min <= theta_max <= 1, got "
                 f"[{self.cfg.theta_min}, {self.cfg.theta_max}]")
+        # observability tallies (host-only, read by repro.obs / launchers;
+        # the policy itself never consults them — update() stays pure in
+        # its inputs)
+        self.updates = 0           # update() calls
+        self.slots_tightened = 0   # slot-steps where theta moved up
+        self.slots_relaxed = 0     # slot-steps where theta moved down
+        self.last_pressure = 0.0
 
     def clamp(self, theta):
         return float(np.clip(theta, self.cfg.theta_min, self.cfg.theta_max))
@@ -95,7 +102,20 @@ class ThetaController:
         guided = margin_ema > 0
         step = np.where(guided, step + cfg.margin_gain * (margin_ema - theta),
                         step)
-        return np.clip(theta + step, cfg.theta_min, cfg.theta_max)
+        new = np.clip(theta + step, cfg.theta_min, cfg.theta_max)
+        self.updates += 1
+        self.slots_tightened += int(np.sum(new > theta + 1e-12))
+        self.slots_relaxed += int(np.sum(new < theta - 1e-12))
+        self.last_pressure = max(float(pressure), 0.0)
+        return new
+
+    def summary(self) -> dict:
+        """Telemetry rollup of the controller's activity (exported by
+        launchers next to the server's own counters)."""
+        return {"updates": self.updates,
+                "slots_tightened": self.slots_tightened,
+                "slots_relaxed": self.slots_relaxed,
+                "last_pressure": self.last_pressure}
 
     def choose_k(self, accepts_per_cycle: float, k_full: int,
                  k_short: int) -> int:

@@ -33,6 +33,7 @@ Handoff contract
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -77,6 +78,10 @@ class PrefillWorker:
         self.prompt_width = int(prompt_width)
         self.fills = 0              # worker dispatches
         self.filled_tokens = 0      # prompt positions taken off decode
+        # host wall seconds spent in fill() dispatches (enqueue cost —
+        # the async dispatch returns before device compute finishes);
+        # telemetry reports it next to the scheduler's tick spans
+        self.fill_wall_s = 0.0
 
         def _fill(tp, state, tokens, row, start, usable,
                   cow_src, cow_dst, trash_id):
@@ -124,13 +129,17 @@ class PrefillWorker:
         tail."""
         self.fills += 1
         self.filled_tokens += max(int(usable) - int(start), 0)
-        return self._fill(t_params, state,
-                          np.asarray(tokens, np.int32),
-                          np.asarray(row, np.int32),
-                          np.int32(start), np.int32(usable),
-                          np.int32(cow_src), np.int32(cow_dst),
-                          np.int32(trash_id))
+        t0 = time.perf_counter()
+        out = self._fill(t_params, state,
+                         np.asarray(tokens, np.int32),
+                         np.asarray(row, np.int32),
+                         np.int32(start), np.int32(usable),
+                         np.int32(cow_src), np.int32(cow_dst),
+                         np.int32(trash_id))
+        self.fill_wall_s += time.perf_counter() - t0
+        return out
 
     @property
     def stats(self) -> dict:
-        return {"fills": self.fills, "filled_tokens": self.filled_tokens}
+        return {"fills": self.fills, "filled_tokens": self.filled_tokens,
+                "fill_wall_s": self.fill_wall_s}

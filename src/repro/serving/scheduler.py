@@ -284,12 +284,19 @@ class ServerConfig:
 
 class SpecServer:
     def __init__(self, target: Model, drafter, t_params, d_params,
-                 engine_cfg: EngineConfig, cfg: ServerConfig):
+                 engine_cfg: EngineConfig, cfg: ServerConfig,
+                 *, telemetry=None):
         self.session = DecodeSession(target, drafter, engine_cfg)
         self.target, self.drafter = target, drafter
         self.t_params, self.d_params = t_params, d_params
         self.cfg = cfg
         self.ecfg = engine_cfg
+        # Optional repro.obs.ServerTelemetry: lifecycle hooks + tick spans.
+        # Every call site is None-guarded and consumes only host-resident
+        # values the sync poll already transferred — telemetry can never
+        # add a device→host transfer (tests/test_observability.py pins
+        # this in both serial and overlap modes).
+        self.obs = telemetry
 
         b = cfg.slots
         if cfg.cache not in ("dense", "paged"):
@@ -480,6 +487,15 @@ class SpecServer:
         self.state = self.session.init_state(t_params, d_params, b,
                                              cfg.max_len, paged=self.paged,
                                              paged_shards=self.data_shards)
+        # Host cache of the newest already-harvested per-slot stats rows.
+        # Under ``overlap`` the ``stats`` property reads THIS instead of
+        # polling the device: a fresh device_get mid-pipeline would stall
+        # the double buffer and mutate ``host_syncs`` accounting for a
+        # debug peek.  Refreshed in ``_apply_poll`` from transfers the
+        # sync already pays for.
+        self._stats_host = {
+            k: np.zeros((b,), np.float32 if k == "margin_ema" else np.int64)
+            for k in self.state.stats}
         if self.mesh is not None:
             from repro.launch.shardplan import (decode_state_shardings,
                                                 param_shardings)
@@ -649,30 +665,23 @@ class SpecServer:
             return {"buf": state.buf, "lengths": state.lengths,
                     "stats": dict(state.stats)}
 
-        def _poll_fields(state):
-            f = {"finished": state.finished, "lengths": state.lengths,
-                 "cycles": state.stats["cycles"],
-                 "commits": state.stats["commits"]}
-            if self.controller is not None:
-                f.update(accepts=state.stats["accepts"],
-                         relaxed=state.stats["relaxed"],
-                         margin=state.stats["margin_ema"])
-            return f
-
         # overlap snapshots: a NON-donated program whose outputs must be
         # fresh buffers — jnp.copy on every leaf, because returning the
         # carry's own arrays would alias buffers the NEXT donated dispatch
-        # deletes, and the host reads snapshots one group late
+        # deletes, and the host reads snapshots one group late.  The field
+        # sets come from _poll_stat_fields/_ring_harvest_fields — the SAME
+        # helpers the serial sync path reads — so the snapshot and serial
+        # polls can never drift on which stats rows ride the transfer.
         def _snap_state(state):
             return jax.tree_util.tree_map(jnp.copy, {
-                "poll": _poll_fields(state), "rows": _gather_rows(state)})
+                "poll": self._poll_stat_fields(state),
+                "rows": _gather_rows(state)})
 
         def _snap_ring(state, ring):
             return jax.tree_util.tree_map(jnp.copy, {
-                "poll": {**_poll_fields(state), "ring_head": ring.head},
+                "poll": self._poll_stat_fields(state, ring),
                 "rows": _gather_rows(state),
-                "ring": {"h_buf": ring.h_buf, "h_len": ring.h_len,
-                         "h_stats": ring.h_stats, "h_slot": ring.h_slot}})
+                "ring": self._ring_harvest_fields(ring)})
 
         _snap = _snap_state if self._ring is None else _snap_ring
 
@@ -761,7 +770,16 @@ class SpecServer:
 
     @property
     def stats(self):
-        d = dict(self._device_get(self.state.stats))
+        if self._overlap:
+            # Newest already-harvested snapshot, NOT a fresh device poll:
+            # a mid-pipeline device_get would block on the in-flight group
+            # (stalling the double buffer) and inflate ``host_syncs`` for
+            # what is a debug peek.  The cache is refreshed from every
+            # poll/gather the sync already pays for, so this is exactly as
+            # current as the host's own view of the carry.
+            d = {k: v.copy() for k, v in self._stats_host.items()}
+        else:
+            d = dict(self._device_get(self.state.stats))
         # host-side pipeline counters ride along for reporting: idle
         # slot-ticks while work waited (the ring's zero-idle claim),
         # finished-row gathers (the sync-gate regression), and device-side
@@ -770,6 +788,38 @@ class SpecServer:
         d["gather_calls"] = self.gather_calls
         d["ring_refills"] = self.ring_refills
         return d
+
+    def _poll_stat_fields(self, state, ring=None):
+        """Single source of truth for which stat rows ride the sync poll.
+
+        Shared by the overlap snapshot program (traced under jit) and the
+        serial ``sync`` path, so the two can never drift: finished flags +
+        lengths + cycle/commit counters always; the controller's inputs
+        (accepts/relaxed/margin EMA) ride the SAME transfer when adaptive
+        theta is on; the ring head when device-side admission is on."""
+        f = {"finished": state.finished, "lengths": state.lengths,
+             "cycles": state.stats["cycles"],
+             "commits": state.stats["commits"]}
+        if self.controller is not None:
+            f.update(accepts=state.stats["accepts"],
+                     relaxed=state.stats["relaxed"],
+                     margin=state.stats["margin_ema"])
+        if ring is not None:
+            f["ring_head"] = ring.head
+        return f
+
+    @staticmethod
+    def _ring_harvest_fields(ring):
+        """The ring's harvest-record leaves (evicted occupants' rows) —
+        shared by the overlap snapshot and the serial lazy fetch."""
+        return {"h_buf": ring.h_buf, "h_len": ring.h_len,
+                "h_stats": ring.h_stats, "h_slot": ring.h_slot}
+
+    def _obs_span(self, name, **args):
+        """Tick-phase span (no-op without telemetry)."""
+        if self.obs is None:
+            return contextlib.nullcontext()
+        return self.obs.span(name, **args)
 
     def _device_get(self, tree):
         """Single funnel for device→host transfers (counted)."""
@@ -786,6 +836,23 @@ class SpecServer:
                                     self.cfg.max_prompt_len),
                                 req.params.max_tokens)
         self.queue.append(req)
+        if self.obs is not None:
+            self.obs.on_submit(req.uid, prompt_len=len(req.prompt),
+                               max_tokens=req.params.max_tokens)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request still waiting in the host queue.  Returns True
+        if it was removed.  A request already staged or seated keeps
+        running — its blocks and slot are device-owned mid-group, so
+        in-flight cancellation belongs to the serving front door (it
+        would ride the existing poll, like everything else here)."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                if self.obs is not None:
+                    self.obs.on_cancel(uid)
+                return True
+        return False
 
     def _usable_prefix(self, plen: int) -> int:
         """Prompt tokens whose KV may ride in from the prefix cache: the
@@ -823,9 +890,10 @@ class SpecServer:
         prefill), then — with the device-side ring on — stage head-of-queue
         requests on device so mid-group finishers refill without waiting
         for the next sync."""
-        self._admit_free_slots()
-        if self._ring is not None:
-            self._stage_ring()
+        with self._obs_span("admit"):
+            self._admit_free_slots()
+            if self._ring is not None:
+                self._stage_ring()
 
     def _free_slot_order(self, free: List[int]) -> List[int]:
         """Cross-shard work stealing (``shard_steal``): visit free slots in
@@ -968,17 +1036,22 @@ class SpecServer:
                     # the COW clone, so admission must NOT re-clone (it
                     # would overwrite the worker's rows in that block).
                     w_usable = self._usable_prefix(plen)
-                    if w_usable > int(starts[slot]):
+                    w_start = int(starts[slot])
+                    if w_usable > w_start:
                         tok_row = np.zeros((s_len,), np.int32)
                         tok_row[:plen] = req.prompt[:plen]
-                        self.state = self.worker.fill(
-                            self.t_params, self.state, tok_row, rows[slot],
-                            int(starts[slot]), w_usable,
-                            int(cow_src[slot]), int(cow_dst[slot]),
-                            int(self.trash_ids[slot]))
+                        with self._obs_span("worker_fill"):
+                            self.state = self.worker.fill(
+                                self.t_params, self.state, tok_row,
+                                rows[slot], w_start, w_usable,
+                                int(cow_src[slot]), int(cow_dst[slot]),
+                                int(self.trash_ids[slot]))
                         starts[slot] = w_usable
                         cow_src[slot] = self.trash_ids[slot]
                         cow_dst[slot] = self.trash_ids[slot]
+                        if self.obs is not None:
+                            self.obs.on_prefill_handoff(
+                                req.uid, w_usable - w_start)
             self.queue.popleft()
             prompts[slot, :plen] = req.prompt[:plen]
             plens[slot] = plen
@@ -1008,6 +1081,12 @@ class SpecServer:
             # prefill resets the admitted rows' device stats to zero
             self._last_cycles[slot] = 0
             self._last_commits[slot] = 0
+            if self.obs is not None:
+                self.obs.on_admitted(
+                    req.uid, slot, theta=float(th),
+                    prefix_hit_tokens=int(match_starts[slot]),
+                    blocks_held=len(self.slot_blocks[slot]),
+                    via_ring=False)
         if not smask.any():
             return                       # pool exhausted before any admit
         # decode window: the un-cached tail across all admitted rows,
@@ -1128,11 +1207,14 @@ class SpecServer:
                                                * self._slots_per_shard])
                     row_np = np.full((self.max_blocks,), trash, np.int32)
                     row_np[:len(table)] = table
-                    self.state = self.worker.fill(
-                        self.t_params, self.state, tok_row, row_np, start,
-                        usable,
-                        cow_src if cow_src != NO_COW else trash,
-                        cow_dst if cow_dst != NO_COW else trash, trash)
+                    with self._obs_span("worker_fill"):
+                        self.state = self.worker.fill(
+                            self.t_params, self.state, tok_row, row_np,
+                            start, usable,
+                            cow_src if cow_src != NO_COW else trash,
+                            cow_dst if cow_dst != NO_COW else trash, trash)
+                    if self.obs is not None:
+                        self.obs.on_prefill_handoff(req.uid, usable - start)
                     start = usable
                     cow_src = cow_dst = NO_COW
             th = (req.params.theta if req.params.theta is not None
@@ -1154,6 +1236,8 @@ class SpecServer:
                 t0=time.time()))
             self.prefill_tokens += max(plen - 1 - match_start, 0)
             self.queue.popleft()
+            if self.obs is not None:
+                self.obs.on_staged(req.uid, shard=shard)
 
     def _pool_alloc(self, n: int, shard: int):
         """Allocate ``n`` blocks from ``shard``'s pool partition (the data
@@ -1248,29 +1332,38 @@ class SpecServer:
         cycle = (self._cycle if self._active_session() is self.session
                  else self._cycle_short)
         steps = np.int32(self._group_size())
-        if self._ring is None:
-            self.state = cycle(self.t_params, self.d_params, self.state,
-                               steps)
-        else:
-            # harvested (host-processed) slots are safe for the device to
-            # refill from iteration 0; unharvested finished slots stay
-            # frozen until the lagged snapshot that holds them is read
-            refillable = np.array([r is None for r in self.slot_req], bool)
-            # under overlap this dispatch outlives the next _admit: the
-            # device owns every refillable slot until its snapshot is
-            # processed, so host admission must skip them (no double-claim)
-            self._refill_inflight = (
-                set(np.flatnonzero(refillable).tolist())
-                if self._overlap and staged_n else set())
-            self.state, self._ring = cycle(self.t_params, self.d_params,
-                                           self.state, self._ring,
-                                           refillable, steps)
-        if self._overlap:
-            snap = dict(self._snapshot(self.state) if self._ring is None
-                        else self._snapshot(self.state, self._ring))
-            snap["idx"] = idx
-            self._pending.append(snap)
-            self._stepped = True
+        # the dispatch span measures host ENQUEUE wall time (the dispatch
+        # is async — device compute shows up in the profiler trace, and
+        # the benchmark's fenced --profile-phases mode remains the ground
+        # truth for the device-side phase split)
+        with self._obs_span("dispatch", steps=int(steps), group=idx):
+            if self._ring is None:
+                self.state = cycle(self.t_params, self.d_params, self.state,
+                                   steps)
+            else:
+                # harvested (host-processed) slots are safe for the device
+                # to refill from iteration 0; unharvested finished slots
+                # stay frozen until the lagged snapshot holding them is read
+                refillable = np.array([r is None for r in self.slot_req],
+                                      bool)
+                # under overlap this dispatch outlives the next _admit: the
+                # device owns every refillable slot until its snapshot is
+                # processed, so host admission must skip them (no
+                # double-claim)
+                self._refill_inflight = (
+                    set(np.flatnonzero(refillable).tolist())
+                    if self._overlap and staged_n else set())
+                self.state, self._ring = cycle(self.t_params, self.d_params,
+                                               self.state, self._ring,
+                                               refillable, steps)
+            if self._overlap:
+                snap = dict(self._snapshot(self.state) if self._ring is None
+                            else self._snapshot(self.state, self._ring))
+                snap["idx"] = idx
+                self._pending.append(snap)
+                self._stepped = True
+        if self.obs is not None and self._overlap:
+            self.obs.on_inflight(len(self._pending))
 
     def sync(self, *, flush: bool = False):
         """The only point where the host observes the carry.
@@ -1287,38 +1380,29 @@ class SpecServer:
         harvest crosses to the host.  Finished rows frozen by the cycle
         stay bit-stable, so a one-group-late harvest reads the same
         tokens the serial tick would have."""
-        if self._overlap:
-            keep = 1 if (self._stepped and not flush) else 0
-            self._stepped = False
-            while len(self._pending) > keep:
-                snap = self._pending.popleft()
-                poll = self._device_get(snap["poll"])
-                self._apply_poll(
-                    poll, lambda: self._device_get(snap["rows"]),
-                    (lambda: self._device_get(snap["ring"]))
-                    if "ring" in snap else None,
-                    idx=snap["idx"])
-            return
-        fields = {"finished": self.state.finished,
-                  "lengths": self.state.lengths,
-                  "cycles": self.state.stats["cycles"],
-                  "commits": self.state.stats["commits"]}
-        if self.controller is not None:
-            # controller inputs ride the SAME transfer: still one poll
-            fields.update(accepts=self.state.stats["accepts"],
-                          relaxed=self.state.stats["relaxed"],
-                          margin=self.state.stats["margin_ema"])
-        if self._ring is not None:
-            fields["ring_head"] = self._ring.head
-        poll = self._device_get(fields)
-        self._apply_poll(
-            poll, lambda: self._device_get(self._gather(self.state)),
-            (lambda: self._device_get(
-                {"h_buf": self._ring.h_buf, "h_len": self._ring.h_len,
-                 "h_stats": self._ring.h_stats,
-                 "h_slot": self._ring.h_slot}))
-            if self._ring is not None else None,
-            idx=self._step_idx - 1)
+        with self._obs_span("harvest", flush=flush):
+            if self._overlap:
+                keep = 1 if (self._stepped and not flush) else 0
+                self._stepped = False
+                while len(self._pending) > keep:
+                    snap = self._pending.popleft()
+                    poll = self._device_get(snap["poll"])
+                    self._apply_poll(
+                        poll, lambda: self._device_get(snap["rows"]),
+                        (lambda: self._device_get(snap["ring"]))
+                        if "ring" in snap else None,
+                        idx=snap["idx"])
+                return
+            # same field set as the overlap snapshot program — both come
+            # from _poll_stat_fields, so the two paths cannot drift
+            poll = self._device_get(
+                self._poll_stat_fields(self.state, self._ring))
+            self._apply_poll(
+                poll, lambda: self._device_get(self._gather(self.state)),
+                (lambda: self._device_get(
+                    self._ring_harvest_fields(self._ring)))
+                if self._ring is not None else None,
+                idx=self._step_idx - 1)
 
     def _apply_poll(self, poll, fetch_rows, fetch_ring, *, idx):
         """Process the completed poll of the group dispatched at ``idx``:
@@ -1345,6 +1429,12 @@ class SpecServer:
             if self.slot_req[s] is not None:
                 req = self.slot_req[s]
                 produced = int(poll["lengths"][s]) - int(self.slot_base_len[s])
+                if self.obs is not None and produced > 0:
+                    # first poll whose lengths exceed the slot's base is
+                    # the host's first (and honest) observation of a
+                    # commit — TTFT quantizes to sync granularity because
+                    # that is when a streaming API could first emit it
+                    self.obs.on_first_commit(req.uid, produced)
                 self.slot_remaining[s] = min(
                     req.params.max_tokens - produced,
                     self.cfg.max_len - int(poll["lengths"][s]))
@@ -1356,47 +1446,82 @@ class SpecServer:
         if d_cycles > 0:
             obs = d_commits / d_cycles
             self._tau_est = 0.5 * self._tau_est + 0.5 * max(obs, 0.1)
+        # refresh the host stats cache (the overlap ``stats`` view) from
+        # rows this poll already carried — fresh slots only, a lagged
+        # snapshot's stale rows belong to a harvested predecessor
+        fmask = np.asarray(fresh, bool)
+        for pk, sk in (("cycles", "cycles"), ("commits", "commits"),
+                       ("accepts", "accepts"), ("relaxed", "relaxed"),
+                       ("margin", "margin_ema")):
+            if pk in poll:
+                self._stats_host[sk][fmask] = np.asarray(poll[pk])[fmask]
         done = [s for s in range(self.cfg.slots)
                 if fresh[s] and self._finished_host[s]
                 and self.slot_req[s] is not None]
-        if not done:
-            # no finisher: the gather (and its D2H bytes) is skipped
-            self._retune(poll, fresh)
-            return
-        rows = fetch_rows()
-        self.gather_calls += 1
-        now = time.time()
-        for slot in done:
-            req = self.slot_req[slot]
-            base = int(self.slot_base_len[slot])
-            length = int(rows["lengths"][slot])
-            toks = rows["buf"][slot, base:length]
-            self._responses.append(Response(
-                uid=req.uid, tokens=np.asarray(toks),
-                n_cycles=int(rows["stats"]["cycles"][slot]),
-                n_committed=int(rows["stats"]["commits"][slot]),
-                latency_s=now - self.slot_t0[slot],
-                n_accepted=int(rows["stats"]["accepts"][slot])))
-            self.slot_req[slot] = None
-            if self.pool is not None and self.slot_blocks[slot]:
-                if self.prefix is not None:
-                    # publish the generated history's full blocks before
-                    # releasing: positions < length-1 hold exactly the
-                    # committed chain's KV (the pending token and any
-                    # rejected-draft stale rows lie beyond), so only those
-                    # full blocks are content-addressable
-                    committed = np.asarray(
-                        rows["buf"][slot, :max(length - 1, 0)], np.int32)
-                    self.prefix.publish(committed, self.slot_blocks[slot],
-                                        slot // self._slots_per_shard)
-                # block-list truncate at its terminal point: the finished
-                # slot drops its references — unpublished blocks return to
-                # the pool, published ones park in the reclaimable LRU
-                # (the table rows are unmapped by reset_slots at the next
-                # admission)
-                self.pool.free(self.slot_blocks[slot])
-                self.slot_blocks[slot] = []
+        if done:
+            with self._obs_span("gather", slots=len(done)):
+                rows = fetch_rows()
+            self.gather_calls += 1
+            # the gather ships every stat row (controller or not): fold
+            # them all into the host cache
+            for sk, vals in rows["stats"].items():
+                self._stats_host[sk][fmask] = np.asarray(vals)[fmask]
+            now = time.time()
+            for slot in done:
+                req = self.slot_req[slot]
+                base = int(self.slot_base_len[slot])
+                length = int(rows["lengths"][slot])
+                toks = rows["buf"][slot, base:length]
+                self._responses.append(Response(
+                    uid=req.uid, tokens=np.asarray(toks),
+                    n_cycles=int(rows["stats"]["cycles"][slot]),
+                    n_committed=int(rows["stats"]["commits"][slot]),
+                    latency_s=now - self.slot_t0[slot],
+                    n_accepted=int(rows["stats"]["accepts"][slot])))
+                if self.obs is not None:
+                    # device stats + block/theta context captured BEFORE
+                    # the slot is freed below
+                    self.obs.on_finish(
+                        req.uid, n_tokens=int(length - base),
+                        n_cycles=int(rows["stats"]["cycles"][slot]),
+                        n_accepted=int(rows["stats"]["accepts"][slot]),
+                        n_relaxed=int(rows["stats"]["relaxed"][slot]),
+                        margin_ema=float(rows["stats"]["margin_ema"][slot]),
+                        theta=float(self.slot_theta[slot]),
+                        blocks_held=len(self.slot_blocks[slot]))
+                self.slot_req[slot] = None
+                if self.pool is not None and self.slot_blocks[slot]:
+                    if self.prefix is not None:
+                        # publish the generated history's full blocks
+                        # before releasing: positions < length-1 hold
+                        # exactly the committed chain's KV (the pending
+                        # token and any rejected-draft stale rows lie
+                        # beyond), so only those full blocks are
+                        # content-addressable
+                        committed = np.asarray(
+                            rows["buf"][slot, :max(length - 1, 0)],
+                            np.int32)
+                        self.prefix.publish(committed,
+                                            self.slot_blocks[slot],
+                                            slot // self._slots_per_shard)
+                    # block-list truncate at its terminal point: the
+                    # finished slot drops its references — unpublished
+                    # blocks return to the pool, published ones park in
+                    # the reclaimable LRU (the table rows are unmapped by
+                    # reset_slots at the next admission)
+                    self.pool.free(self.slot_blocks[slot])
+                    self.slot_blocks[slot] = []
         self._retune(poll, fresh)
+        if self.obs is not None:
+            live = [s for s in range(self.cfg.slots)
+                    if self.slot_req[s] is not None
+                    and not self._finished_host[s]]
+            margin_mean = (float(np.mean([poll["margin"][s] for s in live]))
+                           if "margin" in poll and live else None)
+            self.obs.on_sync(queue_depth=len(self.queue),
+                             slots_active=len(live),
+                             inflight=len(self._pending),
+                             margin_mean=margin_mean)
 
     def _consume_ring(self, poll, fetch_ring, idx):
         """Finish the host half of every ring consumption this poll
@@ -1430,6 +1555,18 @@ class SpecServer:
                     n_committed=int(ring["h_stats"]["commits"][e]),
                     latency_s=now - self.slot_t0[slot],
                     n_accepted=int(ring["h_stats"]["accepts"][e])))
+                if self.obs is not None:
+                    # the harvest record the device wrote at refill time
+                    # carries the full stat row — same zero-extra-transfer
+                    # story as the gathered finish path
+                    self.obs.on_finish(
+                        old.uid, n_tokens=int(max(h_len - base, 0)),
+                        n_cycles=int(ring["h_stats"]["cycles"][e]),
+                        n_accepted=int(ring["h_stats"]["accepts"][e]),
+                        n_relaxed=int(ring["h_stats"]["relaxed"][e]),
+                        margin_ema=float(ring["h_stats"]["margin_ema"][e]),
+                        theta=float(self.slot_theta[slot]),
+                        blocks_held=len(self.slot_blocks[slot]))
                 if self.pool is not None and self.slot_blocks[slot]:
                     if self.prefix is not None:
                         committed = np.asarray(
@@ -1462,6 +1599,11 @@ class SpecServer:
                                     ent.shard)
             self._ring_head_host += 1
             self.ring_refills += 1
+            if self.obs is not None:
+                self.obs.on_admitted(
+                    ent.req.uid, slot, theta=float(ent.theta),
+                    prefix_hit_tokens=int(ent.match_start),
+                    blocks_held=len(ent.blocks), via_ring=True)
 
     def _retune(self, poll, fresh=None):
         """Controller pass at the sync boundary: retune every live slot's
@@ -1475,33 +1617,40 @@ class SpecServer:
         stats rows belong to a predecessor)."""
         if self.controller is None:
             return
-        live = [s for s in range(self.cfg.slots)
-                if self.slot_req[s] is not None
-                and not self._finished_host[s]
-                and (fresh is None or fresh[s])]
-        if self.session_short is not None:
-            # width bucket for the NEXT group: commits/cycle ~ accepts/cycle
-            # + 1 correction token, so tau-1 estimates draft acceptance
-            self._k_bucket = self.controller.choose_k(
-                max(self._tau_est - 1.0, 0.0), self._k_full, self._k_short)
-        if not live:
-            return
-        idx = np.asarray(live, np.int64)
-        # stats rows were reset at each slot's admission, so the raw
-        # counters ARE per-request totals
-        accepts = np.asarray(poll["accepts"], np.float64)[idx]
-        relaxed = np.asarray(poll["relaxed"], np.float64)[idx]
-        relax_share = relaxed / np.maximum(accepts, 1.0)
-        margin = np.asarray(poll["margin"], np.float64)[idx]
-        pressure = len(self.queue) / max(self.cfg.slots, 1)
-        new = self.controller.update(self.slot_theta[idx], relax_share,
-                                     margin, pressure)
-        if float(np.max(np.abs(new - self.slot_theta[idx]))) <= 1e-6:
-            return                      # converged: skip the dispatch
-        self.slot_theta[idx] = new
-        self.theta_retunes += 1
-        self.state = self._set_theta(
-            self.state, self.slot_theta.astype(np.float32))
+        with self._obs_span("retune"):
+            live = [s for s in range(self.cfg.slots)
+                    if self.slot_req[s] is not None
+                    and not self._finished_host[s]
+                    and (fresh is None or fresh[s])]
+            if self.session_short is not None:
+                # width bucket for the NEXT group: commits/cycle ~
+                # accepts/cycle + 1 correction token, so tau-1 estimates
+                # draft acceptance
+                self._k_bucket = self.controller.choose_k(
+                    max(self._tau_est - 1.0, 0.0), self._k_full,
+                    self._k_short)
+            if not live:
+                return
+            idx = np.asarray(live, np.int64)
+            # stats rows were reset at each slot's admission, so the raw
+            # counters ARE per-request totals
+            accepts = np.asarray(poll["accepts"], np.float64)[idx]
+            relaxed = np.asarray(poll["relaxed"], np.float64)[idx]
+            relax_share = relaxed / np.maximum(accepts, 1.0)
+            margin = np.asarray(poll["margin"], np.float64)[idx]
+            pressure = len(self.queue) / max(self.cfg.slots, 1)
+            new = self.controller.update(self.slot_theta[idx], relax_share,
+                                         margin, pressure)
+            if float(np.max(np.abs(new - self.slot_theta[idx]))) <= 1e-6:
+                return                  # converged: skip the dispatch
+            self.slot_theta[idx] = new
+            self.theta_retunes += 1
+            self.state = self._set_theta(
+                self.state, self.slot_theta.astype(np.float32))
+            if self.obs is not None:
+                self.obs.on_retune(
+                    [(self.slot_req[s].uid, float(self.slot_theta[s]))
+                     for s in live])
 
     def run(self, *, max_ticks: int = 10_000) -> List[Response]:
         for _ in range(max_ticks):

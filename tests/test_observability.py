@@ -1,0 +1,364 @@
+"""Observability tests: lifecycle tracing, metrics registry, tick spans.
+
+The telemetry stack (``src/repro/obs/``) must be a pure *observer*: it
+reads only host-resident values the harvest poll already transferred, so
+turning it on may not add a single device→host transfer, change a single
+token, or perturb host-sync counts — asserted below for both the serial
+and the pipelined (overlap + admission-ring) tick.  The remaining tests
+pin the artifacts: Prometheus text that parses, a Perfetto-loadable
+Chrome trace covering the tick phases, a lifecycle JSONL with exactly one
+finish per uid, and per-request timestamps that are monotone and
+consistent with the harvested token counts.
+"""
+import dataclasses
+import importlib.util
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.core import EngineConfig, IndependentDrafter
+from repro.core.metrics import itl, ttft
+from repro.models import build_model
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       RequestTracer, ServerTelemetry, SpanRecorder,
+                       chrome_trace_json, prometheus_text)
+from repro.obs.export import read_events_jsonl, write_events_jsonl
+from repro.serving import Request, SamplingParams, ServerConfig, SpecServer
+
+# the artifact checker doubles as the schema oracle for these tests
+_spec = importlib.util.spec_from_file_location(
+    "check_trace", os.path.join(os.path.dirname(__file__), os.pardir,
+                                "tools", "check_trace.py"))
+check_trace = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_trace)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke("granite-8b"), dtype="float32")
+    tgt = build_model(cfg)
+    d_cfg = ModelConfig(name="d", family="dense", n_layers=1, d_model=64,
+                        n_heads=2, n_kv_heads=2, d_ff=128,
+                        vocab_size=cfg.vocab_size, dtype="float32")
+    drf = build_model(d_cfg)
+    return (cfg, tgt, drf, tgt.init(jax.random.PRNGKey(1)),
+            drf.init(jax.random.PRNGKey(2)))
+
+
+def _requests(cfg, n, seed=17, budgets=(3, 7, 13), plen_hi=13):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, plen_hi))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(3, cfg.vocab_size,
+                                size=plen).astype(np.int32),
+            params=SamplingParams(max_tokens=int(budgets[i % len(budgets)]))))
+    return reqs
+
+
+def _server(setup, *, telemetry=None, k=3, slots=2, **scfg):
+    cfg, tgt, drf, tp, dp = setup
+    return SpecServer(
+        tgt, IndependentDrafter(drf, k=k, temperature=0.0), tp, dp,
+        EngineConfig(k=k, rule="mars", mode="greedy", temperature=0.0),
+        ServerConfig(slots=slots, max_len=96, max_prompt_len=12,
+                     steps_per_sync=3, **scfg),
+        telemetry=telemetry)
+
+
+def _run(server, reqs):
+    for r in reqs:
+        server.submit(dataclasses.replace(r))
+    out = {r.uid: r for r in server.run()}
+    assert sorted(out) == sorted(r.uid for r in reqs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry / export units
+# ---------------------------------------------------------------------------
+
+def test_registry_instruments():
+    reg = MetricsRegistry(namespace="t")
+    c = reg.counter("reqs_total", "requests")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(4)
+    g.inc(-1)
+    assert g.value == 3.0
+    h = reg.histogram("lat_seconds", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    # cumulative le-semantics: <=0.1, <=1.0, +Inf
+    assert list(h.bucket_counts) == [1, 3, 4]
+    assert h.count == 4 and h.sum == pytest.approx(6.05)
+    assert h.percentile(50) == pytest.approx(0.5)
+    # get-or-create: same name -> same object, kind mismatch -> error
+    assert reg.counter("reqs_total") is c
+    with pytest.raises(TypeError):
+        reg.gauge("reqs_total")
+    assert [m.name for m in reg.metrics()] == \
+        ["t_reqs_total", "t_depth", "t_lat_seconds"]
+
+
+def test_histogram_window_ring():
+    h = Histogram("h", window=4)
+    for v in range(10):
+        h.observe(float(v))
+    assert h.count == 10
+    assert sorted(h.window_values()) == [6.0, 7.0, 8.0, 9.0]
+
+
+def test_prometheus_text_parses():
+    tel = ServerTelemetry(annotate=False)
+    tel.on_submit(0, prompt_len=8, max_tokens=4)
+    tel.on_admitted(0, 1, theta=0.9)
+    tel.on_first_commit(0, 2)
+    tel.on_finish(0, n_tokens=4, n_cycles=2, n_accepted=3, n_relaxed=1,
+                  margin_ema=0.7, theta=0.9, blocks_held=2)
+    tel.on_sync(queue_depth=0, slots_active=1, inflight=0, margin_mean=0.7)
+    text = prometheus_text(tel.registry)
+    assert check_trace.check_prometheus(text) == []
+    assert "mars_requests_finished_total 1" in text
+    assert 'mars_ttft_seconds_bucket{le="+Inf"} 1' in text
+
+
+def test_prometheus_checker_catches_rot():
+    # the oracle itself must reject broken exposition, or the round-trip
+    # test above proves nothing
+    assert check_trace.check_prometheus("mars_oops_total 1\n")
+    assert check_trace.check_prometheus(
+        "# TYPE mars_h histogram\n"
+        'mars_h_bucket{le="1.0"} 5\nmars_h_bucket{le="+Inf"} 3\n'
+        "mars_h_sum 1.0\nmars_h_count 3\n")
+
+
+def test_chrome_trace_schema(tmp_path):
+    rec = SpanRecorder(annotate=False)
+    with rec.span("harvest", flush=False):
+        with rec.span("gather", slots=2):
+            pass
+    rec.counter("inflight_snapshots", 2)
+    doc = json.loads(chrome_trace_json(rec))
+    assert check_trace.check_chrome_trace(
+        doc, require_spans=("harvest", "gather")) == []
+    assert check_trace.check_chrome_trace(doc, require_spans=("retune",))
+    # the file is plain JSON Perfetto/chrome://tracing can open
+    p = tmp_path / "trace.json"
+    p.write_text(chrome_trace_json(rec))
+    assert json.loads(p.read_text())["traceEvents"]
+
+
+def test_events_jsonl_roundtrip(tmp_path):
+    tr = RequestTracer()
+    tr.on_submit(7, prompt_len=5, max_tokens=3)
+    tr.on_admitted(7, 0, theta=0.85)
+    tr.on_finish(7, n_tokens=3, n_cycles=1, n_accepted=2, n_relaxed=0,
+                 margin_ema=0.0, theta=0.85, blocks_held=0)
+    path = str(tmp_path / "events.jsonl")
+    write_events_jsonl(tr.events, path)
+    with open(path) as f:
+        lines = f.readlines()
+    assert check_trace.check_events_jsonl(lines) == []
+    back = read_events_jsonl(path)
+    assert [e["event"] for e in back] == ["submit", "admitted", "finish"]
+    assert back[-1]["n_tokens"] == 3 and back[-1]["ttft_s"] is not None
+
+
+def test_ttft_itl_helpers():
+    assert ttft(1.0, 3.5) == pytest.approx(2.5)
+    assert ttft(None, 3.5) is None and ttft(1.0, None) is None
+    assert ttft(3.0, 2.0) == 0.0          # clamped, never negative
+    assert itl(2.0, 6.0, 8) == pytest.approx(0.5)
+    assert itl(2.0, 6.0, 0) is None       # no tokens after first commit
+    assert itl(None, 6.0, 4) is None
+
+
+# ---------------------------------------------------------------------------
+# server integration: the observer may not perturb the system
+# ---------------------------------------------------------------------------
+
+def test_token_parity_and_lifecycle(setup):
+    """Fixed-theta serial serve with telemetry on vs off: identical tokens,
+    identical host syncs; every trace monotone submit <= admitted <=
+    first_commit <= finish with token counts matching the responses."""
+    reqs = _requests(setup[0], 8)
+    off = _server(setup)
+    base = _run(off, reqs)
+    tel = ServerTelemetry(annotate=False)
+    on = _server(setup, telemetry=tel)
+    out = _run(on, reqs)
+    for uid in base:
+        np.testing.assert_array_equal(out[uid].tokens, base[uid].tokens,
+                                      err_msg=f"req {uid}")
+    assert on.host_syncs == off.host_syncs
+
+    traces = {t.uid: t for t in tel.finished_traces()}
+    assert sorted(traces) == sorted(r.uid for r in reqs)
+    for uid, t in traces.items():
+        assert t.submit_s <= t.admitted_s <= t.first_commit_s <= t.finish_s
+        assert t.n_tokens == len(out[uid].tokens)
+        assert t.ttft_s is not None and t.ttft_s >= 0
+        assert t.latency_s == pytest.approx(t.finish_s - t.submit_s)
+        if t.itl_s is not None:           # needs >= 2 harvest observations
+            span = t.finish_s - t.first_commit_s
+            after = t.n_tokens - t.tokens_at_first_commit
+            assert t.itl_s == pytest.approx(span / after)
+        assert 0 < t.n_accepted + t.n_cycles   # device stats rode the poll
+    assert int(tel.tokens.value) == sum(len(r.tokens) for r in out.values())
+    # multi-sync budgets (13 > steps_per_sync * (k+1) is false here, but
+    # budget 13 spans several cycles) must yield at least one real ITL
+    assert any(t.itl_s is not None for t in traces.values())
+
+
+@pytest.mark.parametrize("variant", [
+    pytest.param(dict(), id="serial"),
+    pytest.param(dict(overlap=True, ring_depth=3, cache="paged"),
+                 id="overlap-ring"),
+])
+def test_zero_extra_transfers(setup, variant):
+    """Telemetry must ride the polls the server already pays for: the
+    device_get call count AND host-sync count are identical on vs off."""
+    reqs = _requests(setup[0], 8, seed=23)
+    real = jax.device_get
+    counts = {}
+    try:
+        for label, tel in (("off", None),
+                           ("on", ServerTelemetry(annotate=False))):
+            n = 0
+
+            def counting(*a, **kw):
+                nonlocal n
+                n += 1
+                return real(*a, **kw)
+
+            srv = _server(setup, telemetry=tel, **variant)
+            jax.device_get = counting
+            _run(srv, reqs)
+            jax.device_get = real
+            counts[label] = (n, srv.host_syncs)
+    finally:
+        jax.device_get = real
+    assert counts["on"] == counts["off"], counts
+
+
+def test_overlap_stats_peek_stays_device_free(setup):
+    """Satellite: ``SpecServer.stats`` under overlap reads the newest
+    already-harvested snapshot — no device poll, no drained pipeline."""
+    reqs = _requests(setup[0], 8, seed=31)
+    srv = _server(setup, overlap=True, ring_depth=3, cache="paged")
+    for r in reqs:
+        srv.submit(dataclasses.replace(r))
+    real = jax.device_get
+
+    def forbidden(*a, **kw):
+        raise AssertionError("stats peek touched the device")
+
+    saw_pending = False
+    for _ in range(10_000):
+        if (not srv.queue and all(r is None for r in srv.slot_req)
+                and not srv._pending and not srv._ring_staged):
+            break
+        srv._admit()
+        srv.step()
+        pending_before = len(srv._pending)
+        syncs_before = srv.host_syncs
+        jax.device_get = forbidden
+        try:
+            with jax.transfer_guard_device_to_host("disallow"):
+                stats = srv.stats
+        finally:
+            jax.device_get = real
+        assert srv.host_syncs == syncs_before
+        assert len(srv._pending) == pending_before   # pipeline not drained
+        saw_pending = saw_pending or pending_before > 0
+        for key in ("cycles", "commits", "slot_idle_ticks"):
+            assert key in stats
+        srv.sync()
+    if srv._pending:
+        srv.sync(flush=True)
+    assert saw_pending                               # peek ran mid-pipeline
+    assert len(srv.run()) == len(reqs)
+
+
+def test_spans_cover_tick_phases(setup):
+    tel = ServerTelemetry(annotate=False)
+    _run(_server(setup, telemetry=tel), _requests(setup[0], 6))
+    names = tel.spans.span_names()
+    for phase in ("admit", "dispatch", "harvest", "gather"):
+        assert phase in names, names
+    doc = json.loads(chrome_trace_json(tel.spans))
+    assert check_trace.check_chrome_trace(
+        doc, require_spans=("admit", "dispatch", "harvest")) == []
+
+
+def test_adaptive_retunes_and_theta_path(setup):
+    """Under the adaptive controller the retune span appears, the retune
+    counter moves, and traces record the theta trajectory starting at the
+    admission theta."""
+    tel = ServerTelemetry(annotate=False)
+    srv = _server(setup, telemetry=tel, theta_mode="adaptive",
+                  overlap=True, ring_depth=3, cache="paged")
+    _run(srv, _requests(setup[0], 10, seed=41, budgets=(9, 13, 17)))
+    assert "retune" in tel.spans.span_names()
+    assert tel.retunes.value > 0
+    traces = tel.finished_traces()
+    assert all(t.theta_path for t in traces)
+    assert any(len(t.theta_path) > 1 for t in traces)   # a retune landed
+    for t in traces:
+        for ts, th in t.theta_path:
+            assert t.admitted_s <= ts <= t.finish_s + 1e-9
+            assert 0.0 < th <= 1.0
+    # ring-staged lifecycles: staged strictly before seated
+    staged = [t for t in traces if t.staged_via_ring and t.staged_s]
+    assert staged
+    assert all(t.staged_s <= t.admitted_s for t in staged)
+    assert tel.ring_staged.value == len(staged)
+
+
+def test_cancel_queued_request(setup):
+    tel = ServerTelemetry(annotate=False)
+    srv = _server(setup, telemetry=tel, slots=1)
+    reqs = _requests(setup[0], 3, seed=47)
+    for r in reqs:
+        srv.submit(dataclasses.replace(r))
+    assert srv.cancel(1)                   # still queued (1 slot, 3 reqs)
+    assert not srv.cancel(99)              # unknown uid
+    out = {r.uid: r for r in srv.run()}
+    assert sorted(out) == [0, 2]
+    assert tel.canceled.value == 1
+    tr = tel.tracer.traces[1]
+    assert tr.cancel_s is not None and tr.finish_s is None
+    assert [e for e in tel.tracer.events
+            if e["event"] == "cancel"][0]["uid"] == 1
+
+
+def test_server_artifacts_validate(setup, tmp_path):
+    """End-to-end: run a server, write all three artifacts, and hold them
+    against the same schema checks the CI smoke leg runs."""
+    tel = ServerTelemetry(annotate=False)
+    out = _run(_server(setup, telemetry=tel), _requests(setup[0], 6, seed=53))
+    m, t, e = (str(tmp_path / n) for n in ("m.prom", "t.json", "e.jsonl"))
+    tel.write(m, t, e)
+    with open(m) as f:
+        assert check_trace.check_prometheus(f.read()) == []
+    with open(t) as f:
+        assert check_trace.check_chrome_trace(
+            json.load(f), require_spans=("admit", "dispatch", "harvest")) == []
+    with open(e) as f:
+        assert check_trace.check_events_jsonl(f) == []
+    finishes = [ev for ev in read_events_jsonl(e) if ev["event"] == "finish"]
+    assert sorted(ev["uid"] for ev in finishes) == sorted(out)
+    s = tel.summary()
+    assert s["finished"] == len(out) and s["span_events"] > 0

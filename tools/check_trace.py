@@ -1,0 +1,222 @@
+#!/usr/bin/env python
+"""Telemetry artifact checker: the exported observability files must parse.
+
+Validates the three artifacts ``repro.obs.ServerTelemetry.write`` emits
+(and the serving launchers / benchmark expose via ``--metrics-out`` /
+``--trace-out`` / ``--events-out``):
+
+* ``--metrics``: Prometheus text exposition 0.0.4 — every sample line must
+  belong to a declared ``# TYPE``, histogram series must carry cumulative
+  ``_bucket{le=...}`` rows ending in ``+Inf`` with ``_sum``/``_count``,
+  and counter/gauge values must be finite numbers.
+* ``--trace``: Chrome trace-event JSON (the format Perfetto loads) — a
+  ``traceEvents`` list whose ``ph: "X"`` spans have numeric ``ts``/``dur``
+  and whose required span names (``--require-spans``) all appear.
+* ``--events``: per-request lifecycle JSONL — every line valid JSON with
+  ``event``/``uid``/``t_s``, exactly one ``finish`` per uid, and finish
+  events carrying ``ttft_s``/``latency_s``.
+
+Exit code 0 when every provided artifact validates, 1 otherwise (CI
+telemetry smoke leg).  Functions are importable for tests.
+
+    python tools/check_trace.py --metrics m.prom --trace t.json \
+        --events e.jsonl --require-spans admit,dispatch,harvest,retune
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[A-Za-z_:][A-Za-z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$")
+
+
+def _parse_value(tok: str) -> float:
+    if tok == "+Inf":
+        return math.inf
+    if tok == "-Inf":
+        return -math.inf
+    return float(tok)
+
+
+def check_prometheus(text: str) -> list:
+    """Return a list of violation strings (empty = valid)."""
+    errs = []
+    types = {}          # metric name -> declared type
+    seen = {}           # metric name -> sample count
+    hist_buckets = {}   # histogram name -> list of (le, cumulative count)
+    hist_tail = {}      # histogram name -> {"sum": v, "count": v}
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in ("counter", "gauge",
+                                                   "histogram"):
+                errs.append(f"line {ln}: malformed TYPE line {line!r}")
+            else:
+                types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            errs.append(f"line {ln}: unknown comment {line!r}")
+            continue
+        m = SAMPLE_RE.match(line)
+        if m is None:
+            errs.append(f"line {ln}: unparsable sample {line!r}")
+            continue
+        name = m.group("name")
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        family = base if base in types else name
+        if family not in types:
+            errs.append(f"line {ln}: sample {name!r} has no TYPE declaration")
+            continue
+        try:
+            val = _parse_value(m.group("value"))
+        except ValueError:
+            errs.append(f"line {ln}: non-numeric value {m.group('value')!r}")
+            continue
+        seen[family] = seen.get(family, 0) + 1
+        if types[family] == "counter" and val < 0:
+            errs.append(f"line {ln}: counter {name} is negative ({val})")
+        if types[family] == "histogram":
+            if name.endswith("_bucket"):
+                labels = m.group("labels") or ""
+                le = re.search(r'le="([^"]+)"', labels)
+                if le is None:
+                    errs.append(f"line {ln}: bucket without le label")
+                else:
+                    hist_buckets.setdefault(family, []).append(
+                        (_parse_value(le.group(1)), val))
+            elif name.endswith(("_sum", "_count")):
+                hist_tail.setdefault(family, {})[name.rsplit("_", 1)[1]] = val
+    for fam, typ in types.items():
+        if typ != "histogram":
+            if not seen.get(fam):
+                errs.append(f"metric {fam}: TYPE declared but no samples")
+            continue
+        buckets = hist_buckets.get(fam, [])
+        if not buckets or buckets[-1][0] != math.inf:
+            errs.append(f"histogram {fam}: missing +Inf bucket")
+        counts = [c for _, c in buckets]
+        if counts != sorted(counts):
+            errs.append(f"histogram {fam}: bucket counts not cumulative")
+        tail = hist_tail.get(fam, {})
+        if "sum" not in tail or "count" not in tail:
+            errs.append(f"histogram {fam}: missing _sum/_count")
+        elif buckets and tail["count"] != buckets[-1][1]:
+            errs.append(f"histogram {fam}: _count {tail['count']} != +Inf "
+                        f"bucket {buckets[-1][1]}")
+    return errs
+
+
+def check_chrome_trace(doc: dict, require_spans=()) -> list:
+    """Validate the Chrome trace-event JSON ``ServerTelemetry`` writes."""
+    errs = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    span_names = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ph" not in ev:
+            errs.append(f"event {i}: not an object with 'ph'")
+            continue
+        ph = ev["ph"]
+        if ph == "X":
+            for field in ("name", "ts", "dur", "pid", "tid"):
+                if field not in ev:
+                    errs.append(f"event {i}: span missing {field!r}")
+            if not isinstance(ev.get("ts"), (int, float)) or \
+                    not isinstance(ev.get("dur"), (int, float)):
+                errs.append(f"event {i}: non-numeric ts/dur")
+            elif ev["dur"] < 0:
+                errs.append(f"event {i}: negative dur {ev['dur']}")
+            else:
+                span_names.add(ev.get("name"))
+        elif ph == "C":
+            if not isinstance(ev.get("args"), dict):
+                errs.append(f"event {i}: counter without args")
+        elif ph not in ("M", "i", "I"):
+            errs.append(f"event {i}: unexpected phase {ph!r}")
+    for name in require_spans:
+        if name not in span_names:
+            errs.append(f"required span {name!r} absent "
+                        f"(saw {sorted(span_names)})")
+    return errs
+
+
+def check_events_jsonl(lines) -> list:
+    """Validate the lifecycle JSONL: one finish per uid, honest fields."""
+    errs = []
+    finishes = {}
+    for ln, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        try:
+            ev = json.loads(line)
+        except ValueError:
+            errs.append(f"line {ln}: invalid JSON")
+            continue
+        for field in ("event", "uid", "t_s"):
+            if field not in ev:
+                errs.append(f"line {ln}: missing {field!r}")
+        if ev.get("event") == "finish":
+            uid = ev.get("uid")
+            finishes[uid] = finishes.get(uid, 0) + 1
+            for field in ("ttft_s", "latency_s", "n_tokens"):
+                if field not in ev:
+                    errs.append(f"line {ln}: finish missing {field!r}")
+    if not finishes:
+        errs.append("no finish events at all")
+    for uid, n in sorted(finishes.items()):
+        if n != 1:
+            errs.append(f"uid {uid}: {n} finish events (want exactly 1)")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics", default=None,
+                    help="Prometheus text file to validate")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event JSON file to validate")
+    ap.add_argument("--events", default=None,
+                    help="lifecycle JSONL file to validate")
+    ap.add_argument("--require-spans", default="",
+                    help="comma-separated span names the trace must contain "
+                         "(e.g. admit,dispatch,harvest,retune)")
+    args = ap.parse_args()
+    if not (args.metrics or args.trace or args.events):
+        ap.error("nothing to check: pass --metrics/--trace/--events")
+
+    failures = []
+    if args.metrics:
+        with open(args.metrics) as f:
+            errs = check_prometheus(f.read())
+        print(f"{args.metrics}: {'OK' if not errs else 'FAIL'}")
+        failures += [f"{args.metrics}: {e}" for e in errs]
+    if args.trace:
+        with open(args.trace) as f:
+            doc = json.load(f)
+        spans = [s for s in args.require_spans.split(",") if s]
+        errs = check_chrome_trace(doc, require_spans=spans)
+        n = len(doc.get("traceEvents", []))
+        print(f"{args.trace}: {'OK' if not errs else 'FAIL'} ({n} events)")
+        failures += [f"{args.trace}: {e}" for e in errs]
+    if args.events:
+        with open(args.events) as f:
+            errs = check_events_jsonl(f)
+        print(f"{args.events}: {'OK' if not errs else 'FAIL'}")
+        failures += [f"{args.events}: {e}" for e in errs]
+    for f in failures:
+        print(f"FAIL  {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
